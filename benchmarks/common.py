@@ -1,0 +1,40 @@
+"""Shared helpers for the per-figure/table benchmarks.
+
+Each benchmark module exposes ``run() -> list[Row]``; benchmarks/run.py
+prints the aggregate ``name,us_per_call,derived`` CSV (us_per_call = wall
+time per sampler step / estimator evaluation on this CPU container;
+``derived`` = the figure's headline metric).
+
+Scale with REPRO_BENCH_SCALE (default 1; paper-scale ~10).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1"))
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: float
+    note: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived:.6g}"
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    def us_per(self, calls: int) -> float:
+        return 1e6 * self.dt / max(calls, 1)

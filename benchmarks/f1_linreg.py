@@ -1,0 +1,73 @@
+"""Paper Appendix F.1: Bayesian linear regression on three datasets
+(synthetic stand-ins matched in (n, d) to concrete / noise / conductivity).
+
+Analytic surrogates: q_s(theta) = N(theta | mu_s, Sigma_s) with
+Sigma_s^-1 = X_s^T X_s / sigma^2 and mu_s the shard least-squares solution
+(the exact local likelihood). Claims: FSGLD reaches lower/faster test MSE
+than DSGLD and with lower variance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, SCALE, Timer
+from repro.configs.base import SamplerConfig
+from repro.core import FederatedSampler, make_bank
+from repro.data import linreg_datasets, split_shards
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    datasets = linreg_datasets(key)
+    S = 10
+    rows = []
+    for name, ds in datasets.items():
+        n = ds["x"].shape[0]
+        n_train = int(0.8 * n) // S * S
+        xtr, ytr = ds["x"][:n_train], ds["y"][:n_train]
+        xte, yte = ds["x"][n_train:], ds["y"][n_train:]
+        sig2 = float(ds["sigma"]) ** 2
+        shards = split_shards({"x": xtr, "y": ytr}, S)
+
+        def log_lik(theta, batch):
+            r = batch["y"] - batch["x"] @ theta
+            return -0.5 * jnp.sum(r * r) / sig2
+
+        # analytic diagonal surrogates (diagonal of the exact precision)
+        def fit_shard(xs, ys):
+            prec_full = xs.T @ xs / sig2
+            mu = jnp.linalg.solve(prec_full
+                                  + 1e-6 * jnp.eye(xs.shape[1]),
+                                  xs.T @ ys / sig2)
+            return mu, jnp.diag(prec_full)
+        mus, precs = jax.vmap(fit_shard)(shards["x"], shards["y"])
+        bank = make_bank(mus, precs, "diag")
+
+        d = xtr.shape[1]
+        total_steps = int(4000 * max(SCALE, 1))
+        for method in ("dsgld", "fsgld"):
+            cfg = SamplerConfig(method=method, step_size=1e-6, num_shards=S,
+                                local_updates=40, prior_precision=1.0)
+            samp = FederatedSampler(log_lik, cfg, shards, minibatch=10,
+                                    bank=bank)
+            mses = []
+            with Timer() as t:
+                for rep in range(3):
+                    tr = samp.run(jax.random.PRNGKey(30 + rep),
+                                  jnp.zeros(d), total_steps // 40,
+                                  n_chains=1, collect_every=20)[0]
+                    tr = tr[tr.shape[0] // 2:]
+                    pred = jnp.mean(tr @ xte.T, axis=0)
+                    mses.append(float(jnp.mean((pred - yte) ** 2)))
+            us = t.us_per(3 * total_steps)
+            rows.append(Row(f"f1/{name}_{method}_test_mse", us,
+                            float(jnp.mean(jnp.array(mses)))))
+            rows.append(Row(f"f1/{name}_{method}_test_mse_std", us,
+                            float(jnp.std(jnp.array(mses)))))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

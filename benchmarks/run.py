@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+  fig1  — gradient-estimator variance (Bernoulli, non-IID shards)
+  fig2/3 — Gaussian mean: DSGLD mixture-collapse vs FSGLD, local-update sweep
+  fig4  — bound constants eps_s^2 vs gamma_s^2
+  fig5  — Bayesian metric learning (class-disjoint shards)
+  table1 — Bayesian MLP, IID vs non-IID label imbalance
+  f1    — Bayesian linear regression (App. F.1)
+  kernel — fused FSGLD Pallas update micro-bench
+
+REPRO_BENCH_SCALE=10 approaches paper-scale chain lengths.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernel, f1_linreg, fig1_variance,
+                            fig2_3_gaussian, fig4_epsilon,
+                            fig5_metric_learning, remark1_alpha,
+                            table1_bnn)
+    modules = [
+        ("fig1", fig1_variance), ("fig2_3", fig2_3_gaussian),
+        ("fig4", fig4_epsilon), ("fig5", fig5_metric_learning),
+        ("table1", table1_bnn), ("f1", f1_linreg),
+        ("remark1", remark1_alpha), ("kernel", bench_kernel),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row in mod.run():
+                print(row.csv(), flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

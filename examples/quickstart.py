@@ -1,0 +1,51 @@
+"""Quickstart: conducive gradients in ~50 lines.
+
+Reproduces the paper's core phenomenon on the Sec 5.1 model: with delayed
+communication (100 local updates) DSGLD drifts toward a mixture of local
+posteriors; FSGLD stays on the true posterior.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler,
+                        analytic_gaussian_likelihood_surrogate, make_bank,
+                        summarize)
+
+key = jax.random.PRNGKey(0)
+S, N_s, D = 10, 200, 2
+
+# federated non-IID data: each client's data centred at its own mu_s
+client_means = jax.random.uniform(key, (S, D), minval=-6, maxval=6)
+data = client_means[:, None, :] + jax.random.normal(
+    jax.random.fold_in(key, 1), (S, N_s, D))
+
+# model: p(mu | x) ∝ N(mu|0, I) * prod_i N(x_i | mu, I)
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+N = S * N_s
+true_posterior_mean = data.reshape(-1, D).sum(0) / (1 + N)
+
+# each client fits its likelihood surrogate ONCE and communicates it once
+mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(data)
+bank = make_bank(mu_s, prec_s, "diag")
+
+for method in ("dsgld", "fsgld"):
+    cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=S,
+                        local_updates=100, prior_precision=1.0)
+    sampler = FederatedSampler(log_lik, cfg, {"x": data}, minibatch=10,
+                               bank=bank)
+    chains = sampler.run(jax.random.PRNGKey(2), jnp.zeros(D),
+                         num_rounds=300, n_chains=4, collect_every=10)
+    chains = chains[:, chains.shape[1] // 2:]
+    est = chains.mean(axis=(0, 1))
+    mse = float(jnp.sum((est - true_posterior_mean) ** 2))
+    diag = summarize(chains)
+    print(f"{method:5s} (100 local updates): posterior-mean MSE = {mse:.5f}"
+          f"  max R-hat = {diag['max_rhat']:.3f}"
+          f"  min ESS = {diag['min_ess']:.0f}")
+print("FSGLD should be ~100x closer with R-hat ~1 — conducive gradients "
+      "at work.")

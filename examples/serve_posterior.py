@@ -1,0 +1,24 @@
+"""Serve a posterior sample: batched greedy decode against the KV cache /
+recurrent state (the paper's models are samplers; serving = running one
+draw from the weight posterior).
+
+    PYTHONPATH=src python examples/serve_posterior.py --arch rwkv6-7b
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+    return serve_mod.main(["--arch", args.arch, "--smoke",
+                           "--batch", str(args.batch),
+                           "--prompt-len", "8", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+from repro.checkpoint.np_checkpoint import restore, save  # noqa: F401

@@ -1,0 +1,46 @@
+"""Minimal sharded-pytree checkpointing (npz + key-path manifest).
+
+Posterior SAMPLING means checkpoints carry (params == current chain state,
+sampler step, PRNG key) — resuming a chain mid-trajectory is exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(path: str, tree: PyTree, *, step: int = 0, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {f"a{i}": np.asarray(jax.device_get(l))
+              for i, l in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {"names": names, "step": step, "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, like: PyTree):
+    """Restore into the structure of ``like`` (names must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names, leaves, treedef = _flatten_with_names(like)
+    assert names == manifest["names"], "checkpoint/skeleton mismatch"
+    new = [data[f"a{i}"] for i in range(len(leaves))]
+    tree = jax.tree_util.tree_unflatten(treedef, new)
+    return tree, manifest["step"], manifest["extra"]

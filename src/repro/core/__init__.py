@@ -1,0 +1,31 @@
+"""The paper's primary contribution: conducive gradients + FSGLD."""
+from repro.core.conducive import (  # noqa: F401
+    conducive_gradient,
+    conducive_gradient_from_bank,
+)
+from repro.core.federated import (  # noqa: F401
+    FederatedSampler,
+    fit_bank_fisher,
+    fit_bank_linear,
+    refresh_bank,
+    fit_bank_from_samples,
+    sample_local_likelihood,
+)
+from repro.core.diagnostics import ess, rhat, summarize  # noqa: F401
+from repro.core.sghmc import FederatedSGHMC, make_sghmc_step  # noqa: F401
+from repro.core.sampler import (  # noqa: F401
+    ShardScheme,
+    langevin_update,
+    make_drift_fn,
+    make_step_fn,
+    prior_grad,
+    tree_randn_like,
+)
+from repro.core.surrogate import (  # noqa: F401
+    Gaussian,
+    SurrogateBank,
+    analytic_gaussian_likelihood_surrogate,
+    fit_gaussian,
+    fit_scalar_tree,
+    make_bank,
+)

@@ -1,0 +1,32 @@
+"""Conducive gradients (paper Sec 3, Eq. 5-7) — the core contribution.
+
+    g_s(theta) = grad log q(theta) - (1/f_s) grad log q_s(theta)
+
+Zero-mean under shard selection s ~ Categorical(f) (Lemma 1):
+    E_s[g_s] = grad log q - sum_s f_s (1/f_s) grad log q_s = 0.
+
+Remark 1's alpha knob scales the exploration term. alpha=0 recovers DSGLD.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core.surrogate import Gaussian, SurrogateBank
+
+PyTree = Any
+
+
+def conducive_gradient(theta: PyTree, q_global: Gaussian, q_s: Gaussian,
+                       f_s, alpha: float = 1.0) -> PyTree:
+    """g_s(theta), computed from the two resident surrogates only."""
+    g_glob = q_global.grad_log(theta)
+    g_loc = q_s.grad_log(theta)
+    return jax.tree.map(
+        lambda a, b: alpha * (a - b / f_s), g_glob, g_loc)
+
+
+def conducive_gradient_from_bank(theta: PyTree, bank: SurrogateBank, s,
+                                 f_s, alpha: float = 1.0) -> PyTree:
+    return conducive_gradient(theta, bank.global_, bank.shard(s), f_s, alpha)

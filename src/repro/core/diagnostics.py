@@ -1,0 +1,63 @@
+"""MCMC convergence diagnostics: split-R-hat and effective sample size.
+
+Standard substrate for a sampling framework — used by the examples to
+report chain quality and by tests to assert mixing. Conventions follow
+Gelman et al. (BDA3) / Vehtari et al. (2021): chains (C, N, ...) with
+C >= 1; statistics are computed per scalar dimension and reduced with max
+(R-hat) / min (ESS) for the headline number.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _split_chains(x: jax.Array) -> jax.Array:
+    """(C, N, ...) -> (2C, N//2, ...) split-half chains."""
+    C, N = x.shape[:2]
+    n = N // 2
+    return jnp.concatenate([x[:, :n], x[:, n:2 * n]], axis=0)
+
+
+def rhat(chains: jax.Array) -> jax.Array:
+    """Split-R-hat per dimension. chains: (C, N, ...) -> (...)."""
+    x = _split_chains(chains.astype(jnp.float64)
+                      if jax.config.read("jax_enable_x64")
+                      else chains.astype(jnp.float32))
+    C, N = x.shape[:2]
+    mean_c = x.mean(axis=1)                      # (C, ...)
+    var_c = x.var(axis=1, ddof=1)                # (C, ...)
+    W = var_c.mean(axis=0)
+    B = N * mean_c.var(axis=0, ddof=1)
+    var_hat = (N - 1) / N * W + B / N
+    return jnp.sqrt(var_hat / jnp.maximum(W, 1e-30))
+
+
+def ess(chains: jax.Array, max_lag: int = 200) -> jax.Array:
+    """Bulk effective sample size per dimension via the initial-positive
+    autocorrelation-sum estimator. chains: (C, N, ...) -> (...)."""
+    x = chains.astype(jnp.float32)
+    C, N = x.shape[:2]
+    xc = x - x.mean(axis=1, keepdims=True)
+    var = x.var(axis=1).mean(axis=0)             # (...)
+    max_lag = min(max_lag, N - 1)
+
+    # FFT autocovariance (dynamic-slice-free, vectorised over dims)
+    nfft = 2 * N
+    f = jnp.fft.rfft(xc, n=nfft, axis=1)
+    acov = jnp.fft.irfft(f * jnp.conj(f), n=nfft, axis=1)[:, :N]
+    acov = acov / N                              # (C, N, ...)
+    rhos = acov[:, 1:max_lag + 1].mean(axis=0) \
+        / jnp.maximum(var, 1e-30)                # (max_lag, ...)
+    # truncate at first negative autocorrelation (Geyer initial positive)
+    positive = jnp.cumprod(rhos > 0, axis=0).astype(rhos.dtype)
+    tau = 1.0 + 2.0 * jnp.sum(rhos * positive, axis=0)
+    return C * N / jnp.maximum(tau, 1.0)
+
+
+def summarize(chains: jax.Array) -> dict:
+    """Headline diagnostics for a (C, N, D) trace."""
+    r = rhat(chains)
+    e = ess(chains)
+    return {"max_rhat": float(jnp.max(r)), "min_ess": float(jnp.min(e)),
+            "mean_ess": float(jnp.mean(e))}

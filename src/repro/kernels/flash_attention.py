@@ -1,0 +1,119 @@
+"""Causal flash-attention Pallas TPU kernel.
+
+This is the TPU-target replacement for the pure-JAX chunked attention in
+models/layers.py: the roofline (EXPERIMENTS.md §Perf) shows the remaining
+train/prefill HBM term is score/probability traffic that XLA materialises
+between the QK^T and PV matmuls — a Pallas kernel keeps the running
+(m, l, acc) statistics in VMEM across KV blocks so scores never touch HBM.
+
+Layout: heads are pre-expanded to the query-head count (GQA handled by the
+caller, as in layers.chunked_attention) and folded into the grid:
+
+    grid = (B*H, Sq / BLOCK_Q)
+    q tile    : (BLOCK_Q, hd)                VMEM
+    k, v      : (Sk, hd) for this (b,h)      VMEM (fits <= 8k seq; longer
+                sequences tile KV as a third grid dim — documented ext.)
+    out tile  : (BLOCK_Q, hd)
+
+Masking supports causal and sliding-window; positions are implicit
+(q row = absolute position), matching training/prefill use.
+
+Validated in interpret mode against kernels/ref.py:naive_attention over
+shape/dtype sweeps (tests/test_flash_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                  block_k: int, seq_k: int, causal: bool, window):
+    iq = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                    # (bq, hd)
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, 1), 0)
+
+    nb = seq_k // block_k
+
+    def body(ik, carry):
+        m, l, acc = carry
+        k_blk = k_ref[0, pl.ds(ik * block_k, block_k), :].astype(
+            jnp.float32)
+        v_blk = v_ref[0, pl.ds(ik * block_k, block_k), :].astype(
+            jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        valid = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            valid &= k_pos <= q_pos
+        if window is not None:
+            valid &= k_pos > q_pos - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * corr + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    a0 = jnp.zeros((block_q, hd), jnp.float32)
+    if causal:
+        # skip KV blocks strictly above the diagonal for this q tile
+        nb_eff = jnp.minimum(nb, (iq + 1) * block_q // block_k
+                             + (1 if block_q % block_k else 0))
+        nb_eff = jnp.maximum(nb_eff, 1)
+    else:
+        nb_eff = nb
+    m, l, acc = jax.lax.fori_loop(0, nb_eff, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True
+                    ) -> jax.Array:
+    """q,k,v: (B, S, H, hd) with H already expanded (GQA: repeat KV heads
+    before the call). Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    assert k.shape == v.shape == (B, S, H, hd)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+
+    def fold(t):
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    grid = (B * H, S // bq)
+    kernel = functools.partial(_flash_kernel, block_q=bq, block_k=bk,
+                               seq_k=S, causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq: (bh, iq, 0)),
+            pl.BlockSpec((1, S, hd), lambda bh, iq: (bh, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda bh, iq: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

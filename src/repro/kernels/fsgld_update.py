@@ -1,0 +1,161 @@
+"""Fused FSGLD parameter-update Pallas TPU kernel.
+
+The per-step hot spot the paper's method adds to SGLD is elementwise but
+multi-operand:
+
+    theta' = theta + (h/2) * [ -prior_prec*theta + scale*g_hat
+                               + alpha*( lam_g*(mu_g - theta)
+                                         - (lam_s/f_s)*(mu_s - theta) ) ]
+             + sqrt(h*temperature) * xi,        xi ~ N(0, 1)
+
+Unfused this costs ~7 HBM round-trips over P parameters (theta, g, mu_g,
+mu_s, xi, out + the precision vectors); the kernel does ONE pass with
+(8,128)-aligned VMEM tiles and generates xi *in kernel* from a counter-based
+hash (murmur3 finalizer + Box-Muller), so the noise tensor never touches HBM.
+
+Using a counter-based hash (instead of pltpu.prng_random_bits) keeps the
+kernel bit-exactly reproducible by the pure-jnp oracle in ref.py — the
+correctness tests assert end-to-end equality including the noise.
+
+Three variants:
+  plain   — SGLD/DSGLD (alpha = 0): operands (theta, g)
+  scalar  — per-tensor scalar precisions: operands (theta, g, mu_g, mu_s)
+  diag    — diagonal precisions: operands (theta, g, mu_g, mu_s, lam_g, lam_s)
+
+All operate on parameters reshaped to (rows, 128); the jit'd wrapper in
+ops.py handles ravel / pad / unpad and per-tensor seeds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256  # 256 x 128 fp32 = 128 KiB per operand tile in VMEM
+
+# scalar-operand layout (single (1, 8) f32 row broadcast to every block)
+S_H, S_SCALE, S_FS, S_PRIOR, S_ALPHA, S_TEMP, S_LAMG, S_LAMS = range(8)
+
+
+def _mix(h: jax.Array) -> jax.Array:
+    """murmur3 fmix32 — full avalanche integer hash (uint32 -> uint32)."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _gaussian_noise(seed: jax.Array, idx: jax.Array) -> jax.Array:
+    """Standard normal per element via two hash streams + Box-Muller.
+    ``idx``: uint32 global element indices; ``seed``: uint32 scalar."""
+    h1 = _mix(idx * jnp.uint32(2) + jnp.uint32(1) + seed * jnp.uint32(0x9E3779B9))
+    h2 = _mix(idx * jnp.uint32(2) + seed * jnp.uint32(0x85EBCA77))
+    # 24-bit mantissas -> u in (0, 1); u1 strictly > 0 for the log
+    u1 = (h1 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24)) \
+        + (0.5 / (1 << 24))
+    u2 = (h2 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos((2.0 * jnp.pi) * u2)
+
+
+def _global_idx(block_rows: int) -> jax.Array:
+    """uint32 global element index for the current grid block."""
+    pid = pl.program_id(0)
+    base = (pid * block_rows * LANE).astype(jnp.uint32)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 1)
+    return base + row * jnp.uint32(LANE) + col
+
+
+def _update(theta, drift, sc, seed, block_rows):
+    h = sc[0, S_H]
+    sig = jnp.sqrt(h * sc[0, S_TEMP])
+    xi = _gaussian_noise(seed, _global_idx(block_rows))
+    return theta + (h * 0.5) * drift + sig * xi
+
+
+def _kernel_plain(seed_ref, sc_ref, th_ref, g_ref, out_ref, *, block_rows):
+    sc = sc_ref[...]
+    th = th_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g
+    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows)
+
+
+def _kernel_scalar(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, out_ref,
+                   *, block_rows):
+    sc = sc_ref[...]
+    th = th_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mg = mg_ref[...].astype(jnp.float32)
+    ms = ms_ref[...].astype(jnp.float32)
+    cond = sc[0, S_LAMG] * (mg - th) \
+        - (sc[0, S_LAMS] / sc[0, S_FS]) * (ms - th)
+    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
+    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows)
+
+
+def _kernel_diag(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, lg_ref,
+                 ls_ref, out_ref, *, block_rows):
+    sc = sc_ref[...]
+    th = th_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mg = mg_ref[...].astype(jnp.float32)
+    ms = ms_ref[...].astype(jnp.float32)
+    lg = lg_ref[...].astype(jnp.float32)
+    ls = ls_ref[...].astype(jnp.float32)
+    cond = lg * (mg - th) - (ls / sc[0, S_FS]) * (ms - th)
+    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
+    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "interpret",
+                                             "block_rows"))
+def fsgld_update_2d(theta2d: jax.Array, g2d: jax.Array, seed: jax.Array,
+                    scalars: jax.Array, *, variant: str = "plain",
+                    mu_g=None, mu_s=None, lam_g=None, lam_s=None,
+                    interpret: bool = False,
+                    block_rows: int = BLOCK_ROWS) -> jax.Array:
+    """Run the fused update on (rows, 128)-shaped operands.
+
+    scalars: (1, 8) f32 row [h, scale, f_s, prior_prec, alpha, temperature,
+    lam_g, lam_s]; seed: (1,) uint32.
+    """
+    rows = theta2d.shape[0]
+    assert theta2d.shape[1] == LANE, theta2d.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    grid = (rows // br,)
+
+    tile = pl.BlockSpec((br, LANE), lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 8), lambda i: (0, 0))
+    seed_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    if variant == "plain":
+        kernel = functools.partial(_kernel_plain, block_rows=br)
+        ops = [theta2d, g2d]
+        specs = [tile, tile]
+    elif variant == "scalar":
+        kernel = functools.partial(_kernel_scalar, block_rows=br)
+        ops = [theta2d, g2d, mu_g, mu_s]
+        specs = [tile, tile, tile, tile]
+    elif variant == "diag":
+        kernel = functools.partial(_kernel_diag, block_rows=br)
+        ops = [theta2d, g2d, mu_g, mu_s, lam_g, lam_s]
+        specs = [tile] * 6
+    else:
+        raise ValueError(variant)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seed_spec, scalar_spec] + specs,
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(seed, scalars, *ops)

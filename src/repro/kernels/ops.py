@@ -1,0 +1,124 @@
+"""jit'd public wrappers around the fused FSGLD update kernel.
+
+`fused_update_tree` applies the kernel leaf-by-leaf over a parameter pytree:
+ravel -> pad to (rows, 128) -> pallas_call -> unpad/reshape, with a
+deterministic per-leaf seed folded out of a JAX PRNG key. On this CPU
+container the kernel runs in interpret mode (the TPU path is identical
+modulo `interpret=False`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fsgld_update import LANE, fsgld_update_2d
+
+PyTree = Any
+
+# CPU container: interpret=True executes the kernel body in Python/XLA-CPU.
+# On a real TPU runtime set this to False (same kernel).
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_2d(vec: jax.Array, block_rows: int):
+    n = vec.shape[0]
+    per_block = block_rows * LANE
+    padded = -(-n // per_block) * per_block
+    vec = jnp.pad(vec.astype(jnp.float32), (0, padded - n))
+    return vec.reshape(-1, LANE), n
+
+
+def _scalars_row(h, scale, f_s, prior_prec, alpha, temperature, lam_g,
+                 lam_s) -> jax.Array:
+    return jnp.stack([
+        jnp.float32(h), jnp.asarray(scale, jnp.float32),
+        jnp.asarray(f_s, jnp.float32), jnp.float32(prior_prec),
+        jnp.float32(alpha), jnp.float32(temperature),
+        jnp.asarray(lam_g, jnp.float32), jnp.asarray(lam_s, jnp.float32),
+    ]).reshape(1, 8)
+
+
+def fused_update_flat(theta: jax.Array, g: jax.Array, seed: jax.Array, *,
+                      h, scale, f_s=1.0, prior_prec=0.0, alpha=0.0,
+                      temperature=1.0, mu_g=None, mu_s=None, lam_g=None,
+                      lam_s=None, block_rows: int = 256,
+                      interpret: Optional[bool] = None) -> jax.Array:
+    """Fused Langevin update of one flat fp32 vector. Seeds: uint32 scalar."""
+    interpret = INTERPRET if interpret is None else interpret
+    orig_shape, orig_dtype = theta.shape, theta.dtype
+    th2, n = _pad_2d(theta.reshape(-1), block_rows)
+    g2, _ = _pad_2d(g.reshape(-1), block_rows)
+    rows = th2.shape[0]
+    br = min(block_rows, rows)
+    while rows % br:
+        br //= 2
+
+    if mu_g is None:
+        variant = "plain"
+        kw = {}
+        lam_row = (0.0, 0.0)
+    elif jnp.ndim(lam_g) == 0:
+        variant = "scalar"
+        kw = {"mu_g": _pad_2d(mu_g.reshape(-1), block_rows)[0],
+              "mu_s": _pad_2d(mu_s.reshape(-1), block_rows)[0]}
+        lam_row = (lam_g, lam_s)
+    else:
+        variant = "diag"
+        kw = {"mu_g": _pad_2d(mu_g.reshape(-1), block_rows)[0],
+              "mu_s": _pad_2d(mu_s.reshape(-1), block_rows)[0],
+              "lam_g": _pad_2d(lam_g.reshape(-1), block_rows)[0],
+              "lam_s": _pad_2d(lam_s.reshape(-1), block_rows)[0]}
+        lam_row = (0.0, 0.0)
+
+    sc = _scalars_row(h, scale, f_s, prior_prec, alpha, temperature,
+                      *lam_row)
+    out = fsgld_update_2d(th2, g2, seed.reshape(1).astype(jnp.uint32), sc,
+                          variant=variant, interpret=interpret,
+                          block_rows=br, **kw)
+    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+
+
+def fused_update_tree(theta: PyTree, g: PyTree, key: jax.Array, *, h, scale,
+                      f_s=1.0, prior_prec=0.0, alpha=0.0, temperature=1.0,
+                      q_global=None, q_shard=None,
+                      surrogate_kind: Optional[str] = None) -> PyTree:
+    """Apply the fused update across a parameter pytree.
+
+    q_global/q_shard: repro.core.surrogate.Gaussian with 'diag' (flat-vector
+    params) or 'scalar' (pytree means + per-leaf scalar precisions)
+    structure, or None for SGLD/DSGLD.
+    """
+    leaves, treedef = jax.tree.flatten(theta)
+    gleaves = jax.tree.leaves(g)
+    seeds = jax.random.split(key, len(leaves))
+
+    if q_global is None:
+        mu_gs = mu_ss = lg = ls = [None] * len(leaves)
+    elif surrogate_kind == "diag":
+        assert len(leaves) == 1, "diag surrogates operate on flat vectors"
+        mu_gs, mu_ss = [q_global.mean], [q_shard.mean]
+        lg, ls = [q_global.prec], [q_shard.prec]
+    elif surrogate_kind == "scalar":
+        mu_gs = jax.tree.leaves(q_global.mean)
+        mu_ss = jax.tree.leaves(q_shard.mean)
+        lg = jax.tree.leaves(q_global.prec)
+        ls = jax.tree.leaves(q_shard.prec)
+    else:
+        raise ValueError(surrogate_kind)
+
+    out = []
+    for i, (t, gg) in enumerate(zip(leaves, gleaves)):
+        seed = jax.random.randint(seeds[i], (), 0, 2**31 - 1).astype(
+            jnp.uint32)
+        out.append(fused_update_flat(
+            t, gg, seed, h=h, scale=scale, f_s=f_s, prior_prec=prior_prec,
+            alpha=alpha, temperature=temperature, mu_g=mu_gs[i],
+            mu_s=mu_ss[i],
+            lam_g=(jnp.asarray(lg[i], jnp.float32)
+                   if lg[i] is not None else None),
+            lam_s=(jnp.asarray(ls[i], jnp.float32)
+                   if ls[i] is not None else None)))
+    return jax.tree.unflatten(treedef, out)

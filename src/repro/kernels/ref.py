@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused FSGLD update kernel.
+
+Implements bit-identical math to fsgld_update.py (same counter-based hash,
+same Box-Muller) so tests can assert end-to-end equality INCLUDING noise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mix(h: jax.Array) -> jax.Array:
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def gaussian_noise(seed: jax.Array, idx: jax.Array) -> jax.Array:
+    seed = seed.astype(jnp.uint32)
+    h1 = mix(idx * jnp.uint32(2) + jnp.uint32(1)
+             + seed * jnp.uint32(0x9E3779B9))
+    h2 = mix(idx * jnp.uint32(2) + seed * jnp.uint32(0x85EBCA77))
+    u1 = (h1 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24)) \
+        + (0.5 / (1 << 24))
+    u2 = (h2 >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos((2.0 * jnp.pi) * u2)
+
+
+def fsgld_update_flat(theta, g, seed, *, h, scale, f_s, prior_prec, alpha,
+                      temperature, mu_g=None, mu_s=None, lam_g=None,
+                      lam_s=None):
+    """Flat-vector oracle. lam_g/lam_s may be scalars ('scalar' structure)
+    or vectors ('diag'); mu_* None means plain SGLD/DSGLD (alpha ignored)."""
+    theta = theta.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    drift = -prior_prec * theta + scale * g
+    if mu_g is not None:
+        cond = lam_g * (mu_g.astype(jnp.float32) - theta) \
+            - (lam_s / f_s) * (mu_s.astype(jnp.float32) - theta)
+        drift = drift + alpha * cond
+    idx = jnp.arange(theta.shape[0], dtype=jnp.uint32)
+    xi = gaussian_noise(jnp.asarray(seed), idx)
+    return theta + (h / 2) * drift + jnp.sqrt(h * temperature) * xi

@@ -1,0 +1,1 @@
+from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates. Modality frontends ([vlm]/[audio]) enter here as precomputed
+patch/frame embeddings (the assignment's one sanctioned stub)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import init_cache, init_params
+from repro.models.model import ACT_DTYPE
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_shape(cfg: ArchConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32),
+             "labels": sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["enc_embeds"] = sds((B, cfg.num_patches, cfg.d_model),
+                                  ACT_DTYPE)
+    if cfg.family == "audio":
+        batch["enc_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                  ACT_DTYPE)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    return train_batch_specs(cfg, shape)
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """serve_step operands: cache of seq_len, one new token, positions."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    out = {"cache": cache,
+           "token": sds((B, 1), jnp.int32),
+           "pos": sds((B,), jnp.int32)}
+    if cfg.family == "vlm":
+        out["enc_out"] = sds((B, cfg.num_patches, cfg.d_model), ACT_DTYPE)
+    if cfg.family == "audio":
+        out["enc_out"] = sds((B, cfg.encoder_seq, cfg.d_model), ACT_DTYPE)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return train_batch_specs(cfg, shape)
+
+
+def long_context_eligible(cfg: ArchConfig) -> bool:
+    """long_500k runs only for sub-quadratic architectures: SSM / hybrid /
+    sliding-window. Pure full-attention archs are skipped (DESIGN.md Sec 5)."""
+    return all(k in ("swa", "rglru", "rwkv") for k in cfg.layer_pattern)

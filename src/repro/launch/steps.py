@@ -1,0 +1,164 @@
+"""pjit-able step functions for the production runtime.
+
+LARGE-MODEL mode (DESIGN.md Sec 4): one global chain; the FSGLD update for
+the full transformer posterior with per-tensor scalar-precision surrogates.
+``train_step`` is what the multi-pod dry-run lowers for every architecture.
+
+Serving lowers ``serve_step`` (one token against a KV cache / recurrent
+state) and ``prefill_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SamplerConfig
+from repro.models import decode_step, forward, init_params, log_lik_fn
+from repro.models.model import ACT_DTYPE
+
+PyTree = Any
+
+
+def make_surrogate_state(params_shape: PyTree, dtype=jnp.bfloat16) -> PyTree:
+    """Shape skeleton of the surrogate operands streamed into train_step:
+    global + resident-shard means (like params, bf16) and per-tensor scalar
+    precisions (DESIGN.md Sec 4.2)."""
+    means = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, dtype), params_shape)
+    lams = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((), jnp.float32), params_shape)
+    return {"mu_g": means, "mu_s": means, "lam_g": lams, "lam_s": lams}
+
+
+def init_surrogate_state(params: PyTree, *, lam: float = 1e-4,
+                         dtype=jnp.bfloat16) -> PyTree:
+    """Concrete surrogate state centred on the current params — the warm
+    'identity' surrogate used before local fits are communicated."""
+    means = jax.tree.map(lambda p: p.astype(dtype), params)
+    lams = jax.tree.map(lambda p: jnp.float32(lam), params)
+    return {"mu_g": means, "mu_s": means, "lam_g": lams, "lam_s": lams}
+
+
+def make_train_step(cfg: ArchConfig, sampler: SamplerConfig, *,
+                    scale: float, f_s: float):
+    """FSGLD train step: one Langevin update of the model-posterior chain.
+
+    scale = N_s / (f_s * m) — the DSGLD unbiasing factor, precomputed by the
+    scheduler (N_s = client corpus size, m = global batch).
+    """
+    alpha = sampler.alpha if sampler.method == "fsgld" else 0.0
+    prior = sampler.prior_precision
+    temp = sampler.temperature
+
+    def train_step(params, surr, batch, key):
+        ll, gll = jax.value_and_grad(
+            lambda p: log_lik_fn(p, cfg, batch))(params)
+
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(key, len(leaves))
+        keytree = jax.tree.unflatten(treedef, list(keys))
+        h = sampler.step_size
+        sig = jnp.sqrt(h * temp)
+
+        def upd(th, g, mu_g, mu_s, lam_g, lam_s, k):
+            g = g.astype(jnp.float32)
+            th32 = th.astype(jnp.float32)
+            drift = -prior * th32 + scale * g
+            if alpha:
+                cond = lam_g * (mu_g.astype(jnp.float32) - th32) \
+                    - (lam_s / f_s) * (mu_s.astype(jnp.float32) - th32)
+                drift = drift + alpha * cond
+            xi = jax.random.normal(k, th.shape, jnp.float32)
+            return (th32 + (h / 2) * drift + sig * xi).astype(th.dtype)
+
+        new_params = jax.tree.map(
+            upd, params, gll, surr["mu_g"], surr["mu_s"], surr["lam_g"],
+            surr["lam_s"], keytree)
+        metrics = {"log_lik": ll,
+                   "ll_per_token": ll / batch["tokens"].size}
+        return new_params, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        hidden, _ = forward(params, cfg, batch["tokens"],
+                            enc_embeds=batch.get("enc_embeds"))
+        logits = jnp.einsum("bd,dv->bv", hidden[:, -1],
+                            params["head"].astype(ACT_DTYPE),
+                            preferred_element_type=jnp.float32)
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, with_enc: Optional[bool] = None):
+    with_enc = (cfg.family in ("vlm", "audio")) if with_enc is None \
+        else with_enc
+
+    if with_enc:
+        def serve_step(params, cache, token, pos, enc_out):
+            logits, cache = decode_step(params, cfg, cache, token, pos,
+                                        enc_out=enc_out)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    else:
+        def serve_step(params, cache, token, pos):
+            logits, cache = decode_step(params, cfg, cache, token, pos)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# FEDERATED mode: C = |data axis| parallel chains, T_local in-client steps,
+# chain reassignment as one collective-permute over the data axis.
+# ---------------------------------------------------------------------------
+
+def make_federated_round(cfg: ArchConfig, sampler: SamplerConfig, mesh, *,
+                         scale: float, n_chains: int):
+    """One communication round in federated mode (DESIGN.md Sec 4.1).
+
+    chains: params pytree with a leading chain axis (C,) sharded over
+    'data' — each data-group hosts ONE chain resident at ONE client.
+    surr: per-client surrogate state stacked over the same axis (each
+    client stores its own q_s locally; the global q is replicated inside).
+    After T_local local FSGLD steps, chains rotate to the next client via
+    ``jax.lax.ppermute`` — the paper's 'Reassign_chain' as one ICI hop.
+    The ring schedule visits every client equally often, preserving the
+    uniform f_s = 1/S marginal of Algorithm 1 (ppermute permutations are
+    compile-time static, so the i.i.d.-categorical variant lives only in
+    the simulator; see DESIGN.md Sec 4.1).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    f_s = 1.0 / n_chains
+    step = make_train_step(cfg, sampler, scale=scale, f_s=f_s)
+    perm = [(i, int((i + 1) % n_chains)) for i in range(n_chains)]
+
+    def local_round(chain, surr, batches, seed):
+        # leading sharded axis C becomes a local size-1 block: squeeze it.
+        chain = jax.tree.map(lambda x: x[0], chain)
+        surr = jax.tree.map(lambda x: x[0], surr)
+        batches = jax.tree.map(lambda x: x[0], batches)
+        key = jax.random.PRNGKey(seed[0, 0])  # local block: (1, 1) uint32
+
+        def body(carry, batch):
+            chain, key = carry
+            key, k = jax.random.split(key)
+            chain, metrics = step(chain, surr, batch, k)
+            return (chain, key), metrics["ll_per_token"]
+
+        (chain, _), lls = jax.lax.scan(body, (chain, key), batches)
+        chain = jax.tree.map(lambda x: jax.lax.ppermute(x, "data", perm),
+                             chain)
+        return (jax.tree.map(lambda x: x[None], chain), lls[None])
+
+    pspec = P("data")
+    return shard_map(
+        local_round, mesh=mesh,
+        in_specs=(pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec),
+        check_rep=False)

@@ -1,0 +1,173 @@
+"""End-to-end FSGLD training driver (large-model mode).
+
+Phases (paper Algorithm 1 + Sec 3.1):
+  1. local surrogate fitting — short SGLD runs per client shard against the
+     local likelihood, fit per-tensor scalar-precision Gaussians, combine
+     into the global product q (computed once, communicated once);
+  2. FSGLD sampling — per round the scheduler draws a client
+     s ~ Categorical(f), feeds that client's minibatches, and the chain
+     takes ``local_updates`` Langevin steps with the conducive correction.
+
+On this CPU container run with ``--smoke`` (reduced config, 1x1 mesh); on a
+real cluster the same script drives the 16x16 / 2x16x16 production meshes.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --rounds 10 --method fsgld
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint
+from repro.configs import SamplerConfig, get_config, get_smoke_config
+from repro.core.surrogate import make_bank
+from repro.data import token_shards
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import (init_surrogate_state, make_train_step)
+from repro.models import init_params, log_lik_fn
+from repro.sharding import batch_specs, param_shardings
+
+
+def fit_surrogates(cfg, sampler: SamplerConfig, params, shards, key, *,
+                   fit_steps: int, minibatch: int, lam_floor=1e-8):
+    """Phase 1: per-client SGLD against the local likelihood + per-tensor
+    isotropic Gaussian fits (DESIGN.md Sec 4.2). Returns a 'scalar' bank."""
+    S = sampler.num_shards
+    n_s = shards["tokens"].shape[1]
+
+    def local_sgld(data_s, k):
+        def body(theta, kk):
+            k1, k2 = jax.random.split(kk)
+            idx = jax.random.randint(k1, (minibatch,), 0, n_s)
+            batch = jax.tree.map(lambda d: d[idx], data_s)
+            g = jax.grad(lambda p: log_lik_fn(p, cfg, batch))(theta)
+            h = sampler.step_size
+            leaves, tdef = jax.tree.flatten(theta)
+            gl = jax.tree.leaves(g)
+            ks = jax.random.split(k2, len(leaves))
+            new = [t + (h / 2) * (n_s / minibatch) * gg.astype(t.dtype)
+                   + jnp.sqrt(h) * jax.random.normal(nk, t.shape, t.dtype)
+                   for t, gg, nk in zip(leaves, gl, ks)]
+            theta = jax.tree.unflatten(tdef, new)
+            return theta, theta
+        _, trace = jax.lax.scan(body, params, jax.random.split(k, fit_steps))
+        # keep the second half of the trace
+        return jax.tree.map(lambda t: t[fit_steps // 2:], trace)
+
+    traces = jax.jit(jax.vmap(local_sgld))(
+        shards, jax.random.split(key, S))
+    means = jax.tree.map(lambda t: t.mean(1), traces)          # (S, ...)
+    precs = jax.tree.map(
+        lambda t: 1.0 / (t.var(1).reshape(S, -1).mean(-1) + lam_floor),
+        traces)                                                 # (S,)
+    return make_bank(means, precs, "scalar")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + 1x1 mesh (CPU container)")
+    ap.add_argument("--method", default="fsgld",
+                    choices=["sgld", "dsgld", "fsgld"])
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--local-updates", type=int, default=4)
+    ap.add_argument("--num-shards", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--shard-size", type=int, default=64)
+    ap.add_argument("--step-size", type=float, default=1e-5)
+    ap.add_argument("--fit-steps", type=int, default=20)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh() if args.smoke \
+        else make_production_mesh(multi_pod=args.multi_pod)
+    sampler = SamplerConfig(method=args.method, step_size=args.step_size,
+                            num_shards=args.num_shards,
+                            local_updates=args.local_updates,
+                            surrogate="scalar")
+    key = jax.random.PRNGKey(args.seed)
+    k_param, k_data, k_fit, k_run = jax.random.split(key, 4)
+
+    print(f"arch={cfg.name} method={args.method} shards={args.num_shards} "
+          f"mesh={dict(mesh.shape)}")
+    params = init_params(cfg, k_param)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.2f}M")
+
+    shards = token_shards(
+        k_data, num_shards=args.num_shards, shard_size=args.shard_size,
+        seq_len=args.seq, vocab_size=cfg.vocab_size)
+
+    # ---- phase 1: surrogates (once, before sampling) ----
+    if args.method == "fsgld":
+        t0 = time.time()
+        bank = fit_surrogates(cfg, sampler, params, shards, k_fit,
+                              fit_steps=args.fit_steps,
+                              minibatch=min(args.batch,
+                                            args.shard_size))
+        print(f"surrogates fitted in {time.time()-t0:.1f}s "
+              f"(communicated once)")
+    else:
+        bank = None
+
+    # ---- phase 2: FSGLD rounds ----
+    N_s = args.shard_size  # sequences per client
+    f_s = 1.0 / args.num_shards
+    scale = N_s / (f_s * args.batch)
+    step = make_train_step(cfg, sampler, scale=scale, f_s=f_s)
+    pshard = param_shardings(params, mesh)
+    step_jit = jax.jit(step, in_shardings=(
+        pshard, None, None, None), out_shardings=(pshard, None))
+
+    if bank is not None:
+        mu_g = jax.tree.map(lambda x: x.astype(jnp.bfloat16),
+                            bank.global_.mean)
+        lam_g = bank.global_.prec
+    else:
+        surr0 = init_surrogate_state(params, lam=0.0)
+
+    probs = jnp.full((args.num_shards,), f_s)
+    lls = []
+    t0 = time.time()
+    for r in range(args.rounds):
+        k_run, k_shard, k_steps = jax.random.split(k_run, 3)
+        s = int(jax.random.categorical(k_shard, jnp.log(probs)))
+        if bank is not None:
+            qs = bank.shard(s)
+            surr = {"mu_g": mu_g,
+                    "mu_s": jax.tree.map(lambda x: x.astype(jnp.bfloat16),
+                                         qs.mean),
+                    "lam_g": lam_g, "lam_s": qs.prec}
+        else:
+            surr = surr0
+        for t in range(args.local_updates):
+            k_steps, k_b, k_u = jax.random.split(k_steps, 3)
+            idx = jax.random.randint(k_b, (args.batch,), 0, N_s)
+            batch = jax.tree.map(lambda d: d[s][idx], shards)
+            params, metrics = step_jit(params, surr, batch, k_u)
+        ll = float(metrics["ll_per_token"])
+        lls.append(ll)
+        print(f"round {r:3d} client={s:2d} ll/token={ll:8.4f} "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, step=args.rounds,
+                        extra={"method": args.method, "arch": cfg.name})
+        print(f"checkpoint -> {args.ckpt}")
+    print(f"final ll/token {np.mean(lls[-max(1, len(lls)//4):]):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,10 @@
+from repro.models.model import (  # noqa: F401
+    ACT_DTYPE,
+    decode_step,
+    encoder_forward,
+    forward,
+    init_cache,
+    init_params,
+    log_lik_fn,
+    prefill_with_cache,
+)

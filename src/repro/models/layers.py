@@ -1,0 +1,582 @@
+"""Layer primitives shared by all assigned architecture families.
+
+Everything is written against plain pytrees (nested dicts of jnp arrays) and
+``jnp``/``jax.lax`` only — no flax. All sequence mixers come in two modes:
+
+* ``forward_*``  — full-sequence (training / prefill), compile-memory bounded
+  (chunked online-softmax attention, chunked linear-attention recurrences);
+* ``decode_*``   — one-token step against a cache / recurrent state.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention — chunked online-softmax (full-sequence mode)
+#
+# Forward is a lax.scan over KV blocks (flash-style online softmax).
+# WITHOUT a custom VJP, jax.linearize of that scan saves the per-block
+# probability matrices for backward: (nb, B, H, Sq, block_k) f32 residual
+# stacks = ~17 GB per layer at 32k seq — the dominant HBM term in the
+# roofline baseline (EXPERIMENTS.md §Perf iteration 1). The custom VJP
+# below stores only (q, k, v, out, m, l) and RECOMPUTES p per block in the
+# backward scan — the standard flash-attention backward, in pure JAX.
+# ---------------------------------------------------------------------------
+
+def _blockify(k, v, kv_positions, block_k):
+    B, Sk = kv_positions.shape
+    nb = cdiv(Sk, block_k)
+    pad = nb * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+    K, hd = k.shape[2], k.shape[3]
+    kb = k.reshape(B, nb, block_k, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block_k, K, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(B, nb, block_k).transpose(1, 0, 2)
+    return kb, vb, pb, nb, pad
+
+
+def _expand_heads(t, G):  # (B, bk, K, hd) -> (B, bk, K*G, hd)
+    B, bk, K, hd = t.shape
+    t = jnp.broadcast_to(t[:, :, :, None, :], (B, bk, K, G, hd))
+    return t.reshape(B, bk, K * G, hd)
+
+
+def _block_mask(pos, q_positions, causal, window):
+    valid = pos[:, None, None, :] >= 0
+    if causal:
+        valid &= pos[:, None, None, :] <= q_positions[:, None, :, None]
+    if window is not None:
+        valid &= (pos[:, None, None, :]
+                  > q_positions[:, None, :, None] - window)
+    return valid  # (B, 1, Sq, bk)
+
+
+def _flash_fwd_scan(q, k, v, q_positions, kv_positions, causal, window,
+                    block_k):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    kb, vb, pb, nb, _ = _blockify(k, v, kv_positions, block_k)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pos = blk
+        kh = _expand_heads(kblk, G)
+        vh = _expand_heads(vblk, G)
+        s = jnp.einsum("bqhd,bchd->bhqc", q, kh,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_block_mask(pos, q_positions, causal, window), s,
+                      NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p.astype(v.dtype), vh,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, H, Sq, hd)
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _flash_attention(q, k, v, q_positions, kv_positions, causal, window,
+                     block_k):
+    out, _, _ = _flash_fwd_scan(q, k, v, q_positions, kv_positions, causal,
+                                window, block_k)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq, H, hd)
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, causal, window, block_k):
+    out, m, l = _flash_fwd_scan(q, k, v, q_positions, kv_positions, causal,
+                                window, block_k)
+    res = (q, k, v, q_positions, kv_positions, out, m, l)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype), res
+
+
+def _flash_bwd(causal, window, block_k, res, dout):
+    q, k, v, q_positions, kv_positions, out, m, l = res
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    kb, vb, pb, nb, pad = _blockify(k, v, kv_positions, block_k)
+    do = dout.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, H, Sq, hd)
+    linv = 1.0 / jnp.maximum(l, 1e-30)
+    # D_t = sum_d do_td * out_td   (B, H, Sq)
+    D = jnp.sum(do * out, axis=-1)
+
+    def body(dq, blk):
+        kblk, vblk, pos = blk
+        kh = _expand_heads(kblk, G).astype(jnp.float32)
+        vh = _expand_heads(vblk, G).astype(jnp.float32)
+        qf = q.astype(jnp.float32)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, kh) * scale
+        valid = _block_mask(pos, q_positions, causal, window)
+        p = jnp.where(valid, jnp.exp(s - m[..., None]), 0.0) \
+            * linv[..., None]                                 # (B,H,Sq,bk)
+        dvh = jnp.einsum("bhqc,bhqd->bchd", p, do)
+        dp = jnp.einsum("bhqd,bchd->bhqc", do, vh)
+        ds = p * (dp - D[..., None]) * scale
+        dq = dq + jnp.einsum("bhqc,bchd->bqhd", ds, kh)
+        dkh = jnp.einsum("bhqc,bqhd->bchd", ds, qf)
+        # reduce the expanded heads back to K kv-heads
+        dkb = dkh.reshape(B, -1, K, G, hd).sum(3)
+        dvb = dvh.reshape(B, -1, K, G, hd).sum(3)
+        return dq, (dkb, dvb)
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dq, (dkb, dvb) = jax.lax.scan(body, dq0, (kb, vb, pb))
+    Skp = nb * block_k
+
+    def unblock(t):
+        t = t.transpose(1, 0, 2, 3, 4).reshape(B, Skp, K, hd)
+        return t[:, :Skp - pad] if pad else t
+
+    return (dq.astype(q.dtype), unblock(dkb).astype(k.dtype),
+            unblock(dvb).astype(v.dtype), None, None)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, Sk, K, hd)
+    v: jax.Array,                 # (B, Sk, K, hd)
+    *,
+    q_positions: jax.Array,       # (B, Sq) absolute positions of queries
+    kv_positions: jax.Array,      # (B, Sk) absolute positions of keys
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding-window size (None = full)
+    block_k: int = 512,
+) -> jax.Array:
+    """Flash-style attention in pure JAX: scan over KV blocks with running
+    max / normaliser so the (Sq x Sk) score matrix is never materialised,
+    with a flash-style custom VJP (residuals: q,k,v,out,m,l only — the
+    backward recomputes per-block probabilities).
+
+    SPMD note: heads stay in the H layout throughout (H divides the 'model'
+    axis for every assigned arch except whisper). KV heads are expanded
+    K -> H per block via broadcast-reshape, which GSPMD re-shards; a
+    (K, G) grouped reshape instead BREAKS propagation when the axis size
+    does not divide K, silently replicating all-head compute on every
+    model device (16x redundant flops — caught by the roofline analyzer).
+    """
+    assert q.shape[2] % k.shape[2] == 0, (q.shape, k.shape)
+    return _flash_attention(q, k, v, q_positions, kv_positions, causal,
+                            window, block_k)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, H, hd)
+    k_cache: jax.Array,      # (B, S, K, hd)
+    v_cache: jax.Array,      # (B, S, K, hd)
+    kv_positions: jax.Array,  # (B, S) ; -1 marks empty slots
+    q_position: jax.Array,   # (B,) current absolute position
+) -> jax.Array:
+    """Single-token attention over a (possibly ring-buffer) cache."""
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    valid = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# feed-forward (dense + MoE)
+# ---------------------------------------------------------------------------
+
+def ffn_apply(x: jax.Array, p: dict, ffn_type: str) -> jax.Array:
+    if ffn_type == "silu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    elif ffn_type == "geglu":
+        h = jax.nn.gelu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    elif ffn_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi_up"])
+    else:
+        raise ValueError(ffn_type)
+    return h @ p["wo"]
+
+
+def _moe_group(x: jax.Array, p: dict, *, top_k: int, ffn_type: str,
+               capacity_factor: float) -> tuple[jax.Array, jax.Array]:
+    """Sort-based (one-hot-free) top-k MoE dispatch for one token group.
+
+    x: (T, D). Returns (T, D) output and the router aux (load-balance) loss.
+    Capacity-dropped tokens fall back to a zero expert contribution, like
+    GShard. The sort keeps dispatch O(T log T) instead of the O(T*E*C)
+    one-hot einsum, which does not fit HBM at 32k sequence lengths.
+    """
+    T, D = x.shape
+    E = p["experts_wo"].shape[0]
+    gates = jax.nn.softmax(
+        (x.astype(jnp.float32) @ p["router"].astype(jnp.float32)), axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, top_k)              # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], E), axis=0)
+    router_prob = jnp.mean(gates, axis=0)
+    aux = E * jnp.sum(density * router_prob)
+
+    cap = max(top_k, int(math.ceil(T * top_k / E * capacity_factor)))
+
+    slot_e = top_i.reshape(-1)                              # (T*k,)
+    slot_w = top_w.reshape(-1)
+    slot_t = jnp.arange(T * top_k) // top_k                 # token of each slot
+    order = jnp.argsort(slot_e, stable=True)
+    sorted_e = slot_e[order]
+    counts = jnp.bincount(slot_e, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * top_k) - starts[sorted_e]
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, E * cap)  # overflow slot
+
+    buf = jnp.zeros((E * cap + 1, D), x.dtype)
+    buf = buf.at[dest].set(x[slot_t[order]])
+    h = buf[: E * cap].reshape(E, cap, D)
+
+    if ffn_type in ("silu", "geglu"):
+        act = jax.nn.silu if ffn_type == "silu" else jax.nn.gelu
+        hh = act(jnp.einsum("ecd,edf->ecf", h, p["experts_wi_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", h, p["experts_wi_up"])
+    else:
+        hh = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", h, p["experts_wi_up"]))
+    out_slots = jnp.einsum("ecf,efd->ecd", hh, p["experts_wo"])
+    out_slots = out_slots.reshape(E * cap, D)
+    out_slots = jnp.concatenate(
+        [out_slots, jnp.zeros((1, D), out_slots.dtype)], axis=0)
+
+    gathered = out_slots[dest] * (slot_w[order] * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[slot_t[order]].add(gathered)
+    return y, aux.astype(jnp.float32)
+
+
+def _moe_dense_dispatch(x: jax.Array, p: dict, *, top_k: int,
+                        ffn_type: str, capacity_factor: float
+                        ) -> tuple[jax.Array, jax.Array]:
+    """GShard-style grouped one-hot einsum dispatch.
+
+    x: (G, Tg, D) token groups. All routing is expressed as cumsum + one-hot
+    matmuls — no argsort / scatter — so GSPMD keeps the group dim sharded
+    over 'data'. (The sort-based dispatch in _moe_group is kept as the
+    dense-routing oracle for tests; under SPMD XLA replicates its scatter
+    across the data axis and all-reduces ~34 GB of expert buffers per MoE
+    layer — §Perf iteration 2.)
+    """
+    G, Tg, D = x.shape
+    E = p["experts_wo"].shape[0]
+    cap = max(top_k, int(math.ceil(Tg * top_k / E * capacity_factor)))
+    gates = jax.nn.softmax(
+        jnp.einsum("gtd,de->gte", x, p["router"].astype(x.dtype),
+                   preferred_element_type=jnp.float32), axis=-1)
+
+    # iterative top-k with capacity accounting (standard GShard routing)
+    remaining = gates
+    count_so_far = jnp.zeros((G, 1, E), jnp.float32)
+    dispatch = jnp.zeros((G, Tg, E, cap), x.dtype)
+    combine = jnp.zeros((G, Tg, E, cap), jnp.float32)
+    weight_sum = jnp.zeros((G, Tg, 1), jnp.float32)
+    picked = []
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                 # (G, Tg)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)   # (G, Tg, E)
+        w = jnp.sum(gates * onehot, axis=-1, keepdims=True)  # (G, Tg, 1)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + count_so_far
+        pos = jnp.sum(pos * onehot, axis=-1)                 # (G, Tg)
+        keep = (pos < cap).astype(jnp.float32)[..., None]    # (G, Tg, 1)
+        pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)  # (G, Tg, cap)
+        d = (onehot * keep)[..., None] * pos_oh[:, :, None, :]
+        dispatch = dispatch + d.astype(x.dtype)
+        combine = combine + d * w[..., None]
+        weight_sum = weight_sum + w * keep
+        count_so_far = count_so_far + jnp.sum(onehot * keep, axis=1,
+                                              keepdims=True)
+        remaining = remaining * (1.0 - onehot)
+        picked.append(onehot)
+
+    combine = combine / jnp.maximum(weight_sum, 1e-9)[..., None]
+
+    # aux load-balance loss (Switch-style, from the first choice)
+    density = jnp.mean(picked[0], axis=(0, 1))
+    router_prob = jnp.mean(gates, axis=(0, 1))
+    aux = E * jnp.sum(density * router_prob)
+
+    h = jnp.einsum("gtec,gtd->gecd", dispatch, x)            # (G,E,cap,D)
+    if ffn_type in ("silu", "geglu"):
+        act = jax.nn.silu if ffn_type == "silu" else jax.nn.gelu
+        hh = act(jnp.einsum("gecd,edf->gecf", h, p["experts_wi_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", h, p["experts_wi_up"])
+    else:
+        hh = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", h,
+                                    p["experts_wi_up"]))
+    out = jnp.einsum("gecf,efd->gecd", hh, p["experts_wo"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), out)
+    return y, aux
+
+
+MOE_GROUP_SIZE = 512
+
+
+def moe_ffn(x: jax.Array, p: dict, *, top_k: int, ffn_type: str,
+            capacity_factor: float) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (B, S, D), aux-loss scalar. Tokens are grouped into
+    contiguous chunks of MOE_GROUP_SIZE per batch row; routing capacity is
+    per-group. Dispatch is pure einsum (see _moe_dense_dispatch), so under
+    pjit the batch/group dim stays sharded over 'data' — routing never
+    leaves the client shard, matching the federated setting."""
+    B, S, D = x.shape
+    g = min(MOE_GROUP_SIZE, S)
+    while S % g:
+        g //= 2
+    xg = x.reshape(B * (S // g), g, D)
+    y, aux = _moe_dense_dispatch(xg, p, top_k=top_k, ffn_type=ffn_type,
+                                 capacity_factor=capacity_factor)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / recurrentgemma)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def _rglru_gates(xc: jax.Array, p: dict):
+    r = jax.nn.sigmoid(xc @ p["w_rec"])                     # recurrence gate
+    i = jax.nn.sigmoid(xc @ p["w_inp"])                     # input gate
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r       # (B,S,D) in (-inf,0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xc)
+    return a, gated
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width = w.shape[0]. x: (B,S,D), w: (W,D)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for t in range(W):
+        out = out + xp[:, t:t + x.shape[1], :] * w[t]
+    return out
+
+
+def rglru_forward(x: jax.Array, p: dict, h0: Optional[jax.Array] = None):
+    """Griffin recurrent block, full sequence via associative scan.
+
+    x: (B,S,D). Returns (y, h_last). Linear diagonal recurrence
+    h_t = a_t * h_{t-1} + b_t is computed with jax.lax.associative_scan —
+    O(log S) depth, no (S x S) materialisation.
+    """
+    xin = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    xc = _causal_conv1d(xin, p["conv_w"])
+    a, b = _rglru_gates(xc.astype(jnp.float32), p)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_last = h[:, -1, :]
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, h_last
+
+
+def rglru_decode(x: jax.Array, p: dict, state: dict):
+    """One step. x: (B,1,D). state: {'h': (B,D), 'conv': (B,W-1,D)}."""
+    xin = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    W = p["conv_w"].shape[0]
+    hist = jnp.concatenate([state["conv"], xin], axis=1)    # (B, W, D)
+    xc = jnp.einsum("bwd,wd->bd", hist, p["conv_w"])[:, None, :]
+    a, b = _rglru_gates(xc.astype(jnp.float32), p)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = (h[:, None, :].astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h, "conv": hist[:, 1:, :]}
+
+
+def rglru_init_state(batch: int, d: int, conv_width: int, dtype) -> dict:
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix (chunked linear attention with data-dependent decay)
+# ---------------------------------------------------------------------------
+
+def _rwkv_projections(x: jax.Array, p: dict, x_prev: jax.Array):
+    """Token-shift mixes + r/k/v/decay projections.
+
+    x: (B,S,D); x_prev: (B,S,D) sequence shifted right by one.
+    Returns r,k,v: (B,S,H,hd); log_w: (B,S,H,hd) (<= ~0, per-channel decay).
+    """
+    B, S, D = x.shape
+    H, hd = p["u"].shape
+
+    def mix(mu):
+        return x + mu * (x_prev - x)
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(B, S, H, hd)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(B, S, H, hd)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(B, S, H, hd)
+    xw = mix(p["mu_w"]).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]       # (B,S,D)
+    log_w = -jnp.exp(
+        jnp.clip(p["w0"] + dd, -8.0, 8.0)).reshape(B, S, H, hd)
+    return r, k, v, log_w
+
+
+def rwkv_forward(x: jax.Array, p: dict, state: Optional[dict] = None,
+                 chunk: int = 64):
+    """RWKV-6 time-mix over a full sequence, chunked linear-attention form.
+
+    Intra-chunk pairwise decays are exp(L_t - L_tau) with tau < t, which is
+    always <= 1 — numerically stable without clamping tricks. Cross-chunk
+    state S: (B,H,hd,hd) carried by lax.scan.
+    """
+    B, S, D = x.shape
+    H, hd = p["u"].shape
+    x_prev0 = jnp.zeros((B, 1, D), x.dtype) if state is None \
+        else state["x_prev"][:, None, :]
+    x_shift = jnp.concatenate([x_prev0, x[:, :-1, :]], axis=1)
+    r, k, v, log_w = _rwkv_projections(x, p, x_shift)
+    u = p["u"].astype(jnp.float32)
+
+    nb = cdiv(S, chunk)
+    pad = nb * chunk - S
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, z4) for t in (r, k, v))
+        log_w = jnp.pad(log_w, z4)  # pad decays with 0 (=> w=1, harmless)
+
+    def to_chunks(t):
+        return t.reshape(B, nb, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r.astype(jnp.float32),
+                                      k.astype(jnp.float32),
+                                      v.astype(jnp.float32), log_w))
+    # cumulative log decay within each chunk (inclusive)
+    L = jnp.cumsum(lwc, axis=3)                             # (nb,B,H,C,hd)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(S0, blk):
+        rb, kb, vb, Lb, lwb = blk                           # (B,H,C,hd)
+        # Query-side decays are EXCLUSIVE of the current step (o_t reads
+        # S_{t-1}), matching rwkv_decode exactly: decay(tau -> t) =
+        # prod_{j=tau+1}^{t-1} w_j = exp(Lq_t - L_tau), Lq = L - log_w.
+        Lq = Lb - lwb
+        diff = Lq[:, :, :, None, :] - Lb[:, :, None, :, :]  # (B,H,C,C,hd)
+        att = jnp.einsum("bhtc,bhsc,bhtsc->bhts", rb, kb,
+                         jnp.exp(jnp.where(causal[None, None, :, :, None],
+                                           diff, NEG_INF)))
+        att = jnp.where(causal[None, None], att, 0.0)
+        o_intra = jnp.einsum("bhts,bhsd->bhtd", att, vb)
+        # current-token bonus u
+        o_diag = (rb * (u[None, :, None, :] * kb)).sum(-1, keepdims=True) * vb
+        # cross-chunk: state as of chunk start, decayed to position t
+        # (exclusive: o_t sees S0 decayed by w_{0..t-1} within this chunk)
+        o_inter = jnp.einsum("bhtc,bhcd->bhtd", rb * jnp.exp(Lq), S0)
+        # state update: S' = diag(exp(L_C)) S0 + sum_tau exp(L_C - L_tau) k v^T
+        wC = jnp.exp(Lb[:, :, -1:, :])                      # (B,H,1,hd)
+        kdec = kb * jnp.exp(Lb[:, :, -1:, :] - Lb)
+        S_new = wC.transpose(0, 1, 3, 2) * S0 + \
+            jnp.einsum("bhtc,bhtd->bhcd", kdec, vb)
+        return S_new, o_intra + o_diag + o_inter
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32) if state is None \
+        else state["S"].astype(jnp.float32)
+    # remat the chunk body: without it, scan linearization stacks the
+    # (nb,B,H,C,C,hd) pairwise-decay tensors (~17 GB/layer at 4k seq) as
+    # backward residuals — the dominant HBM term for this family
+    # (EXPERIMENTS.md §Perf iteration 4). Residuals drop to the body
+    # inputs (O(S) total); backward recomputes exp(diff) per chunk.
+    S_last, o = jax.lax.scan(jax.checkpoint(body), S0, (rc, kc, vc, L, lwc))
+    # (nb, B, H, C, hd) -> (B, nb, C, H, hd) -> (B, S, H, hd)
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, nb * chunk, H, hd)[:, :S]
+    y = (o.reshape(B, S, H * hd).astype(x.dtype)) @ p["w_o"]
+    new_state = {"S": S_last, "x_prev": x[:, -1, :]}
+    return y, new_state
+
+
+def rwkv_decode(x: jax.Array, p: dict, state: dict):
+    """One step. x: (B,1,D). state: {'S': (B,H,hd,hd), 'x_prev': (B,D)}."""
+    B, _, D = x.shape
+    H, hd = p["u"].shape
+    r, k, v, log_w = _rwkv_projections(x, p, state["x_prev"][:, None, :])
+    r, k, v = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B,H,hd)
+    w = jnp.exp(log_w[:, 0].astype(jnp.float32))
+    u = p["u"].astype(jnp.float32)
+    S = state["S"].astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]                  # (B,H,hd,hd)
+    o = jnp.einsum("bhc,bhcd->bhd", r, S + u[None, :, :, None] * kv)
+    S_new = w[..., :, None] * S + kv
+    y = (o.reshape(B, 1, H * hd).astype(x.dtype)) @ p["w_o"]
+    return y, {"S": S_new, "x_prev": x[:, 0, :]}
+
+
+def rwkv_init_state(batch: int, num_heads: int, head_dim: int, d: int,
+                    dtype) -> dict:
+    return {"S": jnp.zeros((batch, num_heads, head_dim, head_dim),
+                           jnp.float32),
+            "x_prev": jnp.zeros((batch, d), dtype)}

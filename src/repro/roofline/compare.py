@@ -1,0 +1,57 @@
+"""Before/after roofline comparison: paper-faithful baseline JSON vs
+optimized JSON -> markdown delta table for EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.roofline.compare \
+        results/dryrun_pod1.json results/dryrun_pod1_opt.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCH_NAMES, SHAPES
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("optimized")
+    ap.add_argument("--mesh-tag", default="pod1")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.optimized) as f:
+        opt = json.load(f)
+
+    print("| arch | shape | flops o/b | hbm o/b | coll o/b | peak o/b |")
+    print("|---|---|---|---|---|---|")
+    tot = {"static_flops": [0.0, 0.0], "static_hbm_bytes": [0.0, 0.0],
+           "static_collective_total": [0.0, 0.0]}
+    for arch in ARCH_NAMES:
+        for shp in SHAPES:
+            tag = f"{arch}|{shp}|{args.mesh_tag}"
+            b, o = base.get(tag), opt.get(tag)
+            if not (b and o and b.get("status") == "ok"
+                    and o.get("status") == "ok"):
+                continue
+
+            def ratio(k):
+                denom = b[k] if b[k] else 1.0
+                return o[k] / denom
+            for k in tot:
+                tot[k][0] += b[k]
+                tot[k][1] += o[k]
+            print(f"| {arch} | {shp} | {ratio('static_flops'):.2f} | "
+                  f"{ratio('static_hbm_bytes'):.2f} | "
+                  f"{ratio('static_collective_total'):.2f} | "
+                  f"{o['peak_bytes']/max(b['peak_bytes'],1):.2f} |")
+    print()
+    for k, (bsum, osum) in tot.items():
+        print(f"grid total {k}: {bsum:.3e} -> {osum:.3e} "
+              f"({bsum/max(osum,1e-9):.2f}x better)" if osum < bsum else
+              f"grid total {k}: {bsum:.3e} -> {osum:.3e} "
+              f"({osum/max(bsum,1e-9):.2f}x worse)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,396 @@
+"""Static roofline analyzer over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop (lax.scan) body ONCE —
+useless for scan-over-layers models where >95% of the work sits inside
+loops. This module re-derives the three roofline inputs by parsing
+``compiled.as_text()`` and scaling each computation by its execution
+multiplicity:
+
+  * FLOPs            — from dot ops: 2 * |output| * |contracting dims|
+  * HBM bytes        — per top-level op: operand + result bytes (fusion
+                       internals never touch HBM; parameter/constant/tuple
+                       plumbing skipped). Operand shapes are resolved
+                       through a per-computation name -> result-shape map
+                       (optimized HLO prints operands without types).
+  * collective bytes — all-gather / all-reduce / reduce-scatter /
+                       all-to-all / collective-permute result bytes
+
+Multiplicity: ENTRY = 1; a while body/cond inherits parent_mult * trip_count
+(trip recovered from the largest constant feeding the loop-condition
+compare — JAX scans lower to ``i < length``); fusion / call / conditional
+bodies inherit the caller's multiplicity.
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  - elementwise FLOPs ignored (dots dominate transformer steps);
+  - copy ops count as traffic even when XLA elides them;
+  - conditional branches all counted (upper bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32"
+                       r"|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)"
+                     r"=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose operands/results do NOT represent HBM traffic
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "iota", "while", "conditional",
+                 "call", "partition-id", "replica-id", "domain",
+                 "opt-barrier"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for t, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[t]
+    return total
+
+
+def _result_type(rhs: str) -> str:
+    depth = 0
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == " " and depth == 0:
+            return rhs[:i]
+    return rhs
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    rhs: str
+    result: str
+    args: str  # text inside the opcode's parentheses (operand list)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, int]  # op name -> result bytes
+
+
+def _split_args(after: str) -> str:
+    """Extract the operand list: text inside the first balanced parens."""
+    i = after.find("(")
+    if i < 0:
+        return ""
+    depth = 0
+    for j in range(i, len(after)):
+        if after[j] == "(":
+            depth += 1
+        elif after[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return after[i + 1:j]
+    return after[i + 1:]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        s = line.strip()
+        if not s or line.startswith(("HloModule", "FileNames",
+                                     "FunctionNames", "FileLocations",
+                                     "StackFrames")):
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur = Computation(hdr.group(2), [], {})
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry_name = cur.name
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        result = _result_type(rhs)
+        after = rhs[len(result):].strip()
+        opcode = after.split("(")[0].strip()
+        cur.ops.append(Op(name, opcode, rhs, result, _split_args(after)))
+        cur.shapes[name] = _shape_bytes(result)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> int:
+    """Largest integer constant reachable in the cond computation (+ its
+    callees). JAX scans: `i < length` with length the only big constant."""
+    best = 1
+    direction = "LT"
+    stack, seen = [cond.name], set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        for op in comps[cname].ops:
+            m = re.search(r"constant\((-?\d+)\)", op.rhs)
+            if m:
+                best = max(best, int(m.group(1)))
+            d = re.search(r"direction=(\w+)", op.rhs)
+            if d and op.opcode == "compare":
+                direction = d.group(1)
+            cm = _CALLED.search(op.rhs)
+            if cm:
+                stack.extend(re.split(r",\s*%?", cm.group(1)))
+    if direction in ("LE", "GE"):
+        best += 1
+    return max(best, 1)
+
+
+def _multiplicities(comps: Dict[str, Computation]) -> Dict[str, float]:
+    mult: Dict[str, float] = {}
+    entry = comps["__entry__"]
+    mult[entry.name] = 1.0
+    for _ in range(64):
+        changed = False
+        for cname, comp in comps.items():
+            if cname == "__entry__" or mult.get(cname, 0.0) == 0.0:
+                continue
+            m = mult[cname]
+            for op in comp.ops:
+                if op.opcode == "while":
+                    mm = re.search(r"condition=%?([\w\.\-]+)", op.rhs)
+                    bb = re.search(r"body=%?([\w\.\-]+)", op.rhs)
+                    if not (mm and bb) or mm.group(1) not in comps:
+                        continue
+                    trip = _trip_count(comps[mm.group(1)], comps)
+                    for target, factor in ((bb.group(1), trip),
+                                           (mm.group(1), trip + 1)):
+                        new = m * factor
+                        if mult.get(target, 0.0) < new:
+                            mult[target] = new
+                            changed = True
+                else:
+                    cm = _CALLED.search(op.rhs)
+                    if cm:
+                        for target in re.split(r",\s*%?", cm.group(1)):
+                            if target in comps and mult.get(target, 0.) < m:
+                                mult[target] = m
+                                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: Op, comp: Computation,
+               comps: Dict[str, Computation]) -> float:
+    out_elems = 1
+    m = _SHAPE_RE.search(op.result)
+    if m and m.group(2):
+        for d in m.group(2).split(","):
+            out_elems *= int(d)
+    cdims_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rhs)
+    lhs_name_m = _OPERAND.search(op.args)
+    if not (cdims_m and lhs_name_m):
+        return 2.0 * out_elems
+    # resolve lhs operand shape (dims, not bytes)
+    lhs_dims: List[int] = []
+    lhs = lhs_name_m.group(1)
+    for search in (comp, *comps.values()):
+        for o in search.ops:
+            if o.name == lhs:
+                sm = _SHAPE_RE.search(o.result)
+                if sm and sm.group(2):
+                    lhs_dims = [int(d) for d in sm.group(2).split(",")]
+                break
+        if lhs_dims:
+            break
+    contract = 1
+    for ci in cdims_m.group(1).split(","):
+        if ci != "" and int(ci) < len(lhs_dims):
+            contract *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+def _param_effective_bytes(comp: Computation) -> Dict[int, int]:
+    """For a fused computation, the HBM bytes actually read per parameter.
+
+    A parameter consumed ONLY by dynamic-slice / gather ops reads just the
+    sliced rows, not the whole buffer (scan residual stacks, embedding
+    tables). Returns {param_index: effective_bytes}; absent = full size.
+    """
+    param_names = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.rhs)
+            if m:
+                param_names[op.name] = int(m.group(1))
+    eff: Dict[int, int] = {}
+    for pname, pidx in param_names.items():
+        consumers = [op for op in comp.ops
+                     if pname in _OPERAND.findall(op.args)]
+        if not consumers:
+            continue
+        sliced = 0
+        ok = True
+        for op in consumers:
+            if op.opcode in ("dynamic-slice", "gather"):
+                first = _OPERAND.search(op.args)
+                if first and first.group(1) == pname:
+                    sliced += comp.shapes.get(op.name, 0)
+                    continue
+            ok = False
+            break
+        if ok and sliced:
+            eff[pidx] = sliced
+    return eff
+
+
+def _effective_traffic(op: Op, comp: Computation,
+                       comps: Dict[str, Computation]) -> int:
+    """Operand+result HBM bytes with slice-awareness:
+      * gather / dynamic-slice read only the slice (result size);
+      * dynamic-update-slice writes only the update;
+      * fusions whose params are consumed solely by dynamic-slice/gather
+        read only the slices; fusion roots that are dynamic-update-slice
+        write only the update."""
+    operands = _OPERAND.findall(op.args)
+    result_b = comp.shapes.get(op.name, 0)
+    if op.opcode in ("gather", "dynamic-slice"):
+        return 2 * result_b  # read slice + write result
+    if op.opcode == "dynamic-update-slice":
+        upd = comp.shapes.get(operands[1], 0) if len(operands) > 1 else 0
+        return 2 * upd
+    if op.opcode.startswith("fusion"):
+        cm = _CALLED.search(op.rhs)
+        fused = None
+        if cm:
+            first = re.split(r",\s*", cm.group(1))[0].strip().lstrip("%")
+            fused = comps.get(first)
+        if fused is not None:
+            eff = _param_effective_bytes(fused)
+            total = 0
+            for i, name in enumerate(operands):
+                total += eff.get(i, comp.shapes.get(name, 0))
+            dus = [o for o in fused.ops
+                   if o.opcode == "dynamic-update-slice"]
+            if dus:
+                # in-place residual-stack append: writes only the update
+                total += sum(
+                    fused.shapes.get(_OPERAND.findall(o.args)[1], 0)
+                    for o in dus if len(_OPERAND.findall(o.args)) > 1)
+            else:
+                total += result_b
+            return total
+    return result_b + sum(comp.shapes.get(o, 0) for o in operands)
+
+
+def analyze_text(text: str) -> dict:
+    comps = parse_hlo(text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    mult = _multiplicities(comps)
+
+    fusion_names = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            cm = _CALLED.search(op.rhs)
+            if cm and ("fusion" in op.opcode or op.opcode == "reduce"
+                       or op.opcode == "scatter" or op.opcode == "map"
+                       or op.opcode == "sort" or op.opcode == "select-and-scatter"
+                       or "reduce" in op.opcode):
+                fusion_names.update(re.split(r",\s*%?", cm.group(1)))
+
+    flops = 0.0
+    traffic = 0.0
+    coll: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, comp, comps)
+            for kind in _COLLECTIVES:
+                if op.opcode.startswith(kind):
+                    coll[kind] = coll.get(kind, 0.0) \
+                        + m * _shape_bytes(op.result)
+            if cname in fusion_names:
+                continue  # fusion internals don't touch HBM
+            if op.opcode in _SKIP_TRAFFIC or \
+                    any(op.opcode.startswith(s) for s in
+                        ("get-tuple-element", "custom-call")):
+                continue
+            traffic += m * _effective_traffic(op, comp, comps)
+    return {"flops": flops, "hbm_bytes": traffic,
+            "collective_bytes": coll,
+            "collective_total": sum(coll.values())}
+
+
+def analyze_compiled(compiled) -> dict:
+    return analyze_text(compiled.as_text())
+
+
+def breakdown_text(text: str, top: int = 25) -> dict:
+    """Top contributors by HBM traffic / flops / collective bytes —
+    the §Perf napkin-math input."""
+    comps = parse_hlo(text)
+    mult = _multiplicities(comps)
+    fusion_names = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            cm = _CALLED.search(op.rhs)
+            if cm and ("fusion" in op.opcode or "reduce" in op.opcode):
+                fusion_names.update(re.split(r",\s*%?", cm.group(1)))
+    traffic_rows, flop_rows, coll_rows = [], [], []
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flop_rows.append((m * _dot_flops(op, comp, comps), m,
+                                  cname, op.name, op.result))
+            for kind in _COLLECTIVES:
+                if op.opcode.startswith(kind):
+                    coll_rows.append((m * _shape_bytes(op.result), m,
+                                      cname, op.name, op.result))
+            if cname in fusion_names or op.opcode in _SKIP_TRAFFIC or \
+                    any(op.opcode.startswith(s) for s in
+                        ("get-tuple-element", "custom-call")):
+                continue
+            b = m * _effective_traffic(op, comp, comps)
+            traffic_rows.append((b, m, cname, op.name,
+                                 f"{op.opcode} {op.result[:40]}"))
+    traffic_rows.sort(reverse=True)
+    flop_rows.sort(reverse=True)
+    coll_rows.sort(reverse=True)
+    return {"traffic": traffic_rows[:top], "flops": flop_rows[:top],
+            "collectives": coll_rows[:top]}

@@ -1,0 +1,120 @@
+"""Roofline report generator.
+
+Reads the dry-run JSON (results/dryrun_pod1.json — per-DEVICE, loop-scaled
+static analysis) and emits the §Roofline table: the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS = 6*N_active*D, and the useful-compute
+ratio, per (arch x shape).
+
+TPU v5e hardware constants (per chip):
+    197 TFLOP/s bf16   |   819 GB/s HBM   |   ~50 GB/s/link ICI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256  # single-pod 16x16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D for training (fwd 2ND + bwd 4ND); 2*N*D for inference-forward;
+    2*N_active per generated token for decode. MoE uses active params.
+    Global across the mesh."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: ONE token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def row_terms(info: dict) -> dict:
+    """Per-device seconds for each roofline term."""
+    t_c = info["static_flops"] / PEAK_FLOPS
+    t_m = info["static_hbm_bytes"] / HBM_BW
+    t_i = info["static_collective_total"] / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_i, "collective"))[1]
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_i,
+            "dominant": dom}
+
+
+def build_table(results: dict, mesh_tag: str = "pod1") -> list:
+    rows = []
+    for arch in ARCH_NAMES:
+        for shp in SHAPES:
+            tag = f"{arch}|{shp}|{mesh_tag}"
+            info = results.get(tag)
+            if info is None:
+                continue
+            if info["status"] == "skip":
+                rows.append({"arch": arch, "shape": shp, "status": "skip"})
+                continue
+            if info["status"] != "ok":
+                rows.append({"arch": arch, "shape": shp, "status": "fail"})
+                continue
+            terms = row_terms(info)
+            mf = model_flops(arch, shp)
+            hlo_global = info["static_flops"] * CHIPS
+            rows.append({
+                "arch": arch, "shape": shp, "status": "ok", **terms,
+                "model_flops": mf,
+                "hlo_flops_global": hlo_global,
+                "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+                "peak_gib": info["peak_bytes"] / 2 ** 30,
+                "step_time_bound_ms": 1e3 * max(
+                    terms["t_compute"], terms["t_memory"],
+                    terms["t_collective"]),
+            })
+    return rows
+
+
+def render(rows: list) -> str:
+    hdr = ("| arch | shape | t_comp(ms) | t_mem(ms) | t_coll(ms) | "
+           "bottleneck | MODEL_FLOPs | useful | peak GiB |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"{r['status']} | - | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {1e3*r['t_compute']:.2f} | "
+            f"{1e3*r['t_memory']:.2f} | {1e3*r['t_collective']:.2f} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun_pod1.json")
+    ap.add_argument("--mesh-tag", default="pod1")
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        results = json.load(f)
+    rows = build_table(results, args.mesh_tag)
+    print(render(rows))
+    # summary: most interesting hillclimb candidates
+    ok = [r for r in rows if r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["useful_ratio"])
+    coll = max(ok, key=lambda r: r["t_collective"]
+               / max(r["t_compute"], 1e-12))
+    print(f"\nworst useful-ratio: {worst['arch']}|{worst['shape']} "
+          f"({worst['useful_ratio']:.2f})")
+    print(f"most collective-bound: {coll['arch']}|{coll['shape']} "
+          f"(t_coll/t_comp={coll['t_collective']/max(coll['t_compute'],1e-12):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    logical_axes,
+    param_shardings,
+    param_specs,
+    surrogate_specs,
+)

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (assignment requirement): reduced variant of
+each family, one forward + one FSGLD train step on CPU, asserting output
+shapes and no NaNs; plus prefill/decode parity for one arch per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, SamplerConfig, get_smoke_config
+from repro.launch.steps import (init_surrogate_state, make_serve_step,
+                                make_train_step)
+from repro.models import (decode_step, encoder_forward, forward, init_cache,
+                          init_params, log_lik_fn)
+from repro.models.model import ACT_DTYPE
+
+
+def _batch(cfg, key, B=2, S=32):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_model))
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 32
+    batch = _batch(cfg, key, B, S)
+
+    hidden, aux = forward(params, cfg, batch["tokens"],
+                          enc_embeds=batch.get("enc_embeds"))
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert jnp.all(jnp.isfinite(hidden.astype(jnp.float32)))
+
+    sampler = SamplerConfig(method="fsgld", step_size=1e-6)
+    step = make_train_step(cfg, sampler, scale=100.0, f_s=0.25)
+    surr = init_surrogate_state(params, lam=1e-4)
+    new_params, metrics = jax.jit(step)(params, surr, batch,
+                                        jax.random.PRNGKey(1))
+    assert jnp.isfinite(metrics["log_lik"])
+    for old, new in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)):
+        assert old.shape == new.shape and old.dtype == new.dtype
+        assert jnp.all(jnp.isfinite(new.astype(jnp.float32)))
+    # the chain moved
+    moved = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_params)))
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    cache = init_cache(cfg, B, S)
+    serve = make_serve_step(cfg)
+    token = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    if cfg.family in ("vlm", "audio"):
+        T = cfg.num_patches if cfg.family == "vlm" else cfg.encoder_seq
+        enc = jax.random.normal(key, (B, T, cfg.d_model), ACT_DTYPE)
+        nxt, cache2 = jax.jit(serve)(params, cache, token, pos, enc)
+    else:
+        nxt, cache2 = jax.jit(serve)(params, cache, token, pos)
+    assert nxt.shape == (B,) and nxt.dtype == jnp.int32
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+PARITY_ARCHS = ["qwen3-1.7b", "h2o-danube-1.8b", "llama-3.2-vision-90b",
+                "whisper-large-v3", "recurrentgemma-2b", "rwkv6-7b"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefill_decode_parity(arch):
+    """Full-sequence forward and token-by-token decode agree (validates KV
+    caches, ring buffers, recurrent states) at bf16 tolerance."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    enc = enc_in = None
+    if cfg.family == "vlm":
+        enc = jax.random.normal(key, (B, cfg.num_patches, cfg.d_model),
+                                ACT_DTYPE)
+        hidden, _ = forward(params, cfg, tokens, enc_embeds=enc)
+    elif cfg.family == "audio":
+        enc_in = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+        enc = encoder_forward(params, cfg, enc_in)
+        hidden, _ = forward(params, cfg, tokens, enc_embeds=enc_in)
+    else:
+        hidden, _ = forward(params, cfg, tokens)
+    full = jnp.einsum("bsd,dv->bsv", hidden,
+                      params["head"].astype(ACT_DTYPE),
+                      preferred_element_type=jnp.float32)
+
+    cache = init_cache(cfg, B, S)
+    if enc is not None:
+        step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p,
+                                                   enc_out=enc))
+    else:
+        step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+    outs = []
+    for t in range(S):
+        lg, cache = step(cache, tokens[:, t:t + 1],
+                         jnp.full((B,), t, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    rel = float(jnp.max(jnp.abs(full - dec))) \
+        / (float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("arch", ["grok-1-314b", "phi3.5-moe-42b-a6.6b"])
+def test_moe_parity_majority(arch):
+    """MoE parity holds for most positions; router tie-flips at bf16
+    boundaries and capacity drops affect isolated tokens (documented)."""
+    from repro.configs.base import MoEConfig
+    cfg = get_smoke_config(arch)
+    cfg = dataclasses.replace(
+        cfg, moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=8.0))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    hidden, _ = forward(params, cfg, tokens)
+    full = jnp.einsum("bsd,dv->bsv", hidden,
+                      params["head"].astype(ACT_DTYPE),
+                      preferred_element_type=jnp.float32)
+    cache = init_cache(cfg, B, S)
+    step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
+    outs = []
+    for t in range(S):
+        lg, cache = step(cache, tokens[:, t:t + 1],
+                         jnp.full((B,), t, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    err = jnp.max(jnp.abs(full - dec), axis=-1)
+    frac_ok = float(jnp.mean(err < 0.1 * float(jnp.max(jnp.abs(full)))))
+    assert frac_ok > 0.9, frac_ok

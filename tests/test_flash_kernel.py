@@ -1,0 +1,62 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle (interpret mode),
+shape/dtype/mask sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def naive(q, k, v, causal=True, window=None):
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("S,H,hd,bq,bk,causal,window", [
+    (128, 2, 64, 64, 64, True, None),
+    (128, 2, 64, 128, 32, True, None),
+    (256, 1, 128, 64, 128, True, None),
+    (128, 2, 64, 64, 64, False, None),
+    (256, 2, 64, 64, 64, True, 96),
+])
+def test_flash_kernel_vs_naive(S, H, hd, bq, bk, causal, window):
+    key = jax.random.PRNGKey(0)
+    B = 2
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = naive(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(3)
+    B, S, H, hd = 1, 128, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, S, H, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, S, H, hd)).astype(dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = naive(q.astype(jnp.float32), k.astype(jnp.float32),
+                 v.astype(jnp.float32))
+    assert out.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)

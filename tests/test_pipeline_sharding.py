@@ -1,0 +1,87 @@
+"""Input pipeline + sharding-rule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.pipeline import (ClientDataset, FederatedPipeline,
+                                 categorical_schedule, round_robin)
+from repro.launch.specs import params_shape
+from repro.sharding import param_specs
+
+
+def test_client_dataset_epochs_cover_all():
+    data = {"x": np.arange(10)[:, None]}
+    ds = ClientDataset(data, seed=0)
+    seen = []
+    for _ in range(5):
+        seen.extend(ds.next_batch(2)["x"][:, 0].tolist())
+    assert sorted(seen) == list(range(10))  # one full epoch, no repeats
+
+
+def test_pipeline_prefetch_and_schedule():
+    clients = [ClientDataset({"x": np.full((8, 2), i)}, seed=i)
+               for i in range(3)]
+    pipe = FederatedPipeline(clients, batch_size=4,
+                             schedule=round_robin(3), prefetch=2)
+    for expect in [0, 1, 2, 0, 1]:
+        s, batch = next(pipe)
+        assert s == expect
+        assert bool(jnp.all(batch["x"] == expect))
+
+
+def test_categorical_schedule_marginals():
+    sched = categorical_schedule([0.7, 0.2, 0.1], seed=0)
+    draws = np.array([next(sched) for _ in range(5000)])
+    freq = np.bincount(draws, minlength=3) / 5000
+    np.testing.assert_allclose(freq, [0.7, 0.2, 0.1], atol=0.03)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh512():
+    # abstract-device mesh just for spec resolution (no computation)
+    devs = np.array(jax.devices() * 256)[:256].reshape(16, 16)
+    from jax.sharding import Mesh
+    return Mesh(devs, ("data", "model"))
+
+
+def test_param_specs_2d_sharding(mesh512):
+    pshape = params_shape(get_config("qwen3-1.7b"))
+    specs = param_specs(pshape, mesh512)
+    # stacked attention weight: (layers, D, H*hd) -> (None, data, model)
+    wq = specs["blocks"]["l0"]["attn"]["wq"]
+    assert wq == P(None, "data", "model"), wq
+    assert specs["embed"] == P("model", "data")
+    assert specs["head"] == P("data", "model")
+    # norms replicate
+    assert specs["final_norm"] == P()
+
+
+def test_param_specs_uneven_dims_replicate(mesh512):
+    """whisper: 20 heads / 51866 vocab don't divide 16 -> those dims fall
+    back to replication instead of failing."""
+    pshape = params_shape(get_config("whisper-large-v3"))
+    specs = param_specs(pshape, mesh512)
+    assert specs["embed"] == P(None, "data")  # vocab 51866 % 16 != 0
+    wq = specs["blocks"]["l0"]["attn"]["wq"]  # q_dim 1280 % 16 == 0
+    assert wq == P(None, "data", "model")
+
+
+def test_param_specs_serving_layout_drops_fsdp(mesh512):
+    pshape = params_shape(get_smoke_config("rwkv6-7b"))
+    specs = param_specs(pshape, mesh512, serve=True)
+    for leaf in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in jax.tree.leaves(leaf) and "data" not in leaf
+
+
+def test_param_specs_serving_layout_keeps_2d_when_too_big(mesh512):
+    pshape = params_shape(get_config("grok-1-314b"))
+    specs = param_specs(pshape, mesh512, serve=True)
+    wq = specs["blocks"]["l0"]["attn"]["wq"]
+    assert wq == P(None, "data", "model")  # 314B can't replicate over data
