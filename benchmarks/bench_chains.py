@@ -1,0 +1,91 @@
+"""Mesh chain-runtime scaling benchmark: chains x shards sweep.
+
+Measures wall time per FSGLD chain-step for the shard_map engine
+(core/engine.py) against the legacy vmap executor, with and without the
+chain-batched fused Pallas kernel, on the Sec 5.1 Gaussian-mean model at a
+parameter size where the elementwise update is the visible cost.
+
+derived = chain-steps/second aggregate throughput (higher is better);
+us_per_call = wall microseconds per chain-step. Tiny shapes for the CI
+bench-smoke lane via REPRO_BENCH_SCALE=0.01; paper-scale via SCALE=10.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, SCALE, bench_main
+from repro.configs.base import SamplerConfig
+from repro.core import FederatedSampler, MeshChainEngine, make_bank
+from repro.core.surrogate import analytic_gaussian_likelihood_surrogate
+
+
+def _problem(key, S, n, d):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _time_run(runner, key, theta0, rounds, n_chains, t_local):
+    # one warm-up round compiles; sync before timing steady-state rounds
+    jax.block_until_ready(runner(key, theta0, 1, n_chains))
+    t0 = time.perf_counter()
+    out = runner(key, theta0, rounds, n_chains)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    steps = rounds * t_local * n_chains
+    return 1e6 * dt / steps, steps / dt
+
+
+def run():
+    d = max(int(4096 * SCALE), 64)
+    n = max(int(256 * SCALE), 16)
+    rounds, t_local = 4, 8
+    key = jax.random.PRNGKey(0)
+    shard_sweep = (4, 16) if SCALE >= 1 else (4,)
+    chain_sweep = (1, 4, 8) if SCALE >= 1 else (1, 4)
+
+    rows = []
+    for S in shard_sweep:
+        data, bank = _problem(jax.random.fold_in(key, S), S, n, d)
+        cfg = SamplerConfig(method="fsgld", step_size=1e-5, num_shards=S,
+                            local_updates=t_local, prior_precision=1.0)
+        theta0 = jnp.zeros(d)
+        m = min(32, n)
+        for C in chain_sweep:
+            samp = FederatedSampler(log_lik, cfg, data, minibatch=m,
+                                    bank=bank)
+            eng_k = MeshChainEngine(log_lik, cfg, data, m, bank=bank,
+                                    use_kernel=True)
+
+            def legacy(k, t0_, r, nc):
+                return samp.run_vmap(k, t0_, r, n_chains=nc,
+                                     collect_every=t_local)
+
+            def mesh(k, t0_, r, nc):
+                return samp.run(k, t0_, r, n_chains=nc,
+                                collect_every=t_local)
+
+            def mesh_kernel(k, t0_, r, nc):
+                return eng_k.run(k, t0_, r, n_chains=nc,
+                                 collect_every=t_local)
+
+            for tag, runner in [("vmap", legacy), ("mesh", mesh),
+                                ("mesh+kernel", mesh_kernel)]:
+                us, thru = _time_run(runner, jax.random.PRNGKey(1), theta0,
+                                     rounds, C, t_local)
+                rows.append(Row(f"chains/{tag}/S{S}/C{C}", us, thru,
+                                note="derived = chain-steps/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    raise SystemExit(bench_main(run))

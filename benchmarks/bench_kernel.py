@@ -7,12 +7,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, SCALE, Timer
+from benchmarks.common import Row, SCALE, Timer, bench_main
 from repro.kernels import ops, ref
 
 
 def run():
-    P = int(2**20 * max(SCALE, 1))
+    # SCALE < 1 shrinks below the default 1M params (CI bench-smoke runs
+    # SCALE=0.01 -> ~10k); floor keeps at least a few kernel blocks live.
+    P = max(int(2**20 * SCALE), 2**12)
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 6)
     th = jax.random.normal(ks[0], (P,))
@@ -57,5 +59,4 @@ def run():
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(r.csv())
+    raise SystemExit(bench_main(run))

@@ -10,6 +10,8 @@ Scale with REPRO_BENCH_SCALE (default 1; paper-scale ~10).
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 import os
 import time
 from typing import Optional
@@ -26,6 +28,53 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.2f},{self.derived:.6g}"
+
+    def ok(self) -> bool:
+        """A row with a non-finite metric is a FAILED measurement — the CI
+        bench lane must gate on it, not archive it."""
+        return math.isfinite(self.us_per_call) and math.isfinite(self.derived)
+
+
+def rows_as_json(rows: list, *, failures: int = 0) -> dict:
+    """The standard BENCH json envelope every benchmark emits (and CI
+    uploads as an artifact): schema tag + scale + rows + failure count."""
+    return {
+        "schema": "repro-bench-v1",
+        "scale": SCALE,
+        "failures": failures,
+        "rows": [dataclasses.asdict(r) for r in rows],
+    }
+
+
+def write_json(rows: list, path: str, *, failures: int = 0) -> None:
+    with open(path, "w") as f:
+        json.dump(rows_as_json(rows, failures=failures), f, indent=1)
+
+
+def bench_main(run_fn) -> int:
+    """Shared __main__ for single-benchmark modules: print the CSV, honor
+    ``--json PATH``, exit non-zero when any row is non-finite or run_fn
+    raises (so CI lanes actually gate)."""
+    import argparse
+    import traceback
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the standard BENCH json envelope here")
+    args = ap.parse_args()
+    try:
+        rows = list(run_fn())
+    except Exception:  # noqa: BLE001 - report, then fail the lane
+        traceback.print_exc()
+        return 1
+    bad = [r for r in rows if not r.ok()]
+    for r in rows:
+        print(r.csv())
+    for r in bad:
+        print(f"# NON-FINITE: {r.name}")
+    if args.json:
+        write_json(rows, args.json, failures=len(bad))
+    return 1 if bad else 0
 
 
 class Timer:

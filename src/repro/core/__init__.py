@@ -11,6 +11,13 @@ from repro.core.federated import (  # noqa: F401
     fit_bank_from_samples,
     sample_local_likelihood,
 )
+from repro.core.engine import (  # noqa: F401
+    MeshChainEngine,
+    make_chain_round_fn,
+    make_round_fn,
+    pad_shards,
+    refresh_bank_mesh,
+)
 from repro.core.diagnostics import ess, rhat, summarize  # noqa: F401
 from repro.core.sghmc import FederatedSGHMC, make_sghmc_step  # noqa: F401
 from repro.core.sampler import (  # noqa: F401

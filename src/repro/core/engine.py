@@ -1,0 +1,409 @@
+"""Mesh-parallel FSGLD chain runtime (the production multi-chain engine).
+
+The paper's parallel regime (Ahn et al.-style parallel chains; the FA-LD
+follow-ups in PAPERS.md) needs MANY posterior chains resident on MANY
+clients at once. The simulator in ``core/federated.py`` ran chains with a
+single-host ``vmap``; this module replaces that execution path with a
+``shard_map`` executor over the (``data``, ``model``) mesh from
+``launch/mesh.py``:
+
+  * ``data``  — the CHAIN axis. Chains are sharded over it; each data group
+    runs its chain block locally (vmapped inside the block, so the 1x1 host
+    mesh is bit-identical to the legacy vmap path).
+  * ``model`` — SHARD-parallel surrogate work. The bank refresh / Fisher
+    fitting pass splits the client-shard axis S over ``model`` and
+    all-gathers the fitted naturals (``refresh_bank_mesh``).
+
+Chain->client reassignment:
+
+  * ``categorical`` — the paper's Algorithm 1: i.i.d. s ~ Categorical(f)
+    per chain (chains may collide on a client).
+  * ``permutation`` — the collision-free SPMD variant (DESIGN.md Sec 4.1):
+    every device derives the SAME random permutation from the replicated
+    round key inside the shard_map block and slices its own chain block by
+    ``axis_index('data')`` — device-side, no host round-trip, and
+    bit-identical to the legacy host-side ``permutation(key, S)[:C]``.
+
+Non-uniform clients: shard data leaves are (S, max_n, ...) padded along the
+sample axis; ``ShardScheme.sizes`` carries the true N_s and minibatch
+indices are drawn in [0, N_s) only, so pad rows are never touched (tests
+fill them with NaN to prove it).
+
+The fused Pallas kernel path (``use_kernel=True``) routes the whole chain
+block through the CHAIN-BATCHED entry point
+(``kernels.ops.fused_update_chains_tree``) — one ``pallas_call`` per leaf
+per step for the entire block instead of a vmap over single-chain kernels,
+keeping the hot elementwise update one HBM pass per chain-block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SamplerConfig
+from repro.core.sampler import LogLikFn, ShardScheme, make_step_fn
+from repro.core.surrogate import SurrogateBank, make_bank
+from repro.sharding.rules import chain_spec
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# padding non-uniform clients
+# ---------------------------------------------------------------------------
+
+def pad_shards(per_shard: list, fill: float = jnp.nan):
+    """Stack a list of per-client pytrees (each with leading axis N_s) into
+    padded (S, max_n, ...) leaves + the true sizes tuple.
+
+    Float leaves pad with NaN by default: any estimator that touches a
+    pad row poisons the chain immediately instead of silently biasing it.
+    Integer leaves (token ids) cannot carry NaN — jnp.pad would silently
+    coerce it to 0, a VALID id — so they get the dtype's minimum as an
+    extreme out-of-range sentinel instead.
+    """
+    sizes = tuple(int(jax.tree.leaves(t)[0].shape[0]) for t in per_shard)
+    max_n = max(sizes)
+
+    def pad_one(leaf):
+        pad = [(0, max_n - leaf.shape[0])] + [(0, 0)] * (leaf.ndim - 1)
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            value = fill
+        else:
+            value = jnp.iinfo(leaf.dtype).min
+        return jnp.pad(leaf, pad, constant_values=value)
+
+    stacked = jax.tree.map(
+        lambda *leaves: jnp.stack([pad_one(l) for l in leaves]), *per_shard)
+    return stacked, sizes
+
+
+# ---------------------------------------------------------------------------
+# per-chain round bodies
+# ---------------------------------------------------------------------------
+
+def _make_batch_sampler(cfg: SamplerConfig, scheme: ShardScheme,
+                        minibatch: int):
+    """Returns sample(k_batch, shard_id, shard_data) -> minibatch pytree.
+
+    DSGLD/FSGLD draw m indices with replacement from the LIVE prefix
+    [0, N_s) of the resident shard. Centralized SGLD draws from the virtual
+    ragged concatenation of all shards: a global index u in [0, N) maps to
+    (shard, offset) via the size prefix sums — for uniform shards this
+    selects exactly the elements of the legacy pooled-reshape path.
+    """
+    sizes = scheme.sizes_array()
+    starts = scheme.starts_array()
+    ends = jnp.cumsum(sizes)
+    total = scheme.total
+    m = minibatch
+
+    def sample(k_batch, shard_id, shard_data):
+        if cfg.method == "sgld":
+            u = jax.random.randint(k_batch, (m,), 0, total)
+            sh = jnp.searchsorted(ends, u, side="right").astype(jnp.int32)
+            off = u - starts[sh]
+            return jax.tree.map(lambda d: d[sh, off], shard_data)
+        idx = jax.random.randint(k_batch, (m,), 0, sizes[shard_id])
+        return jax.tree.map(lambda d: d[shard_id][idx], shard_data)
+
+    return sample
+
+
+def make_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
+                  scheme: ShardScheme, step_fn, minibatch: int,
+                  collect: bool = True):
+    """Client-side Update(T, theta_0, s) for ONE chain — the same math as
+    the legacy ``FederatedSampler._round`` generalised to ragged shards.
+    Returns round(theta, key, shard_id, shard_data, bank_rt)."""
+    sample = _make_batch_sampler(cfg, scheme, minibatch)
+
+    def round_fn(theta, key, shard_id, shard_data, bank_rt=None):
+        def body(carry, k):
+            theta = carry
+            k_batch, k_step = jax.random.split(k)
+            batch = sample(k_batch, shard_id, shard_data)
+            theta = step_fn(theta, k_step, batch, shard_id, minibatch,
+                            bank_rt=bank_rt)
+            return theta, theta if collect else None
+
+        keys = jax.random.split(key, cfg.local_updates)
+        theta, trace = jax.lax.scan(body, theta, keys)
+        return theta, trace
+
+    return round_fn
+
+
+def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
+                        scheme: ShardScheme, minibatch: int,
+                        bank_kind: Optional[str], collect: bool = True):
+    """CHAIN-BATCHED round for the fused-kernel path: gradients are vmapped
+    over the local chain block, then the whole block goes through ONE
+    chain-batched Pallas update per leaf per step.
+
+    Returns round(thetas, keys, sids, shard_data, bank) operating on
+    (C_blk, ...)-stacked chain states.
+    """
+    from repro.kernels import ops as kops
+
+    sample = _make_batch_sampler(cfg, scheme, minibatch)
+    sizes_f, probs_f = scheme.as_arrays()
+    grad_fn = jax.grad(log_lik_fn)
+    # only FSGLD carries the conducive correction — mirror the gating in
+    # make_step_fn's kernel path, else a resident bank would silently add
+    # the surrogate term to DSGLD/SGLD updates.
+    use_surrogate = cfg.method == "fsgld"
+    if not use_surrogate:
+        bank_kind = None
+
+    def round_fn(thetas, keys, sids, shard_data, bank=None):
+        if not use_surrogate:
+            bank = None
+        C = keys.shape[0]
+        if cfg.method == "sgld":
+            scale = jnp.full((C,), scheme.total / minibatch, jnp.float32)
+            f_s = jnp.ones((C,), jnp.float32)
+        else:
+            f_s = probs_f[sids]
+            scale = sizes_f[sids] / (f_s * minibatch)
+
+        def body(carry, ks):
+            thetas = carry
+            kk = jax.vmap(jax.random.split)(ks)       # (C, 2, 2)
+            k_batch, k_step = kk[:, 0], kk[:, 1]
+            batches = jax.vmap(
+                lambda k, s: sample(k, s, shard_data))(k_batch, sids)
+            glls = jax.vmap(grad_fn)(thetas, batches)
+            thetas = kops.fused_update_chains_tree(
+                thetas, glls, k_step, h=cfg.step_size, scale=scale,
+                f_s=f_s, prior_prec=cfg.prior_precision, alpha=cfg.alpha,
+                temperature=cfg.temperature, bank=bank, sids=sids,
+                surrogate_kind=bank_kind)
+            return thetas, thetas if collect else None
+
+        keys_t = jax.vmap(lambda k: jax.random.split(
+            k, cfg.local_updates))(keys)              # (C, T, 2)
+        thetas, trace = jax.lax.scan(body, thetas,
+                                     jnp.swapaxes(keys_t, 0, 1))
+        if collect and trace is not None:
+            # (T, C, ...) -> (C, T, ...) to match the vmap-of-scan layout
+            trace = jax.tree.map(lambda t: jnp.swapaxes(t, 0, 1), trace)
+        return thetas, trace
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MeshChainEngine:
+    """shard_map-based multi-chain FSGLD runtime.
+
+    shard_data: pytree with leaves (S, max_n, ...) — shards padded to the
+    longest client; ``sizes`` carries true per-client counts (None =>
+    uniform, no padding). ``mesh`` must expose ('data', 'model') axes;
+    n_chains must divide by the data-axis size.
+    """
+    log_lik_fn: LogLikFn
+    cfg: SamplerConfig
+    shard_data: PyTree
+    minibatch: int
+    bank: Optional[SurrogateBank] = None
+    use_kernel: bool = False
+    mesh: Any = None
+    sizes: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            self.mesh = make_host_mesh()
+        leaf = jax.tree.leaves(self.shard_data)[0]
+        s, max_n = leaf.shape[0], leaf.shape[1]
+        assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
+        sizes = ((max_n,) * s if self.sizes is None
+                 else tuple(int(n) for n in self.sizes))
+        assert len(sizes) == s and max(sizes) == max_n, (sizes, max_n)
+        self.scheme = ShardScheme(sizes=sizes, probs=self.cfg.probs())
+        self.step_fn = make_step_fn(self.log_lik_fn, self.cfg, self.scheme,
+                                    self.bank, use_kernel=False)
+        self._vrounds = {}
+
+    # -- executors ---------------------------------------------------------
+
+    def _chain_spec(self):
+        return chain_spec()
+
+    def _vround(self, collect: bool):
+        """jit(shard_map(...)) executor for one communication round, built
+        lazily per collect mode and cached."""
+        key = (collect, self.use_kernel)
+        if key in self._vrounds:
+            return self._vrounds[key]
+
+        if self.use_kernel:
+            chain_round = make_chain_round_fn(
+                self.log_lik_fn, self.cfg, self.scheme, self.minibatch,
+                self.bank.kind if self.bank is not None else None,
+                collect=collect)
+
+            def block(chains, keys, sids, shard_data, bank_rt):
+                return chain_round(chains, keys, sids, shard_data, bank_rt)
+        else:
+            round_fn = make_round_fn(
+                self.log_lik_fn, self.cfg, self.scheme, self.step_fn,
+                self.minibatch, collect=collect)
+
+            def block(chains, keys, sids, shard_data, bank_rt):
+                return jax.vmap(round_fn,
+                                in_axes=(0, 0, 0, None, None))(
+                    chains, keys, sids, shard_data, bank_rt)
+
+        cspec = self._chain_spec()
+        out_specs = (cspec, cspec if collect else None)
+        mapped = shard_map(
+            block, mesh=self.mesh,
+            in_specs=(cspec, cspec, cspec, P(), P()),
+            out_specs=out_specs, check_rep=False)
+        fn = jax.jit(mapped)
+        self._vrounds[key] = fn
+        return fn
+
+    def _permute_sids(self, k_assign: jax.Array, n_chains: int):
+        """Collision-free reassignment, computed SPMD: every data group
+        derives the same permutation of [0, S) from the replicated round
+        key and takes the slice owned by its chain block. Equals the
+        host-side ``permutation(k, S)[:n_chains]`` bitwise."""
+        S = self.cfg.num_shards
+        assert n_chains <= S, (n_chains, S)
+        per = n_chains // self.mesh.shape["data"]
+
+        def block(k):
+            i = jax.lax.axis_index("data")
+            perm = jax.random.permutation(k[0], S)
+            return jax.lax.dynamic_slice(perm, (i * per,), (per,))
+
+        return shard_map(
+            block, mesh=self.mesh, in_specs=(P(),),
+            out_specs=P("data"), check_rep=False)(k_assign[None])
+
+    # -- server-side loop --------------------------------------------------
+
+    def run(self, key: jax.Array, theta0: PyTree, num_rounds: int, *,
+            n_chains: int = 1, reassign: str = "categorical",
+            collect_every: int = 1, refresh_every: Optional[int] = None,
+            collect: bool = True):
+        """Same contract (and same RNG stream) as the legacy
+        ``FederatedSampler.run``: returns stacked samples with leading axes
+        (n_chains, num_rounds * T_local / collect_every, ...), or the final
+        chain states when ``collect=False`` (large-model mode — the trace
+        of a billion-parameter posterior does not fit anywhere).
+        """
+        d_size = self.mesh.shape["data"]
+        if n_chains % d_size:
+            raise ValueError(
+                f"n_chains={n_chains} must divide over the data axis "
+                f"({d_size})")
+        probs = jnp.asarray(self.cfg.probs())
+        S = self.cfg.num_shards
+        cshard = NamedSharding(self.mesh, self._chain_spec())
+        chains = jax.device_put(
+            jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (n_chains,) + t.shape).copy(), theta0),
+            jax.tree.map(lambda _: cshard, theta0))
+        bank_rt = self.bank
+        vround = self._vround(collect)
+        out = []
+        for r in range(num_rounds):
+            key, k_assign, k_run = jax.random.split(key, 3)
+            if self.cfg.method == "sgld":
+                sids = jnp.zeros((n_chains,), jnp.int32)
+            elif reassign == "categorical":   # paper Algorithm 1
+                sids = jax.random.categorical(
+                    k_assign, jnp.log(probs)[None].repeat(n_chains, 0))
+            elif reassign == "permutation":   # SPMD variant (DESIGN 4.1)
+                sids = self._permute_sids(k_assign, n_chains)
+            else:
+                raise ValueError(reassign)
+            if (refresh_every and self.cfg.method == "fsgld" and r > 0
+                    and r % refresh_every == 0):
+                if self.bank is None or self.bank.kind != "diag":
+                    # refresh_bank(_mesh) fits DIAG banks over flat-vector
+                    # params (same limit as the legacy path); swapping the
+                    # bank kind under a specialized round fn would corrupt
+                    # the kernel path silently — refuse loudly instead.
+                    raise NotImplementedError(
+                        "adaptive refresh supports flat-parameter 'diag' "
+                        f"banks only (got {getattr(self.bank, 'kind', None)!r})")
+                center = jax.tree.map(lambda t: t.mean(0), chains)
+                bank_rt = self.refresh(center)
+            chains, trace = vround(chains, jax.random.split(k_run, n_chains),
+                                   sids, self.shard_data, bank_rt)
+            if collect:
+                out.append(jax.tree.map(lambda t: t[:, ::collect_every],
+                                        trace))
+        if not collect:
+            return chains
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out)
+
+    # -- model-axis work: shard-parallel surrogate refresh ----------------
+
+    def refresh(self, theta: PyTree) -> SurrogateBank:
+        """Adaptive surrogate refresh at ``theta`` with the client-shard
+        axis S split over the MODEL mesh axis (each model group runs the
+        Fisher/gradient pass for its subset of clients, results gathered
+        by the shard_map output spec). Same math as
+        ``federated.refresh_bank``."""
+        return refresh_bank_mesh(self.log_lik_fn, self.shard_data, theta,
+                                 self.mesh, sizes=self.scheme.sizes)
+
+
+def refresh_bank_mesh(log_lik_fn: LogLikFn, shard_data: PyTree,
+                      theta: jax.Array, mesh, *, sizes=None,
+                      jitter: float = 1e-3, batch: int = 256
+                      ) -> SurrogateBank:
+    """``federated.refresh_bank`` parallelised over the mesh 'model' axis:
+    per-client score sums + centered Fishers are embarrassingly parallel
+    over clients, so the S axis shards over 'model' (requires S % |model|
+    == 0; the 1x1 host mesh degenerates to the serial pass). Ragged
+    clients reduce over their live prefix only."""
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, max_n = leaf.shape[0], leaf.shape[1]
+    sizes = (max_n,) * S if sizes is None else tuple(sizes)
+    n_arr = jnp.asarray(sizes, jnp.float32)
+    m_size = mesh.shape["model"]
+    assert S % m_size == 0, (S, m_size)
+
+    def one_shard(data_s, n_s):
+        def gpair(i):
+            item = jax.tree.map(
+                lambda d: jax.lax.dynamic_slice_in_dim(d, i, 1), data_s)
+            g = jax.grad(log_lik_fn)(theta, item)
+            # where(), not live*g: pad rows may hold NaN by design and
+            # 0 * NaN == NaN would poison the reduction.
+            g = jnp.where(i < n_s, g, jnp.zeros_like(g))
+            return g, g * g
+
+        g, g2 = jax.lax.map(gpair, jnp.arange(max_n), batch_size=batch)
+        gsum = g.sum(0)
+        centered = g2.sum(0) - gsum * gsum / n_s
+        return gsum, centered
+
+    def block(data_blk, n_blk):
+        return jax.vmap(one_shard)(data_blk, n_blk)
+
+    b, fisher = jax.jit(shard_map(
+        block, mesh=mesh,
+        in_specs=(P("model"), P("model")),
+        out_specs=(P("model"), P("model")),
+        check_rep=False))(shard_data, n_arr)
+    precs = jnp.maximum(fisher, 0.0) + jitter
+    mus = theta[None] + b / precs
+    return make_bank(mus, precs, "diag")

@@ -51,7 +51,10 @@ class FederatedSampler:
         self.scheme = ShardScheme(sizes=(n,) * s, probs=self.cfg.probs())
         self.step_fn = make_step_fn(self.log_lik_fn, self.cfg, self.scheme,
                                     self.bank, use_kernel=self.use_kernel)
-        self._run_round = jax.jit(self._round)
+        # built once: re-wrapping vmap per run() call would retrace every
+        # time (jit caches on callable identity)
+        self._vround = jax.jit(jax.vmap(self._round,
+                                        in_axes=(0, 0, 0, None)))
 
     # -- client-side Update(T, theta_0, s) --------------------------------
     def _round(self, theta, key, shard_id, bank_rt=None):
@@ -85,16 +88,34 @@ class FederatedSampler:
         """Returns stacked samples with leading axes
         (n_chains, num_rounds * T_local / collect_every, ...).
 
+        Execution is delegated to the mesh-parallel chain engine
+        (core/engine.py) on the 1x1 host mesh — bit-identical to the
+        legacy vmap loop kept as ``run_vmap`` (the regression oracle),
+        but the same code path scales to multi-device data/model meshes.
         SGLD ignores sharding: shard_id is fixed to 0 and the estimator
         scales by N/m over the pooled data (the centralized baseline)."""
+        from repro.core.engine import MeshChainEngine
+        if not hasattr(self, "_engine"):
+            self._engine = MeshChainEngine(
+                self.log_lik_fn, self.cfg, self.shard_data, self.minibatch,
+                bank=self.bank, use_kernel=self.use_kernel)
+        return self._engine.run(
+            key, theta0, num_rounds, n_chains=n_chains, reassign=reassign,
+            collect_every=collect_every, refresh_every=refresh_every)
+
+    def run_vmap(self, key: jax.Array, theta0: PyTree, num_rounds: int,
+                 *, n_chains: int = 1, reassign: str = "categorical",
+                 collect_every: int = 1,
+                 refresh_every: Optional[int] = None):
+        """LEGACY single-host vmap executor (pre-mesh runtime). Kept as the
+        bit-exactness oracle for the shard_map engine; prefer ``run``."""
         probs = jnp.asarray(self.cfg.probs())
         S = self.cfg.num_shards
         chains = jax.tree.map(
             lambda t: jnp.broadcast_to(t[None], (n_chains,) + t.shape).copy(),
             theta0)
         bank_rt = self.bank
-        vround = jax.jit(jax.vmap(self._round,
-                                  in_axes=(0, 0, 0, None)))
+        vround = self._vround
         out = []
         for r in range(num_rounds):
             key, k_assign, k_run = jax.random.split(key, 3)

@@ -54,7 +54,13 @@ def prior_grad(theta: PyTree, prior_precision: float) -> PyTree:
 
 @dataclasses.dataclass(frozen=True)
 class ShardScheme:
-    """Static shard metadata: sizes N_s and selection probs f_s."""
+    """Static shard metadata: sizes N_s and selection probs f_s.
+
+    Shard sizes may be NON-uniform: stacked shard data is then padded along
+    the per-shard sample axis to ``max_size`` and the pad rows are dead —
+    ``valid_mask``/``sizes_array`` let samplers draw minibatch indices only
+    from the live prefix of each shard (see core/engine.py).
+    """
     sizes: tuple
     probs: tuple
 
@@ -66,9 +72,33 @@ class ShardScheme:
     def total(self) -> int:
         return int(sum(self.sizes))
 
+    @property
+    def max_size(self) -> int:
+        return int(max(self.sizes))
+
+    @property
+    def uniform(self) -> bool:
+        return len(set(self.sizes)) == 1
+
     def as_arrays(self):
         return (jnp.asarray(self.sizes, jnp.float32),
                 jnp.asarray(self.probs, jnp.float32))
+
+    def sizes_array(self) -> jnp.ndarray:
+        """(S,) int32 true shard sizes (pre-padding)."""
+        return jnp.asarray(self.sizes, jnp.int32)
+
+    def starts_array(self) -> jnp.ndarray:
+        """(S,) int32 exclusive-prefix-sum of sizes: global offset of each
+        shard in the virtual ragged concatenation (pooled SGLD sampling)."""
+        sizes = jnp.asarray(self.sizes, jnp.int32)
+        return jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(sizes)[:-1]])
+
+    def valid_mask(self) -> jnp.ndarray:
+        """(S, max_size) bool — True on live rows, False on padding."""
+        cols = jnp.arange(self.max_size)[None, :]
+        return cols < self.sizes_array()[:, None]
 
 
 def make_drift_fn(

@@ -63,32 +63,39 @@ def _gaussian_noise(seed: jax.Array, idx: jax.Array) -> jax.Array:
     return r * jnp.cos((2.0 * jnp.pi) * u2)
 
 
-def _global_idx(block_rows: int) -> jax.Array:
-    """uint32 global element index for the current grid block."""
+def _global_idx(block_rows: int, blocks_per_chain: int) -> jax.Array:
+    """uint32 element index WITHIN the current chain's parameter vector.
+
+    The grid is chain-major: blocks [c*bpc, (c+1)*bpc) belong to chain c, so
+    the in-chain block index is ``pid % blocks_per_chain``. With one chain
+    (bpc == grid size) this reduces to the global index — bit-identical to
+    the original single-chain kernel.
+    """
     pid = pl.program_id(0)
-    base = (pid * block_rows * LANE).astype(jnp.uint32)
+    base = ((pid % blocks_per_chain) * block_rows * LANE).astype(jnp.uint32)
     row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 0)
     col = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 1)
     return base + row * jnp.uint32(LANE) + col
 
 
-def _update(theta, drift, sc, seed, block_rows):
+def _update(theta, drift, sc, seed, block_rows, bpc):
     h = sc[0, S_H]
     sig = jnp.sqrt(h * sc[0, S_TEMP])
-    xi = _gaussian_noise(seed, _global_idx(block_rows))
+    xi = _gaussian_noise(seed, _global_idx(block_rows, bpc))
     return theta + (h * 0.5) * drift + sig * xi
 
 
-def _kernel_plain(seed_ref, sc_ref, th_ref, g_ref, out_ref, *, block_rows):
+def _kernel_plain(seed_ref, sc_ref, th_ref, g_ref, out_ref, *, block_rows,
+                  bpc):
     sc = sc_ref[...]
     th = th_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g
-    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows)
+    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows, bpc)
 
 
 def _kernel_scalar(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, out_ref,
-                   *, block_rows):
+                   *, block_rows, bpc):
     sc = sc_ref[...]
     th = th_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
@@ -97,11 +104,11 @@ def _kernel_scalar(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, out_ref,
     cond = sc[0, S_LAMG] * (mg - th) \
         - (sc[0, S_LAMS] / sc[0, S_FS]) * (ms - th)
     drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
-    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows)
+    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows, bpc)
 
 
 def _kernel_diag(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, lg_ref,
-                 ls_ref, out_ref, *, block_rows):
+                 ls_ref, out_ref, *, block_rows, bpc):
     sc = sc_ref[...]
     th = th_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
@@ -111,43 +118,59 @@ def _kernel_diag(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, lg_ref,
     ls = ls_ref[...].astype(jnp.float32)
     cond = lg * (mg - th) - (ls / sc[0, S_FS]) * (ms - th)
     drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
-    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows)
+    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows, bpc)
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "interpret",
-                                             "block_rows"))
+                                             "block_rows", "chains"))
 def fsgld_update_2d(theta2d: jax.Array, g2d: jax.Array, seed: jax.Array,
                     scalars: jax.Array, *, variant: str = "plain",
                     mu_g=None, mu_s=None, lam_g=None, lam_s=None,
                     interpret: bool = False,
-                    block_rows: int = BLOCK_ROWS) -> jax.Array:
+                    block_rows: int = BLOCK_ROWS,
+                    chains: int = 1) -> jax.Array:
     """Run the fused update on (rows, 128)-shaped operands.
 
-    scalars: (1, 8) f32 row [h, scale, f_s, prior_prec, alpha, temperature,
-    lam_g, lam_s]; seed: (1,) uint32.
+    scalars: (chains, 8) f32 rows [h, scale, f_s, prior_prec, alpha,
+    temperature, lam_g, lam_s]; seed: (chains,) uint32.
+
+    CHAIN-BATCHED mode (``chains`` > 1): the leading ``rows`` axis is
+    chain-major — rows [c*rows_c, (c+1)*rows_c) hold chain c's parameters
+    (rows_c = rows / chains). Per-chain operands (theta, g, mu_s, lam_s) are
+    full-height; per-chain *scalars* and *seeds* are selected by the
+    BlockSpec index map ``i // bpc`` and SHARED operands (mu_g, lam_g — the
+    global surrogate, identical for every chain) are (rows_c, 128) and
+    re-read per chain via ``i % bpc``, so one pallas_call covers the whole
+    chain block in a single HBM pass with no broadcast materialisation.
+    Noise streams are per-chain (seed c + in-chain element index), making
+    the batched kernel bit-identical to ``chains`` separate calls.
     """
     rows = theta2d.shape[0]
     assert theta2d.shape[1] == LANE, theta2d.shape
-    br = min(block_rows, rows)
-    assert rows % br == 0, (rows, br)
+    assert rows % chains == 0, (rows, chains)
+    rows_c = rows // chains
+    br = min(block_rows, rows_c)
+    assert rows_c % br == 0, (rows_c, br)
+    bpc = rows_c // br  # blocks per chain
     grid = (rows // br,)
 
     tile = pl.BlockSpec((br, LANE), lambda i: (i, 0))
-    scalar_spec = pl.BlockSpec((1, 8), lambda i: (0, 0))
-    seed_spec = pl.BlockSpec((1,), lambda i: (0,))
+    shared_tile = pl.BlockSpec((br, LANE), lambda i: (i % bpc, 0))
+    scalar_spec = pl.BlockSpec((1, 8), lambda i: (i // bpc, 0))
+    seed_spec = pl.BlockSpec((1,), lambda i: (i // bpc,))
 
     if variant == "plain":
-        kernel = functools.partial(_kernel_plain, block_rows=br)
+        kernel = functools.partial(_kernel_plain, block_rows=br, bpc=bpc)
         ops = [theta2d, g2d]
         specs = [tile, tile]
     elif variant == "scalar":
-        kernel = functools.partial(_kernel_scalar, block_rows=br)
+        kernel = functools.partial(_kernel_scalar, block_rows=br, bpc=bpc)
         ops = [theta2d, g2d, mu_g, mu_s]
-        specs = [tile, tile, tile, tile]
+        specs = [tile, tile, shared_tile, tile]
     elif variant == "diag":
-        kernel = functools.partial(_kernel_diag, block_rows=br)
+        kernel = functools.partial(_kernel_diag, block_rows=br, bpc=bpc)
         ops = [theta2d, g2d, mu_g, mu_s, lam_g, lam_s]
-        specs = [tile] * 6
+        specs = [tile, tile, shared_tile, tile, shared_tile, tile]
     else:
         raise ValueError(variant)
 

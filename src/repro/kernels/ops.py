@@ -81,6 +81,123 @@ def fused_update_flat(theta: jax.Array, g: jax.Array, seed: jax.Array, *,
     return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
 
 
+def fused_update_chains_flat(theta: jax.Array, g: jax.Array,
+                             seeds: jax.Array, *, h, scale, f_s,
+                             prior_prec=0.0, alpha=0.0, temperature=1.0,
+                             mu_g=None, mu_s=None, lam_g=None, lam_s=None,
+                             block_rows: int = 256,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """CHAIN-BATCHED fused update: one pallas_call over a whole chain block.
+
+    theta, g: (C, ...) stacked per-chain tensors; seeds: (C,) uint32;
+    scale, f_s: per-chain scalars (C,) — each chain is resident at a
+    different client so its unbiasing factor N_s/(f_s m) differs.
+    mu_g / lam_g: the GLOBAL surrogate, shared by every chain ((P,) or
+    scalar lam); mu_s / lam_s: per-chain resident-client surrogates
+    ((C, P), or (C,) scalar lams). The kernel reads shared operands once
+    per chain via BlockSpec index maps instead of materialising a (C, P)
+    broadcast, so the hot elementwise update stays one HBM pass per
+    chain-block. Bit-identical to C separate fused_update_flat calls.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    C = theta.shape[0]
+    orig_shape, orig_dtype = theta.shape, theta.dtype
+    per_block = block_rows * LANE
+
+    def pad_chains(x):  # (C, ...) -> (C*rows_c, LANE)
+        x = x.reshape(C, -1).astype(jnp.float32)
+        n = x.shape[1]
+        padded = -(-n // per_block) * per_block
+        x = jnp.pad(x, ((0, 0), (0, padded - n)))
+        return x.reshape(C * (padded // LANE), LANE)
+
+    def pad_shared(x):  # (P,) -> (rows_c, LANE)
+        return _pad_2d(x.reshape(-1), block_rows)[0]
+
+    n = theta.reshape(C, -1).shape[1]
+    th2 = pad_chains(theta)
+    g2 = pad_chains(g)
+    rows_c = th2.shape[0] // C
+
+    scale_c = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (C,))
+    fs_c = jnp.broadcast_to(jnp.asarray(f_s, jnp.float32), (C,))
+
+    if mu_g is None:
+        variant = "plain"
+        kw = {}
+        lam_rows = (jnp.zeros((C,), jnp.float32),) * 2
+    elif jnp.ndim(lam_g) == 0:
+        variant = "scalar"
+        kw = {"mu_g": pad_shared(mu_g), "mu_s": pad_chains(mu_s)}
+        lam_rows = (jnp.broadcast_to(jnp.asarray(lam_g, jnp.float32), (C,)),
+                    jnp.broadcast_to(jnp.asarray(lam_s, jnp.float32), (C,)))
+    else:
+        variant = "diag"
+        kw = {"mu_g": pad_shared(mu_g), "mu_s": pad_chains(mu_s),
+              "lam_g": pad_shared(lam_g), "lam_s": pad_chains(lam_s)}
+        lam_rows = (jnp.zeros((C,), jnp.float32),) * 2
+
+    def col(v):
+        return jnp.broadcast_to(jnp.asarray(v, jnp.float32), (C,))
+
+    sc = jnp.stack([col(h), scale_c, fs_c, col(prior_prec), col(alpha),
+                    col(temperature), lam_rows[0], lam_rows[1]], axis=1)
+    br = min(block_rows, rows_c)
+    out = fsgld_update_2d(th2, g2, seeds.astype(jnp.uint32), sc,
+                          variant=variant, interpret=interpret,
+                          block_rows=br, chains=C, **kw)
+    return (out.reshape(C, -1)[:, :n].reshape(orig_shape)
+            .astype(orig_dtype))
+
+
+def fused_update_chains_tree(theta: PyTree, g: PyTree, keys: jax.Array, *,
+                             h, scale, f_s, prior_prec=0.0, alpha=0.0,
+                             temperature=1.0, bank=None, sids=None,
+                             surrogate_kind: Optional[str] = None) -> PyTree:
+    """Chain-batched fused update across a parameter pytree whose leaves
+    carry a leading chain axis (C, ...).
+
+    keys: (C, 2) per-chain PRNG keys; scale/f_s: (C,) per-chain factors;
+    bank: SurrogateBank ('diag' or 'scalar') with sids (C,) selecting each
+    chain's resident client, or None for SGLD/DSGLD. Per-leaf per-chain
+    seeds are derived exactly as fused_update_tree does per chain, so the
+    result bit-matches a vmap of the single-chain kernel path.
+    """
+    leaves, treedef = jax.tree.flatten(theta)
+    gleaves = jax.tree.leaves(g)
+    L = len(leaves)
+    all_seeds = jax.vmap(lambda k: jax.random.split(k, L))(keys)  # (C, L, 2)
+
+    if bank is None:
+        mu_gs = mu_ss = lg = ls = [None] * L
+    elif surrogate_kind == "diag":
+        assert L == 1, "diag surrogates operate on flat vectors"
+        mu_gs, lg = [bank.global_.mean], [bank.global_.prec]
+        mu_ss, ls = [bank.means[sids]], [bank.precs[sids]]
+    elif surrogate_kind == "scalar":
+        mu_gs = jax.tree.leaves(bank.global_.mean)
+        lg = jax.tree.leaves(bank.global_.prec)
+        mu_ss = [m[sids] for m in jax.tree.leaves(bank.means)]
+        ls = [p[sids] for p in jax.tree.leaves(bank.precs)]
+    else:
+        raise ValueError(surrogate_kind)
+
+    out = []
+    for i, (t, gg) in enumerate(zip(leaves, gleaves)):
+        seed_c = jax.vmap(
+            lambda s: jax.random.randint(s, (), 0, 2**31 - 1)
+            .astype(jnp.uint32))(all_seeds[:, i])
+        out.append(fused_update_chains_flat(
+            t, gg, seed_c, h=h, scale=scale, f_s=f_s,
+            prior_prec=prior_prec, alpha=alpha, temperature=temperature,
+            mu_g=mu_gs[i], mu_s=mu_ss[i],
+            lam_g=(jnp.asarray(lg[i], jnp.float32)
+                   if lg[i] is not None else None),
+            lam_s=(jnp.asarray(ls[i], jnp.float32)
+                   if ls[i] is not None else None)))
+    return jax.tree.unflatten(treedef, out)
+
+
 def fused_update_tree(theta: PyTree, g: PyTree, key: jax.Array, *, h, scale,
                       f_s=1.0, prior_prec=0.0, alpha=0.0, temperature=1.0,
                       q_global=None, q_shard=None,

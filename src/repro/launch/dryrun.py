@@ -149,6 +149,8 @@ def collective_bytes_from_text(txt: str) -> dict:
 def analyze(lowered, compiled) -> dict:
     from repro.roofline.hlo_analysis import analyze_text
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     txt = compiled.as_text()
     coll = collective_bytes_from_text(txt)

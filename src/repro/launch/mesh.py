@@ -20,3 +20,11 @@ def make_host_mesh():
     """1x1 mesh over the real local device — used by smoke tests/examples
     so the same pjit code path runs on this CPU container."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_sim_mesh(data: int = 1, model: int = 1):
+    """(data, model) mesh over however many devices are visible — the chain
+    runtime's mesh for subprocess SPMD tests (XLA_FLAGS-forced host devices)
+    and for right-sized slices of a real cluster. data = chain groups,
+    model = shard-parallel surrogate/gradient work (core/engine.py)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -131,8 +131,9 @@ def make_federated_round(cfg: ArchConfig, sampler: SamplerConfig, mesh, *,
     compile-time static, so the i.i.d.-categorical variant lives only in
     the simulator; see DESIGN.md Sec 4.1).
     """
-    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.rules import chain_spec
 
     f_s = 1.0 / n_chains
     step = make_train_step(cfg, sampler, scale=scale, f_s=f_s)
@@ -156,7 +157,7 @@ def make_federated_round(cfg: ArchConfig, sampler: SamplerConfig, mesh, *,
                              chain)
         return (jax.tree.map(lambda x: x[None], chain), lls[None])
 
-    pspec = P("data")
+    pspec = chain_spec()  # chains ride the 'data' axis (sharding/rules.py)
     return shard_map(
         local_round, mesh=mesh,
         in_specs=(pspec, pspec, pspec, pspec),

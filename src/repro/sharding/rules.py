@@ -176,3 +176,26 @@ def surrogate_specs(params_specs: PyTree) -> PyTree:
     """Surrogate means shard exactly like the params they mirror; scalar
     precisions replicate."""
     return params_specs
+
+
+# ---------------------------------------------------------------------------
+# chain-parallel (federated) layout: the mesh chain runtime (core/engine.py)
+# and the large-model federated round (launch/steps.py) both place chains
+# along the 'data' axis — one source of truth for that convention here.
+# ---------------------------------------------------------------------------
+
+CHAIN_AXIS = "data"
+
+
+def chain_spec() -> P:
+    """PartitionSpec prefix placing a leading chain axis on 'data'."""
+    return P(CHAIN_AXIS)
+
+
+def chain_specs(tree: PyTree) -> PyTree:
+    """Per-leaf chain-axis specs for a pytree of (C, ...) chain states."""
+    return jax.tree.map(lambda _: P(CHAIN_AXIS), tree)
+
+
+def chain_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P(CHAIN_AXIS)), tree)

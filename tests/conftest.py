@@ -1,0 +1,21 @@
+"""Suite-wide setup.
+
+Gates the optional ``hypothesis`` dependency: the container image this repo
+targets does not ship it (and installing packages is not always possible),
+so when the real package is missing we register the deterministic stand-in
+from ``tests/_mini_hypothesis.py`` under the ``hypothesis`` module name
+before test modules import it. CI installs the real package via
+``pip install -e .[dev]`` and takes priority automatically.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:  # pragma: no cover - exercised implicitly by every property test
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _mini_hypothesis
+
+    sys.modules["hypothesis"] = _mini_hypothesis
+    sys.modules["hypothesis.strategies"] = _mini_hypothesis.strategies

@@ -1,0 +1,262 @@
+"""Mesh-parallel chain runtime (core/engine.py) correctness.
+
+The contract under test: the shard_map executor on the 1x1 host mesh is
+BIT-IDENTICAL (exact fp32 equality, noise included) to the legacy vmap
+loop for all three methods; permutation reassignment is collision-free
+every round even with ragged clients; padded rows are provably dead (NaN
+poison); and the chain-batched Pallas entry point equals per-chain kernel
+calls elementwise.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, MeshChainEngine, make_bank,
+                        pad_shards, refresh_bank, refresh_bank_mesh,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.kernels import ops
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem(key, S=5, n=40, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _ragged_problem(key, S=5, d=3):
+    base = jax.random.normal(key, (S, 64, d)) + jnp.arange(S)[:, None, None]
+    per_shard = [{"x": base[s, : 12 + 9 * s]} for s in range(S)]
+    stacked, sizes = pad_shards(per_shard)  # NaN pad: touching it poisons
+    xs = [p["x"] for p in per_shard]
+    mu = jnp.stack([x.mean(0) for x in xs])
+    prec = jnp.stack([jnp.full((d,), float(x.shape[0])) for x in xs])
+    return stacked, sizes, make_bank(mu, prec, "diag")
+
+
+# ---------------------------------------------------------------------------
+# exact equality with the legacy vmap executor (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["sgld", "dsgld", "fsgld"])
+def test_mesh_engine_bitmatches_legacy_vmap(method):
+    data, bank = _problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=5,
+                        local_updates=5, prior_precision=1.0)
+    samp = FederatedSampler(log_lik, cfg, data, minibatch=8,
+                            bank=bank if method == "fsgld" else None)
+    a = samp.run_vmap(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
+    b = samp.run(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
+    assert a.shape == b.shape == (4, 20, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mesh_engine_bitmatches_legacy_permutation_mode():
+    data, bank = _problem(jax.random.PRNGKey(1))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=3, prior_precision=1.0)
+    samp = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank)
+    a = samp.run_vmap(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=4,
+                      reassign="permutation")
+    b = samp.run(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=4,
+                 reassign="permutation")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# permutation reassignment: collision-free every round, ragged clients
+# ---------------------------------------------------------------------------
+
+def test_permutation_reassignment_valid_every_round_ragged():
+    stacked, sizes, bank = _ragged_problem(jax.random.PRNGKey(2))
+    S = len(sizes)
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=2, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, stacked, minibatch=6, bank=bank,
+                          sizes=sizes)
+    C = 4
+    key = jax.random.PRNGKey(9)
+    seen = []
+    for _ in range(20):  # replicate run()'s per-round key stream
+        key, k_assign, _ = jax.random.split(key, 3)
+        sids = np.asarray(eng._permute_sids(k_assign, C))
+        # a valid injective assignment into [0, S)
+        assert sids.shape == (C,)
+        assert len(set(sids.tolist())) == C, sids
+        assert sids.min() >= 0 and sids.max() < S, sids
+        # and identical to the legacy host-side slice
+        legacy = np.asarray(jax.random.permutation(k_assign, S)[:C])
+        np.testing.assert_array_equal(sids, legacy)
+        seen.append(tuple(sids.tolist()))
+    assert len(set(seen)) > 1, "reassignment never changed"
+
+
+def test_ragged_shards_pad_rows_never_sampled():
+    """Pad rows hold NaN; any estimator touching one would poison the
+    chain. All three methods must stay finite."""
+    stacked, sizes, bank = _ragged_problem(jax.random.PRNGKey(4))
+    S = len(sizes)
+    for method in ["sgld", "dsgld", "fsgld"]:
+        cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=S,
+                            local_updates=3, prior_precision=1.0)
+        eng = MeshChainEngine(log_lik, cfg, stacked, minibatch=6,
+                              bank=bank if method == "fsgld" else None,
+                              sizes=sizes)
+        tr = eng.run(jax.random.PRNGKey(5), jnp.zeros(3), 3, n_chains=4,
+                     reassign="permutation" if method != "sgld"
+                     else "categorical")
+        assert bool(jnp.all(jnp.isfinite(tr))), method
+
+
+# ---------------------------------------------------------------------------
+# chain-batched fused kernel path
+# ---------------------------------------------------------------------------
+
+def test_kernel_engine_runs_four_chains_through_shard_map():
+    """Acceptance: a >=4-chain run through the shard_map path with the
+    Pallas kernel enabled, bit-equal to the legacy per-chain kernel vmap."""
+    data, bank = _problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=4, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=8, bank=bank,
+                          use_kernel=True)
+    tr = eng.run(jax.random.PRNGKey(7), jnp.zeros(3), 3, n_chains=4)
+    assert tr.shape == (4, 12, 3)
+    assert bool(jnp.all(jnp.isfinite(tr)))
+    legacy = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank,
+                              use_kernel=True)
+    ref = legacy.run_vmap(jax.random.PRNGKey(7), jnp.zeros(3), 3,
+                          n_chains=4)
+    np.testing.assert_array_equal(np.asarray(tr), np.asarray(ref))
+
+
+def test_kernel_engine_ignores_bank_for_non_fsgld():
+    """A resident bank must NOT leak a conducive term into DSGLD updates
+    (regression: the chain-batched round once passed it unconditionally)."""
+    data, bank = _problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=5,
+                        local_updates=3, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=8, bank=bank,
+                          use_kernel=True)
+    tr = eng.run(jax.random.PRNGKey(7), jnp.zeros(3), 2, n_chains=4)
+    legacy = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank,
+                              use_kernel=True)
+    ref = legacy.run_vmap(jax.random.PRNGKey(7), jnp.zeros(3), 2,
+                          n_chains=4)
+    np.testing.assert_array_equal(np.asarray(tr), np.asarray(ref))
+
+
+@pytest.mark.parametrize("variant", ["plain", "scalar", "diag"])
+def test_chain_batched_kernel_equals_per_chain_calls(variant):
+    key = jax.random.PRNGKey(0)
+    C, P = 4, 1000
+    ks = jax.random.split(key, 8)
+    th = jax.random.normal(ks[0], (C, P))
+    g = jax.random.normal(ks[1], (C, P))
+    seeds = jnp.arange(1, C + 1, dtype=jnp.uint32) * 7919
+    scale = jnp.linspace(10.0, 40.0, C)
+    f_s = jnp.linspace(0.1, 0.4, C)
+    kw = dict(h=1e-4, prior_prec=1.0, alpha=1.0, temperature=1.0)
+    if variant == "plain":
+        extra = dict(mu_g=None, mu_s=None, lam_g=None, lam_s=None)
+    elif variant == "scalar":
+        extra = dict(mu_g=jax.random.normal(ks[2], (P,)),
+                     mu_s=jax.random.normal(ks[3], (C, P)),
+                     lam_g=jnp.float32(0.7),
+                     lam_s=jnp.abs(jax.random.normal(ks[4], (C,))) + 0.1)
+    else:
+        extra = dict(mu_g=jax.random.normal(ks[2], (P,)),
+                     mu_s=jax.random.normal(ks[3], (C, P)),
+                     lam_g=jnp.abs(jax.random.normal(ks[5], (P,))) + 0.1,
+                     lam_s=jnp.abs(jax.random.normal(ks[6], (C, P))) + 0.1)
+
+    batched = ops.fused_update_chains_flat(th, g, seeds, scale=scale,
+                                           f_s=f_s, **kw, **extra)
+    for c in range(C):
+        one = ops.fused_update_flat(
+            th[c], g[c], seeds[c], scale=scale[c], f_s=f_s[c], **kw,
+            mu_g=extra["mu_g"],
+            mu_s=None if extra["mu_s"] is None else extra["mu_s"][c],
+            lam_g=extra["lam_g"],
+            lam_s=None if extra["lam_s"] is None else extra["lam_s"][c])
+        np.testing.assert_array_equal(np.asarray(batched[c]),
+                                      np.asarray(one), err_msg=f"chain {c}")
+
+
+# ---------------------------------------------------------------------------
+# model-axis surrogate work
+# ---------------------------------------------------------------------------
+
+def test_mesh_refresh_matches_serial_refresh():
+    data, _ = _problem(jax.random.PRNGKey(6), S=4, n=24, d=3)
+    theta = jnp.array([0.1, -0.2, 0.3])
+    from repro.launch.mesh import make_host_mesh
+    serial = refresh_bank(log_lik, data, theta)
+    mesh = refresh_bank_mesh(log_lik, data, theta, make_host_mesh())
+    np.testing.assert_allclose(np.asarray(mesh.means),
+                               np.asarray(serial.means), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(mesh.precs),
+                               np.asarray(serial.precs), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# true SPMD: multi-device data/model axes in a subprocess
+# ---------------------------------------------------------------------------
+
+def test_engine_multidevice_matches_host_mesh_subprocess():
+    """4 chains on a (2, 2) forced-host-device mesh reproduce the 1x1 host
+    mesh run exactly, and the model-axis refresh splits S over 2 groups."""
+    script = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, MeshChainEngine, make_bank,
+                        refresh_bank, refresh_bank_mesh,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.launch.mesh import make_sim_mesh
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+key = jax.random.PRNGKey(0)
+S, n, d = 4, 24, 3
+x = jax.random.normal(key, (S, n, d)) + jnp.arange(S)[:, None, None]
+mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+bank = make_bank(mu_s, prec_s, "diag")
+cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                    local_updates=3, prior_precision=1.0)
+mesh = make_sim_mesh(data=2, model=2)
+eng = MeshChainEngine(log_lik, cfg, {"x": x}, minibatch=6, bank=bank,
+                      mesh=mesh)
+tr = eng.run(jax.random.PRNGKey(7), jnp.zeros(d), 3, n_chains=4,
+             reassign="permutation")
+samp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=6, bank=bank)
+ref = samp.run_vmap(jax.random.PRNGKey(7), jnp.zeros(d), 3, n_chains=4,
+                    reassign="permutation")
+np.testing.assert_array_equal(np.asarray(tr), np.asarray(ref))
+theta = jnp.array([0.1, -0.2, 0.3])
+bm = refresh_bank_mesh(log_lik, {"x": x}, theta, mesh)
+bs = refresh_bank(log_lik, {"x": x}, theta)
+np.testing.assert_allclose(np.asarray(bm.means), np.asarray(bs.means),
+                           rtol=1e-6)
+print("MESH_ENGINE_SPMD_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "MESH_ENGINE_SPMD_OK" in r.stdout, (r.stdout, r.stderr[-2000:])

@@ -162,6 +162,7 @@ def gaussian_mean_runs():
     return out
 
 
+@pytest.mark.slow  # the shared fixture runs 3 x 30k-step chains (~50s)
 def test_fsgld_converges_where_dsgld_drifts(gaussian_mean_runs):
     """Paper Fig 2/3: with 100 local updates DSGLD drifts toward the local
     mixture; FSGLD stays on the true posterior."""
@@ -170,5 +171,6 @@ def test_fsgld_converges_where_dsgld_drifts(gaussian_mean_runs):
         gaussian_mean_runs
 
 
+@pytest.mark.slow
 def test_sgld_baseline_converges(gaussian_mean_runs):
     assert gaussian_mean_runs["sgld"] < 5e-3, gaussian_mean_runs

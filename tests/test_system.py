@@ -15,6 +15,7 @@ from repro import checkpoint
 from repro.models import init_params
 
 
+@pytest.mark.slow  # full smoke train driver, ~40s on the CPU container
 def test_train_driver_runs(tmp_path):
     from repro.launch.train import main
     rc = main(["--arch", "rwkv6-7b", "--smoke", "--rounds", "2",
@@ -138,5 +139,8 @@ def test_hlo_analyzer_matches_xla_on_loop_free():
           for s in [(64, 128), (128, 32), (16, 64)]]
     c = jax.jit(g).lower(*xs).compile()
     got = analyze_text(c.as_text())["flops"]
-    want = c.cost_analysis()["flops"]
+    cost = c.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax<=0.4.x: one dict per program
+        cost = cost[0]
+    want = cost["flops"]
     assert abs(got - want) / want < 0.05, (got, want)
