@@ -1,0 +1,117 @@
+"""CI steps/s regression gate.
+
+Compares a freshly produced BENCH json (repro-bench-v1 envelope,
+benchmarks/common.py) against a committed baseline and fails when any
+matched throughput row regresses by more than the threshold:
+
+    python benchmarks/check_regression.py bench-smoke.json \
+        benchmarks/BENCH_chains.json --threshold 0.30
+
+Gate semantics:
+  * no baseline file            -> SKIP (exit 0) — the lane still runs
+    and uploads its artifact, the gate just has nothing to compare to;
+  * scale mismatch              -> SKIP (exit 0) — a SCALE=0.01 smoke run
+    is not comparable to a SCALE=1 baseline;
+  * only rows whose note marks them as throughput ("chain-steps/s") and
+    that exist in BOTH files by name are gated; new/removed rows are
+    reported, not failed;
+  * ratios are NORMALIZED by a machine speed factor before thresholding:
+    the baseline was recorded on a different machine than the CI runner,
+    and a uniform speed difference must not fail every row. The factor is
+    the median current/baseline ratio over the CONTROL rows (the legacy
+    ``chains/vmap/`` lanes, which bypass the engine code paths under
+    gate), so an engine-wide regression cannot hide inside its own
+    normalizer; when no control rows match, the all-row median is the
+    fallback (weaker: a slowdown hitting most rows is then absorbed).
+
+Known blind spots of control-row normalization (accepted for a smoke
+lane): a regression confined to the CONTROL path itself is not gated
+(the control is the reference, and it measures the legacy executor, not
+the engine paths this gate protects), and an optimization that speeds
+up ONLY the control path lowers every engine row's normalized ratio and
+can fail the lane with no real regression — when intentionally changing
+the legacy vmap path, regenerate the baseline in the same commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import statistics
+import sys
+
+THROUGHPUT_MARK = "chain-steps/s"
+CONTROL_PREFIX = "chains/vmap/"
+
+
+def _rows(env: dict) -> dict:
+    return {r["name"]: r for r in env.get("rows", [])
+            if THROUGHPUT_MARK in r.get("note", "")
+            and math.isfinite(r.get("derived", float("nan")))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated fractional steps/s drop")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}: gate SKIPPED")
+        return 0
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    if cur.get("schema") != base.get("schema"):
+        print(f"schema mismatch ({cur.get('schema')} vs "
+              f"{base.get('schema')}): gate SKIPPED")
+        return 0
+    if cur.get("scale") != base.get("scale"):
+        print(f"scale mismatch (current {cur.get('scale')} vs baseline "
+              f"{base.get('scale')}): gate SKIPPED")
+        return 0
+
+    cur_rows, base_rows = _rows(cur), _rows(base)
+    shared = sorted(set(cur_rows) & set(base_rows))
+    if not shared:
+        print("no overlapping throughput rows: gate SKIPPED")
+        return 0
+    for name in sorted(set(base_rows) - set(cur_rows)):
+        print(f"~ {name}: in baseline only (not gated)")
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        print(f"~ {name}: new row (not gated)")
+
+    ratios = {n: (cur_rows[n]["derived"] / base_rows[n]["derived"]
+                  if base_rows[n]["derived"] else float("inf"))
+              for n in shared}
+    control = [r for n, r in ratios.items()
+               if n.startswith(CONTROL_PREFIX)]
+    speed = statistics.median(control if control
+                              else list(ratios.values()))
+    print(f"machine speed factor ({'control' if control else 'all'}-row "
+          f"median ratio): {speed:.2f}x")
+
+    failed = []
+    for name in shared:
+        c, b = cur_rows[name]["derived"], base_rows[name]["derived"]
+        rel = ratios[name] / speed if speed else float("inf")
+        flag = "FAIL" if rel < 1.0 - args.threshold else "ok"
+        print(f"{flag:4s} {name}: {c:.6g} vs baseline {b:.6g} "
+              f"({ratios[name]:.2f}x raw, {rel:.2f}x speed-normalized)")
+        if flag == "FAIL":
+            failed.append(name)
+    if failed:
+        print(f"steps/s regressed >{args.threshold:.0%} on "
+              f"{len(failed)} row(s): {failed}", file=sys.stderr)
+        return 1
+    print(f"gate passed: {len(shared)} row(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,10 +30,21 @@ indices are drawn in [0, N_s) only, so pad rows are never touched (tests
 fill them with NaN to prove it).
 
 The fused Pallas kernel path (``use_kernel=True``) routes the whole chain
-block through the CHAIN-BATCHED entry point
-(``kernels.ops.fused_update_chains_tree``) — one ``pallas_call`` per leaf
-per step for the entire block instead of a vmap over single-chain kernels,
-keeping the hot elementwise update one HBM pass per chain-block.
+block through the PACKED single-launch executor (PR 2): the entire
+parameter pytree of the block lives in one chain-major
+``(C * rows_total, 128)`` buffer (``kernels.ops.PackedChains``), packed
+ONCE per run, and every step issues exactly ONE ``pallas_call`` covering
+all leaves of all chains via a static segment table. ``packed=False``
+falls back to the PR 1 per-leaf chain-batched entry
+(``kernels.ops.fused_update_chains_tree`` — one ``pallas_call`` per leaf
+per step).
+
+``run`` itself is a single jitted ``lax.scan`` over communication rounds
+(per mode/shape, cached): reassignment (categorical + SPMD permutation),
+round key-splitting, and thinned trace collection all happen inside the
+scan, chain state is donated instead of copied, and the trace comes back
+preallocated as ``(C, R * T/collect_every, ...)`` — no host dispatch and
+no trailing concatenate in the hot loop.
 """
 from __future__ import annotations
 
@@ -46,8 +57,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SamplerConfig
-from repro.core.sampler import LogLikFn, ShardScheme, make_step_fn
+from repro.core.sampler import (LogLikFn, ShardScheme, chain_scales,
+                                make_step_fn)
 from repro.core.surrogate import SurrogateBank, make_bank
+from repro.kernels import ops as kops
 from repro.sharding.rules import chain_spec
 
 PyTree = Any
@@ -149,10 +162,7 @@ def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     Returns round(thetas, keys, sids, shard_data, bank) operating on
     (C_blk, ...)-stacked chain states.
     """
-    from repro.kernels import ops as kops
-
     sample = _make_batch_sampler(cfg, scheme, minibatch)
-    sizes_f, probs_f = scheme.as_arrays()
     grad_fn = jax.grad(log_lik_fn)
     # only FSGLD carries the conducive correction — mirror the gating in
     # make_step_fn's kernel path, else a resident bank would silently add
@@ -164,13 +174,7 @@ def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     def round_fn(thetas, keys, sids, shard_data, bank=None):
         if not use_surrogate:
             bank = None
-        C = keys.shape[0]
-        if cfg.method == "sgld":
-            scale = jnp.full((C,), scheme.total / minibatch, jnp.float32)
-            f_s = jnp.ones((C,), jnp.float32)
-        else:
-            f_s = probs_f[sids]
-            scale = sizes_f[sids] / (f_s * minibatch)
+        scale, f_s = chain_scales(cfg, scheme, sids, minibatch)
 
         def body(carry, ks):
             thetas = carry
@@ -198,6 +202,129 @@ def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     return round_fn
 
 
+def _perm_sids_slice(k_assign: jax.Array, num_shards: int, start,
+                     per: int) -> jax.Array:
+    """Collision-free reassignment, SPMD: every device derives the SAME
+    permutation of [0, S) from the replicated round key and slices its own
+    chain block. Equals the host-side ``permutation(k, S)[:C]`` bitwise.
+    Shared by the scanned round body and ``_permute_sids``."""
+    return jax.lax.dynamic_slice_in_dim(
+        jax.random.permutation(k_assign, num_shards), start, per)
+
+
+def pack_bank(layout: kops.PackedChains, bank: Optional[SurrogateBank]):
+    """SurrogateBank -> packed operands for the single-launch round body.
+
+    Shared (global) surrogate operands are packed ONCE here — per-round
+    work is only the ``[sids]`` row gather in the round body. Per-shard
+    stacks keep a leading S axis: (S, rows_total, 128).
+    """
+    if bank is None:
+        return None
+    if bank.kind == "diag":
+        return {
+            "mu_g": layout.pack_shared(bank.global_.mean),
+            "lam_g": layout.pack_shared(bank.global_.prec),
+            "means": layout.pack(bank.means).reshape(
+                -1, layout.rows_total, kops.LANE),
+            "precs": layout.pack(bank.precs).reshape(
+                -1, layout.rows_total, kops.LANE),
+        }
+    if bank.kind == "scalar":
+        return {
+            "mu_g": layout.pack_shared(bank.global_.mean),
+            "means": layout.pack(bank.means).reshape(
+                -1, layout.rows_total, kops.LANE),
+            # per-leaf scalar precisions ride in the (C, L, 8) scalar rows
+            "lam_g_leaf": jnp.stack([
+                jnp.asarray(p, jnp.float32)
+                for p in jax.tree.leaves(bank.global_.prec)]),
+            "lam_s_leaf": jnp.stack([
+                jnp.asarray(p, jnp.float32)
+                for p in jax.tree.leaves(bank.precs)], axis=1),
+        }
+    raise ValueError(bank.kind)
+
+
+def make_packed_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
+                         scheme: ShardScheme, minibatch: int,
+                         bank_kind: Optional[str],
+                         layout: kops.PackedChains, collect: bool = True):
+    """SINGLE-LAUNCH round for the packed executor: the chain block's whole
+    parameter pytree lives in one chain-major packed buffer and every step
+    issues exactly one ``pallas_call`` (kernels.ops.packed_step).
+
+    State is the pair ``(packed, thetas)``: the packed buffer is
+    authoritative; the unpacked pytree mirror feeds the gradient pass and
+    trace collection, so the scan body contains NO pad/ravel work — leaf
+    gradients are written into the packed gradient buffer by static
+    update-slices, and the only per-round (not per-step) work is gathering
+    the resident-client surrogate rows and prebuilding the scalar rows.
+    RNG streams (batch draws, per-(chain, leaf) noise seeds) are derived
+    exactly as the per-leaf chain-batched round derives them, so results
+    are bit-identical to it — and therefore to the ``run_vmap`` oracle.
+    """
+    sample = _make_batch_sampler(cfg, scheme, minibatch)
+    grad_fn = jax.grad(log_lik_fn)
+    use_surrogate = cfg.method == "fsgld"
+    if not use_surrogate:
+        bank_kind = None
+    L = layout.num_leaves
+
+    def round_fn(state, keys, sids, shard_data, pbank=None):
+        th_p, thetas = state
+        if not use_surrogate:
+            pbank = None
+        scale, f_s = chain_scales(cfg, scheme, sids, minibatch)
+        mu_g = mu_s = lam_gp = lam_sp = None
+        lam_g_leaf = lam_s_leaf = None
+        if bank_kind is None:
+            variant = "plain"
+        elif bank_kind == "diag":
+            variant = "diag"
+            mu_g, lam_gp = pbank["mu_g"], pbank["lam_g"]
+            mu_s = pbank["means"][sids].reshape(-1, kops.LANE)
+            lam_sp = pbank["precs"][sids].reshape(-1, kops.LANE)
+        elif bank_kind == "scalar":
+            variant = "scalar"
+            mu_g = pbank["mu_g"]
+            mu_s = pbank["means"][sids].reshape(-1, kops.LANE)
+            lam_g_leaf = pbank["lam_g_leaf"]
+            lam_s_leaf = pbank["lam_s_leaf"][sids]
+        else:
+            raise ValueError(bank_kind)
+        scalars = kops.packed_scalar_rows(
+            layout, h=cfg.step_size, scale=scale, f_s=f_s,
+            prior_prec=cfg.prior_precision, alpha=cfg.alpha,
+            temperature=cfg.temperature, lam_g_leaf=lam_g_leaf,
+            lam_s_leaf=lam_s_leaf)
+
+        def body(carry, ks):
+            th_p, thetas = carry
+            kk = jax.vmap(jax.random.split)(ks)       # (C, 2, 2)
+            k_batch, k_step = kk[:, 0], kk[:, 1]
+            batches = jax.vmap(
+                lambda k, s: sample(k, s, shard_data))(k_batch, sids)
+            glls = jax.vmap(grad_fn)(thetas, batches)
+            g_p = layout.pack(glls)
+            seeds = kops.chain_leaf_seeds(k_step, L)
+            th_p = kops.packed_step(
+                layout, th_p, g_p, seeds, scalars, variant=variant,
+                mu_g=mu_g, mu_s=mu_s, lam_g=lam_gp, lam_s=lam_sp)
+            thetas = layout.unpack(th_p)
+            return (th_p, thetas), thetas if collect else None
+
+        keys_t = jax.vmap(lambda k: jax.random.split(
+            k, cfg.local_updates))(keys)              # (C, T, 2)
+        (th_p, thetas), trace = jax.lax.scan(body, (th_p, thetas),
+                                             jnp.swapaxes(keys_t, 0, 1))
+        if collect and trace is not None:
+            trace = jax.tree.map(lambda t: jnp.swapaxes(t, 0, 1), trace)
+        return (th_p, thetas), trace
+
+    return round_fn
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -210,6 +337,14 @@ class MeshChainEngine:
     longest client; ``sizes`` carries true per-client counts (None =>
     uniform, no padding). ``mesh`` must expose ('data', 'model') axes;
     n_chains must divide by the data-axis size.
+
+    ``use_kernel=True`` + ``packed`` (default: auto) selects the
+    single-launch packed executor — one ``pallas_call`` per step for the
+    whole chain block. ``packed=False`` keeps the PR 1 per-leaf
+    chain-batched kernel path; auto falls back to it when a parameter
+    leaf is not fp32 (the packed buffer carries fp32 state across steps,
+    which would skip the per-step dtype round-trip lower-precision
+    parameters get on the per-leaf path).
     """
     log_lik_fn: LogLikFn
     cfg: SamplerConfig
@@ -219,6 +354,7 @@ class MeshChainEngine:
     use_kernel: bool = False
     mesh: Any = None
     sizes: Optional[tuple] = None
+    packed: Optional[bool] = None
 
     def __post_init__(self):
         if self.mesh is None:
@@ -233,61 +369,133 @@ class MeshChainEngine:
         self.scheme = ShardScheme(sizes=sizes, probs=self.cfg.probs())
         self.step_fn = make_step_fn(self.log_lik_fn, self.cfg, self.scheme,
                                     self.bank, use_kernel=False)
-        self._vrounds = {}
+        self._executors = {}
 
     # -- executors ---------------------------------------------------------
 
     def _chain_spec(self):
         return chain_spec()
 
-    def _vround(self, collect: bool):
-        """jit(shard_map(...)) executor for one communication round, built
-        lazily per collect mode and cached."""
-        key = (collect, self.use_kernel)
-        if key in self._vrounds:
-            return self._vrounds[key]
+    def _layout_for(self, theta0: PyTree) -> Optional[kops.PackedChains]:
+        """Resolve the packed layout for this run, or None for the
+        per-leaf paths."""
+        if not self.use_kernel:
+            if self.packed:
+                raise ValueError("packed=True requires use_kernel=True")
+            return None
+        fp32 = all(l.dtype == jnp.float32 for l in jax.tree.leaves(theta0))
+        if self.packed is None and not fp32:
+            return None
+        if self.packed is False:
+            return None
+        if not fp32:
+            raise ValueError("packed executor requires fp32 parameter "
+                             "leaves (carries fp32 state across steps)")
+        return kops.make_packed_layout(theta0)
 
-        if self.use_kernel:
-            chain_round = make_chain_round_fn(
-                self.log_lik_fn, self.cfg, self.scheme, self.minibatch,
-                self.bank.kind if self.bank is not None else None,
-                collect=collect)
+    def _executor(self, *, num_rounds: int, n_chains: int, reassign: str,
+                  collect: bool, collect_every: int,
+                  layout: Optional[kops.PackedChains]):
+        """jit(shard_map(scan-over-rounds)) executor: ONE dispatch runs
+        ``num_rounds`` communication rounds — reassignment, round key
+        splitting, local updates, and thinned trace collection all live
+        inside the scan. Chain state is donated, the trace comes back as
+        a preallocated (C, num_rounds * ceil(T/collect_every), ...) block,
+        and the final round key is returned so chunked callers (adaptive
+        refresh) continue the same stream. Cached per configuration."""
+        cache_key = (num_rounds, n_chains, reassign, collect,
+                     collect_every, layout)
+        if cache_key in self._executors:
+            return self._executors[cache_key]
 
-            def block(chains, keys, sids, shard_data, bank_rt):
-                return chain_round(chains, keys, sids, shard_data, bank_rt)
+        cfg = self.cfg
+        S = cfg.num_shards
+        per = n_chains // self.mesh.shape["data"]
+        probs = jnp.asarray(cfg.probs())
+        bank_kind = self.bank.kind if self.bank is not None else None
+
+        if layout is not None:
+            round_fn = make_packed_round_fn(
+                self.log_lik_fn, cfg, self.scheme, self.minibatch,
+                bank_kind, layout, collect=collect)
+        elif self.use_kernel:
+            round_fn = make_chain_round_fn(
+                self.log_lik_fn, cfg, self.scheme, self.minibatch,
+                bank_kind, collect=collect)
         else:
-            round_fn = make_round_fn(
-                self.log_lik_fn, self.cfg, self.scheme, self.step_fn,
+            one_chain = make_round_fn(
+                self.log_lik_fn, cfg, self.scheme, self.step_fn,
                 self.minibatch, collect=collect)
 
-            def block(chains, keys, sids, shard_data, bank_rt):
-                return jax.vmap(round_fn,
-                                in_axes=(0, 0, 0, None, None))(
-                    chains, keys, sids, shard_data, bank_rt)
+            def round_fn(thetas, keys, sids, shard_data, bank_rt):
+                return jax.vmap(one_chain, in_axes=(0, 0, 0, None, None))(
+                    thetas, keys, sids, shard_data, bank_rt)
+
+        def block(key, chains, shard_data, bank_rt):
+            if layout is not None:
+                rt_bank = pack_bank(
+                    layout, bank_rt if cfg.method == "fsgld" else None)
+                state = (layout.pack(chains), chains)
+            else:
+                rt_bank = bank_rt
+                state = chains
+            blk = jax.lax.axis_index("data") * per
+
+            def round_body(carry, _):
+                key, state = carry
+                key, k_assign, k_run = jax.random.split(key, 3)
+                if cfg.method == "sgld":
+                    sids = jnp.zeros((per,), jnp.int32)
+                elif reassign == "categorical":   # paper Algorithm 1
+                    sids = jax.lax.dynamic_slice_in_dim(
+                        jax.random.categorical(
+                            k_assign,
+                            jnp.log(probs)[None].repeat(n_chains, 0)),
+                        blk, per)
+                else:                             # SPMD variant (DESIGN 4.1)
+                    sids = _perm_sids_slice(k_assign, S, blk, per)
+                keys_blk = jax.lax.dynamic_slice_in_dim(
+                    jax.random.split(k_run, n_chains), blk, per)
+                state, trace = round_fn(state, keys_blk, sids, shard_data,
+                                        rt_bank)
+                y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
+                     if collect else None)
+                return (key, state), y
+
+            (key, state), traces = jax.lax.scan(
+                round_body, (key, state), None, length=num_rounds)
+            chains_out = state[1] if layout is not None else state
+            if collect:
+                # (R, C_blk, T/ce, ...) -> (C_blk, R * T/ce, ...): same
+                # round-major order the legacy host-side concatenate built.
+                traces = jax.tree.map(
+                    lambda t: jnp.swapaxes(t, 0, 1).reshape(
+                        (t.shape[1], num_rounds * t.shape[2])
+                        + t.shape[3:]),
+                    traces)
+            return chains_out, traces, key
 
         cspec = self._chain_spec()
-        out_specs = (cspec, cspec if collect else None)
         mapped = shard_map(
             block, mesh=self.mesh,
-            in_specs=(cspec, cspec, cspec, P(), P()),
-            out_specs=out_specs, check_rep=False)
-        fn = jax.jit(mapped)
-        self._vrounds[key] = fn
+            in_specs=(P(), cspec, P(), P()),
+            out_specs=(cspec, cspec if collect else None, P()),
+            check_rep=False)
+        fn = jax.jit(mapped, donate_argnums=(1,))
+        self._executors[cache_key] = fn
         return fn
 
     def _permute_sids(self, k_assign: jax.Array, n_chains: int):
-        """Collision-free reassignment, computed SPMD: every data group
-        derives the same permutation of [0, S) from the replicated round
-        key and takes the slice owned by its chain block. Equals the
-        host-side ``permutation(k, S)[:n_chains]`` bitwise."""
+        """Host-callable wrapper around ``_perm_sids_slice`` (the same
+        helper the scanned round body uses) for one whole reassignment:
+        returns the (n_chains,) collision-free sids for this round."""
         S = self.cfg.num_shards
         assert n_chains <= S, (n_chains, S)
         per = n_chains // self.mesh.shape["data"]
 
         def block(k):
-            i = jax.lax.axis_index("data")
-            perm = jax.random.permutation(k[0], S)
-            return jax.lax.dynamic_slice(perm, (i * per,), (per,))
+            return _perm_sids_slice(
+                k[0], S, jax.lax.axis_index("data") * per, per)
 
         return shard_map(
             block, mesh=self.mesh, in_specs=(P(),),
@@ -304,14 +512,23 @@ class MeshChainEngine:
         (n_chains, num_rounds * T_local / collect_every, ...), or the final
         chain states when ``collect=False`` (large-model mode — the trace
         of a billion-parameter posterior does not fit anywhere).
+
+        All rounds execute as ONE jitted scan (one host dispatch per run;
+        with ``refresh_every``, one per refresh segment — the refresh
+        itself is a host-side surrogate re-fit between segments).
         """
         d_size = self.mesh.shape["data"]
         if n_chains % d_size:
             raise ValueError(
                 f"n_chains={n_chains} must divide over the data axis "
                 f"({d_size})")
-        probs = jnp.asarray(self.cfg.probs())
-        S = self.cfg.num_shards
+        if self.cfg.method != "sgld" and reassign not in ("categorical",
+                                                          "permutation"):
+            raise ValueError(reassign)
+        if self.cfg.method != "sgld" and reassign == "permutation":
+            assert n_chains <= self.cfg.num_shards, \
+                (n_chains, self.cfg.num_shards)
+        layout = self._layout_for(theta0)
         cshard = NamedSharding(self.mesh, self._chain_spec())
         chains = jax.device_put(
             jax.tree.map(
@@ -319,21 +536,13 @@ class MeshChainEngine:
                     t[None], (n_chains,) + t.shape).copy(), theta0),
             jax.tree.map(lambda _: cshard, theta0))
         bank_rt = self.bank
-        vround = self._vround(collect)
+        seg_len = (refresh_every if (refresh_every
+                                     and self.cfg.method == "fsgld")
+                   else num_rounds)
         out = []
-        for r in range(num_rounds):
-            key, k_assign, k_run = jax.random.split(key, 3)
-            if self.cfg.method == "sgld":
-                sids = jnp.zeros((n_chains,), jnp.int32)
-            elif reassign == "categorical":   # paper Algorithm 1
-                sids = jax.random.categorical(
-                    k_assign, jnp.log(probs)[None].repeat(n_chains, 0))
-            elif reassign == "permutation":   # SPMD variant (DESIGN 4.1)
-                sids = self._permute_sids(k_assign, n_chains)
-            else:
-                raise ValueError(reassign)
-            if (refresh_every and self.cfg.method == "fsgld" and r > 0
-                    and r % refresh_every == 0):
+        r0 = 0
+        while r0 < num_rounds:
+            if r0 > 0:   # refresh boundary (r0 is a refresh_every multiple)
                 if self.bank is None or self.bank.kind != "diag":
                     # refresh_bank(_mesh) fits DIAG banks over flat-vector
                     # params (same limit as the legacy path); swapping the
@@ -344,13 +553,19 @@ class MeshChainEngine:
                         f"banks only (got {getattr(self.bank, 'kind', None)!r})")
                 center = jax.tree.map(lambda t: t.mean(0), chains)
                 bank_rt = self.refresh(center)
-            chains, trace = vround(chains, jax.random.split(k_run, n_chains),
-                                   sids, self.shard_data, bank_rt)
+            seg = min(seg_len, num_rounds - r0)
+            execute = self._executor(
+                num_rounds=seg, n_chains=n_chains, reassign=reassign,
+                collect=collect, collect_every=collect_every, layout=layout)
+            chains, trace, key = execute(key, chains, self.shard_data,
+                                         bank_rt)
             if collect:
-                out.append(jax.tree.map(lambda t: t[:, ::collect_every],
-                                        trace))
+                out.append(trace)
+            r0 += seg
         if not collect:
             return chains
+        if len(out) == 1:
+            return out[0]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out)
 
     # -- model-axis work: shard-parallel surrogate refresh ----------------
@@ -382,18 +597,29 @@ def refresh_bank_mesh(log_lik_fn: LogLikFn, shard_data: PyTree,
     assert S % m_size == 0, (S, m_size)
 
     def one_shard(data_s, n_s):
+        # Per-example scores in BATCHED gradient passes: each lax.map step
+        # vmaps grad over a whole chunk of examples (gathered by index)
+        # instead of a dynamic_slice-of-1 per example. Index chunks pad up
+        # to a multiple of `batch` with clamped gathers; masking stays a
+        # where(), not live*g: pad rows may hold NaN by design and
+        # 0 * NaN == NaN would poison the reduction.
         def gpair(i):
-            item = jax.tree.map(
-                lambda d: jax.lax.dynamic_slice_in_dim(d, i, 1), data_s)
+            item = jax.tree.map(lambda d: d[i][None], data_s)
             g = jax.grad(log_lik_fn)(theta, item)
-            # where(), not live*g: pad rows may hold NaN by design and
-            # 0 * NaN == NaN would poison the reduction.
             g = jnp.where(i < n_s, g, jnp.zeros_like(g))
             return g, g * g
 
-        g, g2 = jax.lax.map(gpair, jnp.arange(max_n), batch_size=batch)
-        gsum = g.sum(0)
-        centered = g2.sum(0) - gsum * gsum / n_s
+        # tail indices >= max_n gather clamped rows but always fail the
+        # i < n_s mask (n_s <= max_n), so they contribute exact zeros.
+        nb = -(-max_n // batch)
+        idx = jnp.arange(nb * batch)
+        g, g2 = jax.lax.map(jax.vmap(gpair), idx.reshape(nb, batch))
+        # flatten and trim to max_n before reducing: the reduction sees
+        # the same (max_n, ...) operand as the serial refresh pass, so the
+        # partial-sum grouping (and hence rounding) is unchanged
+        gsum = g.reshape((-1,) + g.shape[2:])[:max_n].sum(0)
+        centered = (g2.reshape((-1,) + g2.shape[2:])[:max_n].sum(0)
+                    - gsum * gsum / n_s)
         return gsum, centered
 
     def block(data_blk, n_blk):

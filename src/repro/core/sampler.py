@@ -101,6 +101,21 @@ class ShardScheme:
         return cols < self.sizes_array()[:, None]
 
 
+def chain_scales(cfg: SamplerConfig, scheme: ShardScheme, sids: jax.Array,
+                 minibatch: int) -> tuple[jax.Array, jax.Array]:
+    """Per-chain estimator factors for a chain block resident at clients
+    ``sids``: returns (scale, f_s), each (C,) fp32. DSGLD/FSGLD unbias by
+    N_s/(f_s m) (paper Eq. 4); centralized SGLD scales by N/m and has no
+    shard factor. Shared by the chain-batched and packed round bodies."""
+    C = sids.shape[0]
+    if cfg.method == "sgld":
+        return (jnp.full((C,), scheme.total / minibatch, jnp.float32),
+                jnp.ones((C,), jnp.float32))
+    sizes_f, probs_f = scheme.as_arrays()
+    f_s = probs_f[sids]
+    return sizes_f[sids] / (f_s * minibatch), f_s
+
+
 def make_drift_fn(
     log_lik_fn: LogLikFn,
     cfg: SamplerConfig,

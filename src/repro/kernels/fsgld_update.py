@@ -32,9 +32,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANE = 128
 BLOCK_ROWS = 256  # 256 x 128 fp32 = 128 KiB per operand tile in VMEM
+PACK_BLOCK_ROWS = 8  # packed multi-leaf grid: fp32 min tile, small pad waste
 
 # scalar-operand layout (single (1, 8) f32 row broadcast to every block)
 S_H, S_SCALE, S_FS, S_PRIOR, S_ALPHA, S_TEMP, S_LAMG, S_LAMS = range(8)
@@ -182,3 +184,146 @@ def fsgld_update_2d(theta2d: jax.Array, g2d: jax.Array, seed: jax.Array,
         out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
         interpret=interpret,
     )(seed, scalars, *ops)
+
+
+# ---------------------------------------------------------------------------
+# packed multi-leaf single-launch kernel (PR 2)
+#
+# The whole parameter pytree of a whole chain block rides in ONE
+# (C * rows_total, 128) buffer: each leaf owns a contiguous run of rows
+# padded up to a block multiple, chains are major. A static SEGMENT TABLE
+# (seg_leaf: block -> leaf id, seg_base: block -> element offset within the
+# leaf) rides in as scalar-prefetch operands; seed/scalar BlockSpec index
+# maps look the (chain, leaf) coordinate up in it, so one pallas_call per
+# step covers every leaf of every chain while noise streams stay
+# bit-identical to the per-leaf kernel above (same per-(chain, leaf) seed,
+# same in-leaf element index).
+# ---------------------------------------------------------------------------
+
+
+def _packed_update(th, drift, sc, seed, base_ref, block_rows, bpc):
+    h = sc[0, S_H]
+    sig = jnp.sqrt(h * sc[0, S_TEMP])
+    base = base_ref[pl.program_id(0) % bpc].astype(jnp.uint32)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 1)
+    xi = _gaussian_noise(seed, base + row * jnp.uint32(LANE) + col)
+    return th + (h * 0.5) * drift + sig * xi
+
+
+def _pkernel_plain(seg_ref, base_ref, seed_ref, sc_ref, th_ref, g_ref,
+                   out_ref, *, block_rows, bpc):
+    sc = sc_ref[0]  # (1, 8) row for this (chain, leaf)
+    th = th_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g
+    out_ref[...] = _packed_update(th, drift, sc, seed_ref[0, 0], base_ref,
+                                  block_rows, bpc)
+
+
+def _pkernel_scalar(seg_ref, base_ref, seed_ref, sc_ref, th_ref, g_ref,
+                    mg_ref, ms_ref, out_ref, *, block_rows, bpc):
+    sc = sc_ref[0]
+    th = th_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mg = mg_ref[...].astype(jnp.float32)
+    ms = ms_ref[...].astype(jnp.float32)
+    cond = sc[0, S_LAMG] * (mg - th) \
+        - (sc[0, S_LAMS] / sc[0, S_FS]) * (ms - th)
+    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
+    out_ref[...] = _packed_update(th, drift, sc, seed_ref[0, 0], base_ref,
+                                  block_rows, bpc)
+
+
+def _pkernel_diag(seg_ref, base_ref, seed_ref, sc_ref, th_ref, g_ref,
+                  mg_ref, ms_ref, lg_ref, ls_ref, out_ref, *, block_rows,
+                  bpc):
+    sc = sc_ref[0]
+    th = th_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mg = mg_ref[...].astype(jnp.float32)
+    ms = ms_ref[...].astype(jnp.float32)
+    lg = lg_ref[...].astype(jnp.float32)
+    ls = ls_ref[...].astype(jnp.float32)
+    cond = lg * (mg - th) - (ls / sc[0, S_FS]) * (ms - th)
+    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
+    out_ref[...] = _packed_update(th, drift, sc, seed_ref[0, 0], base_ref,
+                                  block_rows, bpc)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "interpret", "block_rows", "chains", "seg_leaf", "seg_base"))
+def fsgld_update_packed(theta2d: jax.Array, g2d: jax.Array,
+                        seeds: jax.Array, scalars: jax.Array, *,
+                        variant: str = "plain", mu_g=None, mu_s=None,
+                        lam_g=None, lam_s=None,
+                        seg_leaf: tuple = (0,), seg_base: tuple = (0,),
+                        interpret: bool = False,
+                        block_rows: int = PACK_BLOCK_ROWS,
+                        chains: int = 1) -> jax.Array:
+    """SINGLE-LAUNCH fused update over a packed multi-leaf chain block.
+
+    theta2d/g2d: (chains * rows_total, 128) chain-major packed buffers,
+    rows_total = block_rows * len(seg_leaf). seeds: (chains, L) uint32 —
+    one stream per (chain, leaf), matching the per-leaf kernel's seed
+    derivation. scalars: (chains, L, 8) rows in the S_* layout (per-leaf
+    scalar precisions for the 'scalar' variant live in S_LAMG/S_LAMS).
+    mu_g/lam_g: (rows_total, 128) packed GLOBAL surrogate, re-read per
+    chain; mu_s/lam_s: (chains * rows_total, 128) packed per-chain
+    resident-client surrogates.
+
+    seg_leaf[j] names the leaf block j belongs to; seg_base[j] is the
+    element offset of block j inside that leaf's padded vector. Both are
+    STATIC tuples shipped as scalar-prefetch operands so the BlockSpec
+    index maps can route seed/scalar rows per (chain, leaf) — one grid,
+    one HBM pass, zero per-leaf dispatch. Bit-identical to per-leaf
+    ``fsgld_update_2d`` calls because pad rows at each leaf tail are
+    discarded at unpack and live elements keep their in-leaf index.
+    """
+    rows = theta2d.shape[0]
+    assert theta2d.shape[1] == LANE, theta2d.shape
+    bpc = len(seg_leaf)
+    assert len(seg_base) == bpc, (len(seg_base), bpc)
+    assert rows == chains * bpc * block_rows, (rows, chains, bpc, block_rows)
+    grid = (chains * bpc,)
+    seg_t = jnp.asarray(seg_leaf, jnp.int32)
+    base_t = jnp.asarray(seg_base, jnp.int32)
+
+    tile = pl.BlockSpec((block_rows, LANE), lambda i, sg, bs: (i, 0))
+    shared_tile = pl.BlockSpec((block_rows, LANE),
+                               lambda i, sg, bs: (i % bpc, 0))
+    seed_spec = pl.BlockSpec((1, 1),
+                             lambda i, sg, bs: (i // bpc, sg[i % bpc]))
+    scalar_spec = pl.BlockSpec((1, 1, 8),
+                               lambda i, sg, bs: (i // bpc, sg[i % bpc], 0))
+
+    if variant == "plain":
+        kernel = functools.partial(_pkernel_plain, block_rows=block_rows,
+                                   bpc=bpc)
+        ops = [theta2d, g2d]
+        specs = [tile, tile]
+    elif variant == "scalar":
+        kernel = functools.partial(_pkernel_scalar, block_rows=block_rows,
+                                   bpc=bpc)
+        ops = [theta2d, g2d, mu_g, mu_s]
+        specs = [tile, tile, shared_tile, tile]
+    elif variant == "diag":
+        kernel = functools.partial(_pkernel_diag, block_rows=block_rows,
+                                   bpc=bpc)
+        ops = [theta2d, g2d, mu_g, mu_s, lam_g, lam_s]
+        specs = [tile, tile, shared_tile, tile, shared_tile, tile]
+    else:
+        raise ValueError(variant)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[seed_spec, scalar_spec] + specs,
+        out_specs=tile,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(seg_t, base_t, seeds, scalars, *ops)

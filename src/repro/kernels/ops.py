@@ -5,16 +5,24 @@ ravel -> pad to (rows, 128) -> pallas_call -> unpad/reshape, with a
 deterministic per-leaf seed folded out of a JAX PRNG key. On this CPU
 container the kernel runs in interpret mode (the TPU path is identical
 modulo `interpret=False`).
+
+`PackedChains` is the single-launch layout (PR 2): every leaf of every
+chain lives in ONE chain-major (C * rows_total, 128) buffer, built once
+per run by `pack`; per-step updates go through `packed_step`, which issues
+exactly one `pallas_call` for the whole chain block using the layout's
+static segment table (see kernels/fsgld_update.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fsgld_update import LANE, fsgld_update_2d
+from repro.kernels.fsgld_update import (LANE, PACK_BLOCK_ROWS,
+                                        fsgld_update_2d, fsgld_update_packed)
 
 PyTree = Any
 
@@ -196,6 +204,152 @@ def fused_update_chains_tree(theta: PyTree, g: PyTree, keys: jax.Array, *,
             lam_s=(jnp.asarray(ls[i], jnp.float32)
                    if ls[i] is not None else None)))
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# packed single-launch chain-state layout (PR 2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedChains:
+    """STATIC layout of a whole parameter pytree packed into one chain-major
+    (C * rows_total, 128) fp32 buffer.
+
+    Leaf l owns rows [row_offsets[l], row_offsets[l] + rows[l]) of every
+    chain's segment; its first ``sizes[l]`` elements are live, the tail up
+    to ``rows[l] * 128`` is pad (written by the kernel, never read back).
+    ``seg_leaf``/``seg_base`` are the per-block tables the packed kernel's
+    BlockSpec index maps consume: block j of a chain belongs to leaf
+    ``seg_leaf[j]`` and starts at in-leaf element ``seg_base[j]`` — that
+    base index is what keeps the in-kernel noise stream bit-identical to
+    the per-leaf kernel. Hashable (all-tuple) so it can key jit caches.
+    """
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple          # live element count per leaf
+    rows: tuple           # padded row count per leaf (block_rows multiple)
+    row_offsets: tuple    # first row of each leaf inside a chain segment
+    rows_total: int
+    block_rows: int
+    seg_leaf: tuple       # in-chain block -> leaf id
+    seg_base: tuple       # in-chain block -> element offset within leaf
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def bpc(self) -> int:
+        """Blocks per chain (grid steps each chain contributes)."""
+        return len(self.seg_leaf)
+
+    def pack(self, tree: PyTree) -> jax.Array:
+        """Leaves (C, *shape) -> (C * rows_total, 128) fp32, chain-major.
+        Pure update-slices into a zero buffer: no ``pad`` primitive, so
+        packing can sit inside a scanned round body without tripping the
+        no-pad jaxpr gate (it is still hoisted out of the step loop)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        assert treedef == self.treedef, (treedef, self.treedef)
+        c = leaves[0].shape[0]
+        buf = jnp.zeros((c, self.rows_total * LANE), jnp.float32)
+        for leaf, off, n in zip(leaves, self.row_offsets, self.sizes):
+            buf = jax.lax.dynamic_update_slice(
+                buf, leaf.reshape(c, n).astype(jnp.float32),
+                (0, off * LANE))
+        return buf.reshape(c * self.rows_total, LANE)
+
+    def pack_shared(self, tree: PyTree) -> jax.Array:
+        """Chain-free pytree (global surrogate) -> (rows_total, 128)."""
+        return self.pack(jax.tree.map(lambda t: t[None], tree))
+
+    def unpack(self, buf: jax.Array) -> PyTree:
+        """(C * rows_total, 128) -> leaves (C, *shape) in original dtypes."""
+        flat = buf.reshape(-1, self.rows_total * LANE)
+        c = flat.shape[0]
+        leaves = []
+        for shape, dt, off, n in zip(self.shapes, self.dtypes,
+                                     self.row_offsets, self.sizes):
+            seg = jax.lax.slice(flat, (0, off * LANE), (c, off * LANE + n))
+            leaves.append(seg.reshape((c,) + shape).astype(dt))
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+def make_packed_layout(theta: PyTree,
+                       block_rows: int = PACK_BLOCK_ROWS) -> PackedChains:
+    """Build the packed layout from a SINGLE-chain example pytree (shapes
+    without the leading chain axis)."""
+    leaves, treedef = jax.tree.flatten(theta)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(l.size) for l in leaves)
+    per_block = block_rows * LANE
+    rows = tuple(-(-n // per_block) * block_rows for n in sizes)
+    row_offsets, acc = [], 0
+    for r in rows:
+        row_offsets.append(acc)
+        acc += r
+    seg_leaf, seg_base = [], []
+    for li, r in enumerate(rows):
+        for b in range(r // block_rows):
+            seg_leaf.append(li)
+            seg_base.append(b * per_block)
+    return PackedChains(
+        treedef=treedef, shapes=shapes, dtypes=dtypes, sizes=sizes,
+        rows=rows, row_offsets=tuple(row_offsets), rows_total=acc,
+        block_rows=block_rows, seg_leaf=tuple(seg_leaf),
+        seg_base=tuple(seg_base))
+
+
+def chain_leaf_seeds(keys: jax.Array, num_leaves: int) -> jax.Array:
+    """(C, 2) per-chain step keys -> (C, L) uint32 per-(chain, leaf) seeds,
+    derived EXACTLY as ``fused_update_chains_tree`` derives them (split the
+    chain key into L leaf keys, draw one int31 per leaf) so packed and
+    per-leaf kernels consume identical noise streams."""
+    all_seeds = jax.vmap(lambda k: jax.random.split(k, num_leaves))(keys)
+    draw = lambda s: jax.random.randint(  # noqa: E731 - mirrors per-leaf path
+        s, (), 0, 2**31 - 1).astype(jnp.uint32)
+    return jax.vmap(jax.vmap(draw))(all_seeds)
+
+
+def packed_scalar_rows(layout: PackedChains, *, h, scale, f_s, prior_prec,
+                       alpha, temperature, lam_g_leaf=None,
+                       lam_s_leaf=None) -> jax.Array:
+    """Prebuild the (C, L, 8) scalar-operand rows for a whole round: scale
+    and f_s vary per chain (resident client), lam_g/lam_s vary per leaf in
+    the 'scalar' surrogate variant ((L,) global / (C, L) resident scalar
+    precisions); everything else broadcasts."""
+    C = scale.shape[0]
+    L = layout.num_leaves
+    col = lambda v: jnp.broadcast_to(  # noqa: E731
+        jnp.asarray(v, jnp.float32), (C, L))
+    lamg = col(0.0) if lam_g_leaf is None \
+        else jnp.broadcast_to(lam_g_leaf[None].astype(jnp.float32), (C, L))
+    lams = col(0.0) if lam_s_leaf is None \
+        else lam_s_leaf.astype(jnp.float32)
+    return jnp.stack([
+        col(h), col(scale[:, None]), col(f_s[:, None]), col(prior_prec),
+        col(alpha), col(temperature), lamg, lams], axis=-1)
+
+
+def packed_step(layout: PackedChains, theta_p: jax.Array, g_p: jax.Array,
+                seeds: jax.Array, scalars: jax.Array, *, variant: str,
+                mu_g=None, mu_s=None, lam_g=None, lam_s=None,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """ONE pallas_call updating every leaf of every chain in the block.
+
+    theta_p/g_p/mu_s/lam_s: (C * rows_total, 128) packed buffers;
+    mu_g/lam_g: (rows_total, 128) packed global surrogate (re-read per
+    chain by the kernel's shared BlockSpec); seeds: (C, L) uint32 from
+    ``chain_leaf_seeds``; scalars: (C, L, 8) from ``packed_scalar_rows``.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    C = seeds.shape[0]
+    return fsgld_update_packed(
+        theta_p, g_p, seeds, scalars, variant=variant, mu_g=mu_g,
+        mu_s=mu_s, lam_g=lam_g, lam_s=lam_s, seg_leaf=layout.seg_leaf,
+        seg_base=layout.seg_base, block_rows=layout.block_rows,
+        chains=C, interpret=interpret)
 
 
 def fused_update_tree(theta: PyTree, g: PyTree, key: jax.Array, *, h, scale,

@@ -85,6 +85,12 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="route chain updates through the chain-batched "
                          "fused Pallas kernel")
+    ap.add_argument("--packed", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="with --use-kernel: packed single-launch steps "
+                         "(one pallas_call per step for the whole chain "
+                         "block; default auto — on for fp32 params). "
+                         "--no-packed keeps the per-leaf kernel path")
     ap.add_argument("--local-updates", type=int, default=4)
     ap.add_argument("--num-shards", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
@@ -136,7 +142,7 @@ def main(argv=None):
         eng = MeshChainEngine(
             lambda p, b: log_lik_fn(p, cfg, b), sampler, shards,
             min(args.batch, args.shard_size), bank=bank,
-            use_kernel=args.use_kernel, mesh=mesh)
+            use_kernel=args.use_kernel, mesh=mesh, packed=args.packed)
         reassign = ("permutation" if args.chains <= args.num_shards
                     else "categorical")
         t0 = time.time()
@@ -151,7 +157,9 @@ def main(argv=None):
         steps = args.rounds * args.local_updates * args.chains
         print(f"{args.chains} chains x {args.rounds} rounds "
               f"({steps} chain-steps) in {dt:.1f}s "
-              f"[reassign={reassign} kernel={args.use_kernel}]")
+              f"= {steps / dt:.1f} steps/s "
+              f"[reassign={reassign} kernel={args.use_kernel} "
+              f"packed={args.packed if args.packed is not None else 'auto'}]")
         if args.ckpt:
             checkpoint.save(args.ckpt,
                             jax.tree.map(lambda t: t[0], finals),

@@ -192,6 +192,20 @@ def chain_spec() -> P:
     return P(CHAIN_AXIS)
 
 
+def packed_chain_spec() -> P:
+    """Layout CONVENTION for PACKED chain-state buffers
+    (kernels.ops.PackedChains), recorded for the launch/steps.py
+    migration onto the chain engine (ROADMAP open item). Today nothing
+    uses it: packed buffers are created and consumed entirely INSIDE the
+    engine's shard_map block and never cross a sharding boundary. When
+    one does, this is its spec: the (C * rows_total, 128) row axis is
+    CHAIN-MAJOR, so sharding dim 0 over the chain axis keeps every
+    chain's whole segment on one data group — the same placement the
+    unpacked (C, ...) tree gets from ``chain_spec`` (requires
+    C % |data| == 0, which the engine already enforces)."""
+    return P(CHAIN_AXIS, None)
+
+
 def chain_specs(tree: PyTree) -> PyTree:
     """Per-leaf chain-axis specs for a pytree of (C, ...) chain states."""
     return jax.tree.map(lambda _: P(CHAIN_AXIS), tree)

@@ -1,0 +1,326 @@
+"""Packed single-launch executor (PR 2) correctness.
+
+Contracts under test:
+
+  * packed single-launch steps are BIT-IDENTICAL to the per-leaf
+    chain-batched kernel — and therefore to the ``run_vmap`` oracle — for
+    plain / scalar / diag variants, multi-leaf pytrees, and ragged shards;
+  * one ``pallas_call`` per step for the whole chain block and ZERO
+    ``pad`` primitives inside the scan bodies (asserted on the jaxpr);
+  * ``MeshChainEngine.run`` traces ONCE for R rounds (scan-over-rounds,
+    no per-round retrace or dispatch).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, MeshChainEngine, make_bank,
+                        pad_shards, analytic_gaussian_likelihood_surrogate)
+from repro.core.engine import pack_bank
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# problems
+# ---------------------------------------------------------------------------
+
+def log_lik_flat(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def log_lik_tree(theta, batch):
+    pred = batch["x"] @ theta["w"] + theta["b"]
+    return -0.5 * jnp.sum((batch["y"] - pred) ** 2)
+
+
+def _flat_problem(key, S=5, n=40, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _tree_problem(key, S=4, n=24, din=2, dout=600):
+    """Multi-leaf linear-model posterior + 'scalar' surrogate bank.
+    dout=600 makes the w leaf (2, 600) span TWO packed blocks, so the
+    engine-level oracle comparison also covers in-leaf base offsets."""
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (S, n, din))
+    w_true = jax.random.normal(ks[1], (din, dout))
+    y = x @ w_true + 0.1 * jax.random.normal(ks[2], (S, n, dout))
+    theta0 = {"b": jnp.zeros(dout), "w": jnp.zeros((din, dout))}
+    means = {"b": jax.random.normal(ks[3], (S, dout)) * 0.1,
+             "w": jnp.broadcast_to(w_true[None], (S, din, dout))
+             + 0.1 * jax.random.normal(ks[3], (S, din, dout))}
+    precs = {"b": jnp.linspace(1.0, 2.0, S),
+             "w": jnp.linspace(3.0, 5.0, S)}
+    return {"x": x, "y": y}, make_bank(means, precs, "scalar"), theta0
+
+
+def _ragged_problem(key, S=5, d=3):
+    base = jax.random.normal(key, (S, 64, d)) + jnp.arange(S)[:, None, None]
+    per_shard = [{"x": base[s, : 12 + 9 * s]} for s in range(S)]
+    stacked, sizes = pad_shards(per_shard)  # NaN pad: touching it poisons
+    xs = [p["x"] for p in per_shard]
+    mu = jnp.stack([x.mean(0) for x in xs])
+    prec = jnp.stack([jnp.full((d,), float(x.shape[0])) for x in xs])
+    return stacked, sizes, make_bank(mu, prec, "diag")
+
+
+# ---------------------------------------------------------------------------
+# unit level: packed_step == per-leaf chain-batched kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["plain", "scalar"])
+def test_packed_step_bitmatches_per_leaf_kernel_multileaf(variant):
+    key = jax.random.PRNGKey(0)
+    C, S = 4, 5
+    # "b" spans MULTIPLE packed blocks (2*1300 > 2 * block_rows*LANE =
+    # 2048): seg_base > 0 and repeated seg_leaf entries — the segment
+    # paths a single-block leaf never touches — are exercised here
+    shapes = {"a": (37,), "b": (2, 1300), "c": (3,)}
+    ks = jax.random.split(key, 10)
+    theta = {n: jax.random.normal(jax.random.fold_in(ks[0], i), (C,) + s)
+             for i, (n, s) in enumerate(shapes.items())}
+    g = {n: jax.random.normal(jax.random.fold_in(ks[1], i), (C,) + s)
+         for i, (n, s) in enumerate(shapes.items())}
+    keys = jax.random.split(ks[2], C)
+    sids = jnp.array([0, 2, 2, 4], jnp.int32)
+    scale = jnp.linspace(10.0, 40.0, C)
+    f_s = jnp.linspace(0.1, 0.4, C)
+    kw = dict(h=1e-4, prior_prec=1.0, alpha=1.0, temperature=1.0)
+
+    if variant == "plain":
+        bank, kind = None, None
+    else:
+        means = {n: jax.random.normal(jax.random.fold_in(ks[3], i),
+                                      (S,) + s)
+                 for i, (n, s) in enumerate(shapes.items())}
+        precs = {n: jnp.linspace(0.5, 1.5, S) + i
+                 for i, n in enumerate(shapes)}
+        bank, kind = make_bank(means, precs, "scalar"), "scalar"
+
+    ref = ops.fused_update_chains_tree(
+        theta, g, keys, scale=scale, f_s=f_s, bank=bank, sids=sids,
+        surrogate_kind=kind, **kw)
+
+    layout = ops.make_packed_layout(jax.tree.map(lambda t: t[0], theta))
+    th_p = layout.pack(theta)
+    g_p = layout.pack(g)
+    seeds = ops.chain_leaf_seeds(keys, layout.num_leaves)
+    if variant == "plain":
+        mu_g = mu_s = None
+        lam_g_leaf = lam_s_leaf = None
+    else:
+        pb = pack_bank(layout, bank)
+        mu_g = pb["mu_g"]
+        mu_s = pb["means"][sids].reshape(-1, ops.LANE)
+        lam_g_leaf = pb["lam_g_leaf"]
+        lam_s_leaf = pb["lam_s_leaf"][sids]
+    scalars = ops.packed_scalar_rows(
+        layout, scale=scale, f_s=f_s, lam_g_leaf=lam_g_leaf,
+        lam_s_leaf=lam_s_leaf, **kw)
+    out_p = ops.packed_step(layout, th_p, g_p, seeds, scalars,
+                            variant=variant if bank else "plain",
+                            mu_g=mu_g, mu_s=mu_s)
+    got = layout.unpack(out_p)
+    for n in shapes:
+        np.testing.assert_array_equal(np.asarray(got[n]),
+                                      np.asarray(ref[n]), err_msg=n)
+
+
+def test_packed_step_bitmatches_per_leaf_kernel_diag():
+    key = jax.random.PRNGKey(1)
+    C, S, P = 4, 5, 3001  # > 2 packed blocks: in-leaf base offsets live
+    ks = jax.random.split(key, 8)
+    theta = jax.random.normal(ks[0], (C, P))
+    g = jax.random.normal(ks[1], (C, P))
+    keys = jax.random.split(ks[2], C)
+    sids = jnp.array([1, 0, 3, 3], jnp.int32)
+    scale = jnp.linspace(5.0, 20.0, C)
+    f_s = jnp.linspace(0.2, 0.5, C)
+    bank = make_bank(jax.random.normal(ks[3], (S, P)),
+                     jnp.abs(jax.random.normal(ks[4], (S, P))) + 0.1,
+                     "diag")
+    kw = dict(h=1e-4, prior_prec=1.0, alpha=1.0, temperature=1.0)
+
+    ref = ops.fused_update_chains_tree(
+        theta, g, keys, scale=scale, f_s=f_s, bank=bank, sids=sids,
+        surrogate_kind="diag", **kw)
+
+    layout = ops.make_packed_layout(theta[0])
+    pb = pack_bank(layout, bank)
+    seeds = ops.chain_leaf_seeds(keys, layout.num_leaves)
+    scalars = ops.packed_scalar_rows(layout, scale=scale, f_s=f_s, **kw)
+    out_p = ops.packed_step(
+        layout, layout.pack(theta), layout.pack(g), seeds, scalars,
+        variant="diag", mu_g=pb["mu_g"], lam_g=pb["lam_g"],
+        mu_s=pb["means"][sids].reshape(-1, ops.LANE),
+        lam_s=pb["precs"][sids].reshape(-1, ops.LANE))
+    np.testing.assert_array_equal(np.asarray(layout.unpack(out_p)),
+                                  np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# engine level: packed executor vs the run_vmap oracle
+# ---------------------------------------------------------------------------
+
+def test_packed_engine_bitmatches_oracle_multileaf_scalar_bank():
+    """Multi-leaf pytree + 'scalar' bank through the full engine: packed
+    single-launch rounds equal the legacy per-chain kernel vmap bitwise."""
+    data, bank, theta0 = _tree_problem(jax.random.PRNGKey(2))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=4,
+                        local_updates=4, prior_precision=1.0,
+                        surrogate="scalar")
+    eng = MeshChainEngine(log_lik_tree, cfg, data, minibatch=6, bank=bank,
+                          use_kernel=True)
+    assert eng._layout_for(theta0) is not None, "packed path not taken"
+    tr = eng.run(jax.random.PRNGKey(7), theta0, 3, n_chains=4)
+    legacy = FederatedSampler(log_lik_tree, cfg, data, minibatch=6,
+                              bank=bank, use_kernel=True)
+    ref = legacy.run_vmap(jax.random.PRNGKey(7), theta0, 3, n_chains=4)
+    for name in theta0:
+        assert tr[name].shape == (4, 12) + theta0[name].shape
+        np.testing.assert_array_equal(np.asarray(tr[name]),
+                                      np.asarray(ref[name]), err_msg=name)
+
+
+@pytest.mark.parametrize("method", ["sgld", "dsgld", "fsgld"])
+def test_packed_engine_bitmatches_oracle_flat_diag(method):
+    data, bank = _flat_problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=5,
+                        local_updates=5, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik_flat, cfg, data, minibatch=8,
+                          bank=bank if method == "fsgld" else None,
+                          use_kernel=True)
+    tr = eng.run(jax.random.PRNGKey(3), jnp.zeros(3), 4, n_chains=4)
+    legacy = FederatedSampler(log_lik_flat, cfg, data, minibatch=8,
+                              bank=bank if method == "fsgld" else None,
+                              use_kernel=True)
+    ref = legacy.run_vmap(jax.random.PRNGKey(3), jnp.zeros(3), 4,
+                          n_chains=4)
+    np.testing.assert_array_equal(np.asarray(tr), np.asarray(ref))
+
+
+def test_packed_engine_matches_per_leaf_engine_ragged():
+    """Ragged NaN-padded shards: the packed executor equals the per-leaf
+    chain-batched engine bitwise and never touches a pad row."""
+    stacked, sizes, bank = _ragged_problem(jax.random.PRNGKey(4))
+    S = len(sizes)
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=3, prior_precision=1.0)
+    kw = dict(minibatch=6, bank=bank, sizes=sizes, use_kernel=True)
+    packed = MeshChainEngine(log_lik_flat, cfg, stacked, **kw)
+    per_leaf = MeshChainEngine(log_lik_flat, cfg, stacked, packed=False,
+                               **kw)
+    a = packed.run(jax.random.PRNGKey(5), jnp.zeros(3), 3, n_chains=4,
+                   reassign="permutation")
+    b = per_leaf.run(jax.random.PRNGKey(5), jnp.zeros(3), 3, n_chains=4,
+                     reassign="permutation")
+    assert bool(jnp.all(jnp.isfinite(a)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# dispatch economics: one trace for R rounds, one pallas_call per step
+# ---------------------------------------------------------------------------
+
+def _trace_count(num_rounds):
+    calls = []
+
+    def counting_ll(theta, batch):
+        calls.append(1)
+        return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+    data, bank = _flat_problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=3, prior_precision=1.0)
+    eng = MeshChainEngine(counting_ll, cfg, data, minibatch=8, bank=bank,
+                          use_kernel=True)
+    eng.run(jax.random.PRNGKey(7), jnp.zeros(3), num_rounds, n_chains=4)
+    first = len(calls)
+    # same executor again: cached jit, zero retraces
+    eng.run(jax.random.PRNGKey(8), jnp.zeros(3), num_rounds, n_chains=4)
+    return first, len(calls)
+
+
+def test_run_traces_once_for_r_rounds():
+    """scan-over-rounds: trace work is CONSTANT in the round count (the
+    old host loop retraced nothing but re-dispatched per round; a naive
+    unrolled jit would retrace per round), and a second run() with the
+    same shape is a pure cache hit."""
+    first2, second2 = _trace_count(2)
+    first6, second6 = _trace_count(6)
+    assert first2 == first6, (first2, first6)
+    assert second2 == first2, "second run() retraced"
+    assert second6 == first6, "second run() retraced"
+
+
+def _all_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(v):
+    if hasattr(v, "jaxpr"):           # ClosedJaxpr
+        return [v.jaxpr]
+    if hasattr(v, "eqns"):            # raw Jaxpr
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def test_packed_run_jaxpr_single_pallas_call_no_pad_in_scan():
+    """Acceptance gate: the WHOLE R-round executor jaxpr contains exactly
+    one pallas_call (the single-launch step inside the nested scans — not
+    one per leaf, not one per round) and no `pad` primitive inside any
+    scan body (pack/unpack are hoisted update-slices/slices)."""
+    data, bank, theta0 = _tree_problem(jax.random.PRNGKey(2))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=4,
+                        local_updates=4, prior_precision=1.0,
+                        surrogate="scalar")
+    eng = MeshChainEngine(log_lik_tree, cfg, data, minibatch=6, bank=bank,
+                          use_kernel=True)
+    layout = eng._layout_for(theta0)
+    assert layout is not None and layout.num_leaves == 2
+    execute = eng._executor(num_rounds=3, n_chains=4,
+                            reassign="categorical", collect=True,
+                            collect_every=2, layout=layout)
+    chains = jax.tree.map(
+        lambda t: jnp.zeros((4,) + t.shape, t.dtype), theta0)
+    jaxpr = jax.make_jaxpr(execute)(
+        jax.random.PRNGKey(0), chains, data, bank)
+
+    eqns = list(_all_eqns(jaxpr.jaxpr))
+    pallas = [e for e in eqns if "pallas" in e.primitive.name]
+    assert len(pallas) == 1, [e.primitive.name for e in pallas]
+
+    scans = [e for e in eqns if e.primitive.name == "scan"]
+    assert scans, "no scan in the executor: rounds loop not scanned"
+    for s in scans:
+        body = [e.primitive.name
+                for e in _all_eqns(s.params["jaxpr"].jaxpr)]
+        assert "pad" not in body, "pad op inside a scan body"
+        assert body.count("pallas_call") <= 1
+
+
+def test_packed_fp32_only_guard():
+    data, bank = _flat_problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=5,
+                        local_updates=2, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik_flat, cfg, data, minibatch=8,
+                          use_kernel=True)
+    # auto mode: non-fp32 params silently fall back to the per-leaf path
+    assert eng._layout_for(jnp.zeros(3, jnp.bfloat16)) is None
+    # explicit packed=True refuses instead of changing dtype semantics
+    eng2 = MeshChainEngine(log_lik_flat, cfg, data, minibatch=8,
+                           use_kernel=True, packed=True)
+    with pytest.raises(ValueError):
+        eng2._layout_for(jnp.zeros(3, jnp.bfloat16))
