@@ -10,6 +10,13 @@ chain-batched Pallas kernel (PR 1) and the packed single-launch executor
   * a multi-leaf BNN (2-layer MLP, 'scalar' bank) — the config where
     per-leaf dispatch dominates and packing pays.
 
+All engine rows run THROUGH the ``repro.api`` facade (PR 3): 'mesh' is
+``Execution(executor='vmap')``, 'mesh+kernel' is 'per_leaf',
+'mesh+packed' is 'packed' — proving the facade adds no dispatch cost
+over driving the engine directly. The 'vmap' control rows keep the
+pre-engine ``FederatedSampler.run_vmap`` host loop (the machine-speed
+normalizer in check_regression.py).
+
 derived = chain-steps/second aggregate throughput (higher is better);
 us_per_call = wall microseconds per chain-step. The ``packed_speedup``
 rows carry packed / per-leaf steps/s (PR 2 acceptance: >= 1.5x on the
@@ -26,8 +33,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, SCALE, bench_main
+from repro import api
 from repro.configs.base import SamplerConfig
-from repro.core import FederatedSampler, MeshChainEngine, make_bank
+from repro.core import FederatedSampler, make_bank
 from repro.core.surrogate import analytic_gaussian_likelihood_surrogate
 
 
@@ -83,10 +91,21 @@ def _time_run(runner, key, theta0, rounds, n_chains, t_local, repeats=3):
     return 1e6 * dt / steps, steps / dt, dt
 
 
-def _engine_runner(eng, t_local):
+def _facade_runner(fsgld, t_local):
+    """Engine rows run through the repro.api facade (same engine, same
+    executor caches — sample() forwards rounds/chains per call)."""
     def go(k, t0_, r, nc):
-        return eng.run(k, t0_, r, n_chains=nc, collect_every=t_local)
+        return fsgld.sample(k, t0_, rounds=r, n_chains=nc)
     return go
+
+
+def _facade(log_lik, data, bank, m, t_local, executor, surrogate_kind):
+    return api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=m,
+        step_size=1e-5,
+        surrogate=api.SurrogateSpec(kind=surrogate_kind, bank=bank),
+        schedule=api.Schedule(rounds=4, local_steps=t_local, thin=t_local),
+        execution=api.Execution(executor=executor))
 
 
 def _gauss_rows(key, rows):
@@ -105,23 +124,23 @@ def _gauss_rows(key, rows):
         for C in chain_sweep:
             samp = FederatedSampler(gauss_log_lik, cfg, data, minibatch=m,
                                     bank=bank)
-            eng_leaf = MeshChainEngine(gauss_log_lik, cfg, data, m,
-                                       bank=bank, use_kernel=True,
-                                       packed=False)
-            eng_pack = MeshChainEngine(gauss_log_lik, cfg, data, m,
-                                       bank=bank, use_kernel=True)
+            f_mesh = _facade(gauss_log_lik, data, bank, m, t_local,
+                             "vmap", "diag")
+            f_leaf = _facade(gauss_log_lik, data, bank, m, t_local,
+                             "per_leaf", "diag")
+            f_pack = _facade(gauss_log_lik, data, bank, m, t_local,
+                             "packed", "diag")
 
             def legacy(k, t0_, r, nc):
+                # the CONTROL row: the pre-engine host vmap loop, kept as
+                # the machine-speed normalizer for check_regression.py
                 return samp.run_vmap(k, t0_, r, n_chains=nc,
                                      collect_every=t_local)
 
-            def mesh(k, t0_, r, nc):
-                return samp.run(k, t0_, r, n_chains=nc,
-                                collect_every=t_local)
-
-            runners = [("vmap", legacy), ("mesh", mesh),
-                       ("mesh+kernel", _engine_runner(eng_leaf, t_local)),
-                       ("mesh+packed", _engine_runner(eng_pack, t_local))]
+            runners = [("vmap", legacy),
+                       ("mesh", _facade_runner(f_mesh, t_local)),
+                       ("mesh+kernel", _facade_runner(f_leaf, t_local)),
+                       ("mesh+packed", _facade_runner(f_pack, t_local))]
             for tag, runner in runners:
                 us, thru, _ = _time_run(runner, jax.random.PRNGKey(1),
                                         theta0, rounds, C, t_local)
@@ -139,18 +158,15 @@ def _bnn_rows(key, rows):
     m = min(16, n)
     data, bank, theta0 = _bnn_problem(jax.random.fold_in(key, 99), S, n,
                                       din, hid, dout)
-    cfg = SamplerConfig(method="fsgld", step_size=1e-5, num_shards=S,
-                        local_updates=t_local, prior_precision=1.0,
-                        surrogate="scalar")
-    eng_leaf = MeshChainEngine(bnn_log_lik, cfg, data, m, bank=bank,
-                               use_kernel=True, packed=False)
-    eng_pack = MeshChainEngine(bnn_log_lik, cfg, data, m, bank=bank,
-                               use_kernel=True)
+    f_leaf = _facade(bnn_log_lik, data, bank, m, t_local, "per_leaf",
+                     "scalar")
+    f_pack = _facade(bnn_log_lik, data, bank, m, t_local, "packed",
+                     "scalar")
 
     thru = {}
     t_lo = None
-    for tag, eng in [("perleaf", eng_leaf), ("packed", eng_pack)]:
-        us, th, dt = _time_run(_engine_runner(eng, t_local),
+    for tag, eng in [("perleaf", f_leaf), ("packed", f_pack)]:
+        us, th, dt = _time_run(_facade_runner(eng, t_local),
                                jax.random.PRNGKey(1), theta0, rounds, C,
                                t_local)
         thru[tag] = th
@@ -166,7 +182,7 @@ def _bnn_rows(key, rows):
     # the per-run-call host dispatch cost, b the marginal scanned round
     # (t_lo reuses the timed packed run above: identical arguments)
     r_hi = 4 * rounds
-    _, _, t_hi = _time_run(_engine_runner(eng_pack, t_local),
+    _, _, t_hi = _time_run(_facade_runner(f_pack, t_local),
                            jax.random.PRNGKey(1), theta0, r_hi, C,
                            t_local)
     b = max((t_hi - t_lo) / (r_hi - rounds), 0.0)

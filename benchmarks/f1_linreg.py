@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, SCALE, Timer
-from repro.configs.base import SamplerConfig
-from repro.core import FederatedSampler, make_bank
+from repro import api
+from repro.core import make_bank
 from repro.data import linreg_datasets, split_shards
 
 
@@ -47,16 +47,19 @@ def run():
         d = xtr.shape[1]
         total_steps = int(4000 * max(SCALE, 1))
         for method in ("dsgld", "fsgld"):
-            cfg = SamplerConfig(method=method, step_size=1e-6, num_shards=S,
-                                local_updates=40, prior_precision=1.0)
-            samp = FederatedSampler(log_lik, cfg, shards, minibatch=10,
-                                    bank=bank)
+            samp = api.FSGLD(
+                api.Posterior(log_lik, prior_precision=1.0), shards,
+                minibatch=10, step_size=1e-6, method=method,
+                surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                           if method == "fsgld"
+                           else api.SurrogateSpec(kind="none")),
+                schedule=api.Schedule(rounds=total_steps // 40,
+                                      local_steps=40, thin=20))
             mses = []
             with Timer() as t:
                 for rep in range(3):
-                    tr = samp.run(jax.random.PRNGKey(30 + rep),
-                                  jnp.zeros(d), total_steps // 40,
-                                  n_chains=1, collect_every=20)[0]
+                    tr = samp.sample(jax.random.PRNGKey(30 + rep),
+                                     jnp.zeros(d))[0]
                     tr = tr[tr.shape[0] // 2:]
                     pred = jnp.mean(tr @ xte.T, axis=0)
                     mses.append(float(jnp.mean((pred - yte) ** 2)))

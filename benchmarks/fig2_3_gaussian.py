@@ -13,9 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, SCALE, Timer
-from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, analytic_gaussian_likelihood_surrogate,
-                        make_bank)
+from repro import api
+from repro.core import analytic_gaussian_likelihood_surrogate, make_bank
 
 
 def log_lik(theta, batch):
@@ -38,14 +37,16 @@ def run():
     rows = []
     for method, local in [("dsgld", 1), ("dsgld", 10), ("dsgld", 100),
                           ("fsgld", 1), ("fsgld", 100)]:
-        cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=S,
-                            local_updates=local, prior_precision=1.0)
-        samp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=10,
-                                bank=bank)
+        samp = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+            minibatch=10, step_size=1e-4, method=method,
+            surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                       if method == "fsgld"
+                       else api.SurrogateSpec(kind="none")),
+            schedule=api.Schedule(rounds=total_steps // local,
+                                  local_steps=local, thin=10))
         with Timer() as t:
-            trace = samp.run(jax.random.PRNGKey(2), jnp.zeros(d),
-                             total_steps // local, n_chains=1,
-                             collect_every=10)[0]
+            trace = samp.sample(jax.random.PRNGKey(2), jnp.zeros(d))[0]
         trace = trace[trace.shape[0] // 2:]
         mse = float(jnp.sum((trace.mean(0) - post_mean) ** 2))
         rows.append(Row(f"fig2/{method}_local{local}_mse",

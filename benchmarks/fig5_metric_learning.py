@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, SCALE, Timer
-from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, fit_bank_fisher,
-                        sample_local_likelihood)
+from repro import api
+from repro.core import fit_bank_fisher, sample_local_likelihood
 from repro.data import metric_pairs, metric_test_pairs
 
 K = 10
@@ -77,16 +76,19 @@ def run():
     total_steps = int(4000 * max(SCALE, 1))
     results = {}
     for method in ("dsgld", "fsgld"):
-        cfg = SamplerConfig(method=method, step_size=1e-5, num_shards=S,
-                            local_updates=40, prior_precision=1.0)
-        samp = FederatedSampler(log_lik, cfg, shards, minibatch=64,
-                                bank=bank)
+        samp = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), shards,
+            minibatch=64, step_size=1e-5, method=method,
+            surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                       if method == "fsgld"
+                       else api.SurrogateSpec(kind="none")),
+            schedule=api.Schedule(rounds=total_steps // 40,
+                                  local_steps=40, thin=20))
         finals = []
         with Timer() as t:
             for rep in range(3):
-                trace = samp.run(jax.random.PRNGKey(10 + rep), theta0,
-                                 total_steps // 40, n_chains=1,
-                                 collect_every=20)[0]
+                trace = samp.sample(jax.random.PRNGKey(10 + rep),
+                                    theta0)[0]
                 finals.append(trace[trace.shape[0] // 2:])
         us = t.us_per(3 * total_steps)
         tr_ll = [avg_loglik(tr, jax.tree.map(lambda a: a.reshape(

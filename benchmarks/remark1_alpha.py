@@ -11,9 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, SCALE, Timer
-from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler,
-                        analytic_gaussian_likelihood_surrogate, make_bank)
+from repro import api
+from repro.core import analytic_gaussian_likelihood_surrogate, make_bank
 
 
 def log_lik(theta, batch):
@@ -34,14 +33,14 @@ def run():
     rows = []
     mses = {}
     for alpha in (0.0, 0.25, 0.5, 1.0, 1.5):
-        cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
-                            local_updates=100, prior_precision=1.0,
-                            alpha=alpha)
-        samp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=10,
-                                bank=bank)
+        samp = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+            minibatch=10, step_size=1e-4, alpha=alpha,
+            surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+            schedule=api.Schedule(rounds=steps // 100, local_steps=100,
+                                  thin=10))
         with Timer() as t:
-            tr = samp.run(jax.random.PRNGKey(2), jnp.zeros(d),
-                          steps // 100, n_chains=1, collect_every=10)[0]
+            tr = samp.sample(jax.random.PRNGKey(2), jnp.zeros(d))[0]
         tr = tr[tr.shape[0] // 2:]
         mse = float(jnp.sum((tr.mean(0) - post_mean) ** 2))
         mses[alpha] = mse

@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, SCALE, Timer
-from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, fit_bank_fisher,
-                        sample_local_likelihood)
+from repro import api
+from repro.core import fit_bank_fisher, sample_local_likelihood
 from repro.data import susy_shards, susy_test_set
 
 DIM = 18
@@ -81,15 +80,19 @@ def run():
 
         rounds = int(250 * max(SCALE, 1))
         for method in ("dsgld", "fsgld"):
-            cfg = SamplerConfig(method=method, step_size=1e-5, num_shards=S,
-                                local_updates=40, prior_precision=1.0)
-            samp = FederatedSampler(log_lik, cfg, shards, minibatch=50,
-                                    bank=bank)
+            samp = api.FSGLD(
+                api.Posterior(log_lik, prior_precision=1.0), shards,
+                minibatch=50, step_size=1e-5, method=method,
+                surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                           if method == "fsgld"
+                           else api.SurrogateSpec(kind="none")),
+                schedule=api.Schedule(rounds=rounds, local_steps=40,
+                                      thin=20))
             lls = []
             with Timer() as t:
                 for rep in range(3):
-                    tr = samp.run(jax.random.PRNGKey(20 + rep), theta0,
-                                  rounds, n_chains=1, collect_every=20)[0]
+                    tr = samp.sample(jax.random.PRNGKey(20 + rep),
+                                     theta0)[0]
                     lls.append(avg_loglik(tr[tr.shape[0] // 2:], test))
             us = t.us_per(3 * rounds * 40)
             mean = float(jnp.mean(jnp.array(lls)))

@@ -13,9 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.table1_bnn import P, avg_loglik, log_lik
-from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, fit_bank_fisher,
-                        sample_local_likelihood)
+from repro import api
+from repro.core import fit_bank_fisher, sample_local_likelihood
 from repro.data import susy_shards, susy_test_set
 
 
@@ -46,13 +45,15 @@ def main():
 
     print("phase 2: sampling...")
     for method in ("dsgld", "fsgld"):
-        cfg = SamplerConfig(method=method, step_size=1e-5,
-                            num_shards=args.shards, local_updates=40,
-                            prior_precision=1.0)
-        samp = FederatedSampler(log_lik, cfg, shards, minibatch=50,
-                                bank=bank)
-        tr = samp.run(jax.random.PRNGKey(20), theta0, args.rounds,
-                      n_chains=1, collect_every=20)[0]
+        samp = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), shards,
+            minibatch=50, step_size=1e-5, method=method,
+            surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                       if method == "fsgld"
+                       else api.SurrogateSpec(kind="none")),
+            schedule=api.Schedule(rounds=args.rounds, local_steps=40,
+                                  thin=20))
+        tr = samp.sample(jax.random.PRNGKey(20), theta0)[0]
         ll = avg_loglik(tr[tr.shape[0] // 2:], test)
         print(f"  {method:5s}: held-out avg log-lik = {ll:.4f}")
 

@@ -1,17 +1,20 @@
-"""Quickstart: conducive gradients in ~50 lines.
+"""Quickstart: conducive gradients in ~50 lines, through the one front
+door (``repro.api``).
 
 Reproduces the paper's core phenomenon on the Sec 5.1 model: with delayed
 communication (100 local updates) DSGLD drifts toward a mixture of local
-posteriors; FSGLD stays on the true posterior.
+posteriors; FSGLD stays on the true posterior. The same four declarative
+pieces (Posterior / SurrogateSpec / Schedule / Execution) drive every
+scale in this repo — swap the toy log-lik for a transformer's and the
+sampler code does not change.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler,
-                        analytic_gaussian_likelihood_surrogate, make_bank,
+from repro import api
+from repro.core import (analytic_gaussian_likelihood_surrogate, make_bank,
                         summarize)
 
 key = jax.random.PRNGKey(0)
@@ -34,12 +37,15 @@ mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(data)
 bank = make_bank(mu_s, prec_s, "diag")
 
 for method in ("dsgld", "fsgld"):
-    cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=S,
-                        local_updates=100, prior_precision=1.0)
-    sampler = FederatedSampler(log_lik, cfg, {"x": data}, minibatch=10,
-                               bank=bank)
-    chains = sampler.run(jax.random.PRNGKey(2), jnp.zeros(D),
-                         num_rounds=300, n_chains=4, collect_every=10)
+    sampler = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0),
+        {"x": data}, minibatch=10, step_size=1e-4, method=method,
+        surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                   if method == "fsgld"
+                   else api.SurrogateSpec(kind="none")),
+        schedule=api.Schedule(rounds=300, local_steps=100, n_chains=4,
+                              thin=10))
+    chains = sampler.sample(jax.random.PRNGKey(2), jnp.zeros(D))
     chains = chains[:, chains.shape[1] // 2:]
     est = chains.mean(axis=(0, 1))
     mse = float(jnp.sum((est - true_posterior_mean) ** 2))

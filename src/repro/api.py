@@ -1,0 +1,383 @@
+"""One FSGLD front door: the declarative sampler facade.
+
+The paper's pitch is that conducive gradients are a *drop-in* correction
+to DSGLD — one algorithm family parameterized by surrogate, schedule, and
+execution (cf. FA-LD, arXiv:2112.05120; ELF, arXiv:2303.04622). This
+module is that family's single entry point: every workload — the Sec 5.1
+Gaussian toy, the BNN benchmarks, and the billion-parameter transformer
+posterior — routes through the SAME mesh-parallel chain engine
+(``repro.core.engine.MeshChainEngine``), so a new variant lands once, not
+once per scale.
+
+Four declarative pieces:
+
+  * :class:`Posterior`     — log-likelihood + Gaussian prior + temperature.
+  * :class:`SurrogateSpec` — the conducive-gradient surrogates q_s: kind
+    (``none``/``diag``/``scalar``/``linear``/``full``), how to fit them
+    (a prefit bank, gradient-matching ``refresh``, Fisher–Laplace
+    ``fisher``, or per-client ``local_sgld`` runs), and the adaptive
+    refresh schedule.
+  * :class:`Schedule`      — rounds, local steps T, chain count,
+    reassignment rule, trace thinning.
+  * :class:`Execution`     — mesh, executor (``vmap``/``per_leaf``/
+    ``packed``/``auto``), surrogate storage dtype (bf16 at scale),
+    whether to collect a trace or return final states.
+
+and one verb::
+
+    fsgld = FSGLD(posterior, data, minibatch=10, surrogate=spec,
+                  schedule=Schedule(rounds=300, local_steps=100))
+    samples = fsgld.sample(jax.random.PRNGKey(0), theta0)
+
+``sample`` preserves the engine's bit-exactness contract: with the
+default executor on the host mesh it equals the legacy
+``FederatedSampler.run_vmap`` oracle at fp32, noise included.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig
+from repro.core.engine import MeshChainEngine, pad_shards
+from repro.core.federated import fit_bank_fisher, refresh_bank
+from repro.core.surrogate import SurrogateBank, fit_scalar_tree, make_bank
+
+PyTree = Any
+LogLikFn = Callable[[PyTree, PyTree], jax.Array]
+
+__all__ = [
+    "Posterior", "SurrogateSpec", "Schedule", "Execution", "FSGLD",
+    "fit_bank_local_sgld",
+]
+
+_EXECUTORS = ("auto", "vmap", "per_leaf", "packed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Posterior:
+    """The target: log p(theta | x) ∝ prior * likelihood.
+
+    ``log_lik(theta, batch) -> scalar`` is the minibatch log-likelihood
+    (summed over the batch); the prior is N(0, prior_precision^-1 I).
+    ``temperature`` scales the injected noise (0 -> MAP/SGD limit).
+    """
+    log_lik: LogLikFn
+    prior_precision: float = 1.0
+    temperature: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateSpec:
+    """How the conducive-gradient surrogates q_s are built and refreshed.
+
+    kind:
+      'none'   — no surrogate: the sampler runs DSGLD (or centralized
+                 SGLD, see ``FSGLD`` method resolution).
+      'diag'   — per-dimension Gaussian precisions (flat-vector params).
+      'scalar' — per-tensor isotropic Gaussians (pytree params; the
+                 billion-parameter format).
+      'linear' — control-variate surrogates (bounded conducive term).
+      'full'   — dense precision (paper-scale models only).
+
+    fit (used when ``bank`` is None):
+      'auto'       — 'refresh' for diag, 'local_sgld' for scalar.
+      'refresh'    — gradient-matching Fisher fit at theta0
+                     (``repro.core.refresh_bank``; no RNG, diag only).
+      'fisher'     — Fisher–Laplace fit at theta0 (diag only).
+      'local_sgld' — short per-client SGLD runs against the local
+                     likelihood + moment fits (paper Sec 3.1; the
+                     large-model phase 1). Uses fit_steps/fit_minibatch/
+                     fit_step_size.
+
+    ``refresh_every`` re-fits the bank every that many rounds at the
+    current chain mean (adaptive refresh — diag banks only).
+    """
+    kind: str = "diag"
+    bank: Optional[SurrogateBank] = None
+    fit: str = "auto"
+    refresh_every: Optional[int] = None
+    fit_steps: int = 200
+    fit_minibatch: int = 32
+    fit_step_size: Optional[float] = None
+
+    def __post_init__(self):
+        assert self.kind in ("none", "diag", "scalar", "linear", "full"), \
+            self.kind
+        assert self.fit in ("auto", "refresh", "fisher", "local_sgld"), \
+            self.fit
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """The communication schedule of Algorithm 1.
+
+    rounds x local_steps Langevin updates per chain; ``reassign`` is the
+    chain->client rule ('categorical' = the paper's i.i.d. draw,
+    'permutation' = the collision-free SPMD variant); ``thin`` keeps every
+    thin-th local step in the trace.
+    """
+    rounds: int
+    local_steps: int = 40
+    n_chains: int = 1
+    reassign: str = "categorical"
+    thin: int = 1
+
+    def __post_init__(self):
+        assert self.reassign in ("categorical", "permutation"), self.reassign
+
+
+@dataclasses.dataclass(frozen=True)
+class Execution:
+    """Where and how the chains run.
+
+    mesh: a ('data', 'model') jax mesh (None -> the 1x1 host mesh).
+    executor:
+      'vmap'     — the reference executor (pure-jnp update, vmapped chain
+                   blocks inside shard_map; bit-identical to the legacy
+                   ``run_vmap`` oracle).
+      'per_leaf' — chain-batched fused Pallas kernel, one pallas_call per
+                   leaf per step.
+      'packed'   — single-launch packed executor: ONE pallas_call per step
+                   for the whole chain block (fp32 params only).
+      'auto'     — 'packed' on TPU backends, 'vmap' elsewhere (the Pallas
+                   kernels run interpreted off-TPU, which is for
+                   correctness work, not speed).
+    dtype: surrogate STORAGE dtype override (e.g. jnp.bfloat16): the bank
+      means are stored at this dtype — the large-model memory format.
+    collect: False returns final chain states instead of a trace (the
+      trace of a billion-parameter posterior does not fit anywhere).
+    """
+    mesh: Any = None
+    executor: str = "auto"
+    dtype: Any = None
+    collect: bool = True
+
+    def __post_init__(self):
+        assert self.executor in _EXECUTORS, self.executor
+
+
+class FSGLD:
+    """The unified sampler: one constructor, one ``sample``.
+
+    data: client shards — either a pytree with stacked (S, n, ...) leaves
+    or a list of per-client pytrees (ragged clients are padded with
+    ``pad_shards`` and the pad rows are provably dead). ``method``
+    selects the estimator family ('fsgld' needs a surrogate kind other
+    than 'none'; 'dsgld'/'sgld' ignore surrogates). ``kernel`` selects
+    the transition dynamics: 'sgld' (the Langevin family above) or
+    'sghmc' (federated SGHMC with the SAME conducive estimator stack —
+    see repro.core.sghmc; ``friction`` is its alpha_f knob).
+    """
+
+    def __init__(self, posterior: Posterior, data: PyTree, *,
+                 minibatch: int, step_size: float = 1e-4,
+                 method: str = "fsgld", kernel: str = "sgld",
+                 alpha: float = 1.0, friction: float = 0.1,
+                 surrogate: Optional[SurrogateSpec] = None,
+                 schedule: Optional[Schedule] = None,
+                 execution: Optional[Execution] = None,
+                 shard_probs: Optional[tuple] = None,
+                 sizes: Optional[tuple] = None):
+        if method not in ("sgld", "dsgld", "fsgld"):
+            raise ValueError(method)
+        if kernel not in ("sgld", "sghmc"):
+            raise ValueError(kernel)
+        self.posterior = posterior
+        self.surrogate = surrogate if surrogate is not None \
+            else (SurrogateSpec() if method == "fsgld"
+                  else SurrogateSpec(kind="none"))
+        if method == "fsgld" and self.surrogate.kind == "none":
+            raise ValueError("method='fsgld' needs a surrogate kind other "
+                             "than 'none' (that's DSGLD)")
+        self.schedule = schedule if schedule is not None \
+            else Schedule(rounds=100)
+        self.execution = execution if execution is not None else Execution()
+        self.kernel = kernel
+        self.friction = friction
+
+        if isinstance(data, (list, tuple)):
+            data, inferred = pad_shards(list(data))
+            sizes = sizes if sizes is not None else inferred
+        self.data = data
+        self.sizes = sizes
+        num_shards = jax.tree.leaves(data)[0].shape[0]
+        self.cfg = SamplerConfig(
+            method=method, step_size=step_size, num_shards=num_shards,
+            shard_probs=shard_probs,
+            local_updates=self.schedule.local_steps, alpha=alpha,
+            surrogate=(self.surrogate.kind
+                       if self.surrogate.kind != "none" else "diag"),
+            prior_precision=posterior.prior_precision,
+            temperature=posterior.temperature)
+        self.minibatch = minibatch
+        self.bank = (self.surrogate.bank if self.execution.dtype is None
+                     or self.surrogate.bank is None
+                     else self.surrogate.bank.astype(self.execution.dtype))
+        self._engine = None
+
+    # -- surrogate fitting (phase 1: computed once, communicated once) ----
+
+    def fit(self, key: jax.Array, theta0: PyTree) -> SurrogateBank:
+        """Fit the surrogate bank per the spec and install it. Called
+        automatically by ``sample`` when needed; exposed so drivers can
+        time / inspect phase 1. ``key`` feeds only the stochastic fit
+        methods ('local_sgld'); deterministic fits ignore it."""
+        spec = self.surrogate
+        if spec.kind == "none":
+            raise ValueError("surrogate kind 'none': nothing to fit")
+        fit = spec.fit
+        if fit == "auto":
+            fit = "local_sgld" if spec.kind == "scalar" else "refresh"
+        if fit == "refresh":
+            bank = refresh_bank(self.posterior.log_lik, self.data, theta0)
+        elif fit == "fisher":
+            S = self.cfg.num_shards
+            means = jnp.broadcast_to(theta0[None], (S,) + theta0.shape)
+            bank = fit_bank_fisher(self.posterior.log_lik, self.data, means)
+        elif fit == "local_sgld":
+            bank = fit_bank_local_sgld(
+                self.posterior.log_lik, self.data, theta0, key,
+                fit_steps=spec.fit_steps, minibatch=spec.fit_minibatch,
+                step_size=(spec.fit_step_size if spec.fit_step_size
+                           is not None else self.cfg.step_size),
+                kind=spec.kind)
+        else:
+            raise ValueError(fit)
+        if self.execution.dtype is not None:
+            bank = bank.astype(self.execution.dtype)
+        self.bank = bank
+        self._engine = None
+        return bank
+
+    # -- engine resolution -------------------------------------------------
+
+    def _resolve_executor(self) -> tuple[bool, Optional[bool]]:
+        """executor name -> (use_kernel, packed) engine knobs."""
+        ex = self.execution.executor
+        if self.kernel == "sghmc":
+            if ex in ("per_leaf", "packed"):
+                raise ValueError(
+                    "kernel='sghmc' runs the reference executor (the "
+                    "fused Pallas kernels implement the Langevin update); "
+                    "use executor='vmap' or 'auto'")
+            return False, None
+        if ex == "auto":
+            if jax.default_backend() == "tpu":
+                # engine auto mode: packed for fp32 params, silent
+                # per-leaf fallback otherwise (packed=None) — 'auto' must
+                # not crash on the mixed-dtype models it exists for
+                return True, None
+            ex = "vmap"
+        if ex == "vmap":
+            return False, None
+        if ex == "per_leaf":
+            return True, False
+        return True, True  # 'packed' (strict: raises on non-fp32)
+
+    @property
+    def engine(self) -> MeshChainEngine:
+        """The (cached) chain engine every workload routes through."""
+        if self._engine is None:
+            use_kernel, packed = self._resolve_executor()
+            sghmc = None
+            if self.kernel == "sghmc":
+                from repro.core.sghmc import SGHMCConfig
+                sghmc = SGHMCConfig(friction=self.friction,
+                                    temperature=self.posterior.temperature)
+            self._engine = MeshChainEngine(
+                self.posterior.log_lik, self.cfg, self.data,
+                self.minibatch,
+                bank=self.bank if self.cfg.method == "fsgld" else None,
+                use_kernel=use_kernel, mesh=self.execution.mesh,
+                sizes=self.sizes, packed=packed,
+                dynamics=("sghmc" if self.kernel == "sghmc"
+                          else "langevin"),
+                sghmc=sghmc)
+        return self._engine
+
+    # -- phase 2: sampling -------------------------------------------------
+
+    def sample(self, key: jax.Array, theta0: PyTree, *,
+               rounds: Optional[int] = None,
+               n_chains: Optional[int] = None):
+        """Run the full schedule and return stacked samples with leading
+        axes (n_chains, rounds * local_steps / thin, ...) — or the final
+        chain states when ``Execution.collect`` is False.
+
+        ``key`` drives sampling only (surrogate fitting, if still needed,
+        uses a folded sub-key), so a prefit-bank run consumes exactly the
+        oracle's RNG stream. ``rounds``/``n_chains`` override the
+        schedule for sweep drivers; everything else is fixed at
+        construction.
+        """
+        if (self.cfg.method == "fsgld" and self.bank is None):
+            self.fit(jax.random.fold_in(key, 0x5357), theta0)
+        sched = self.schedule
+        return self.engine.run(
+            key, theta0, rounds if rounds is not None else sched.rounds,
+            n_chains=(n_chains if n_chains is not None
+                      else sched.n_chains),
+            reassign=sched.reassign, collect_every=sched.thin,
+            refresh_every=self.surrogate.refresh_every,
+            collect=self.execution.collect)
+
+
+# ---------------------------------------------------------------------------
+# generic per-client local-SGLD surrogate fitting (paper Sec 3.1 phase 1)
+# ---------------------------------------------------------------------------
+
+def fit_bank_local_sgld(log_lik_fn: LogLikFn, shard_data: PyTree,
+                        theta0: PyTree, key: jax.Array, *,
+                        fit_steps: int, minibatch: int, step_size: float,
+                        kind: str = "scalar",
+                        lam_floor: float = 1e-8) -> SurrogateBank:
+    """Short SGLD runs per client against the LOCAL likelihood + moment
+    fits — the generic form of the large-model phase 1 (previously a
+    private helper in launch/train.py). Works on any parameter pytree;
+    ``kind='scalar'`` fits per-tensor isotropic Gaussians from the second
+    half of each local trace, ``kind='diag'`` per-dimension ones (flat
+    vector params only)."""
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, n_s = leaf.shape[0], leaf.shape[1]
+
+    def local_sgld(data_s, k):
+        def body(theta, kk):
+            k1, k2 = jax.random.split(kk)
+            idx = jax.random.randint(k1, (minibatch,), 0, n_s)
+            batch = jax.tree.map(lambda d: d[idx], data_s)
+            g = jax.grad(log_lik_fn)(theta, batch)
+            leaves, tdef = jax.tree.flatten(theta)
+            gl = jax.tree.leaves(g)
+            ks = jax.random.split(k2, len(leaves))
+            new = [t + (step_size / 2) * (n_s / minibatch)
+                   * gg.astype(t.dtype)
+                   + jnp.sqrt(step_size)
+                   * jax.random.normal(nk, t.shape, t.dtype)
+                   for t, gg, nk in zip(leaves, gl, ks)]
+            theta = jax.tree.unflatten(tdef, new)
+            return theta, theta
+
+        _, trace = jax.lax.scan(body, theta0,
+                                jax.random.split(k, fit_steps))
+        # keep the second half of the trace (burn-in discarded)
+        return jax.tree.map(lambda t: t[fit_steps // 2:], trace)
+
+    traces = jax.jit(jax.vmap(local_sgld))(shard_data,
+                                           jax.random.split(key, S))
+    if kind == "scalar":
+        # per-shard per-tensor isotropic fits; vmap keeps the shard axis
+        means, precs = jax.vmap(
+            lambda tr: fit_scalar_tree(tr, jitter=lam_floor))(traces)
+        return make_bank(means, precs, "scalar")
+    if kind == "diag":
+        flat = jax.tree.leaves(traces)
+        assert len(flat) == 1 and flat[0].ndim == 3, \
+            "diag fits need flat-vector parameters"
+        mu = flat[0].mean(1)
+        precs = 1.0 / (flat[0].var(1) + lam_floor)
+        return make_bank(mu, precs, "diag")
+    raise ValueError(kind)

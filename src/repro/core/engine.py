@@ -130,24 +130,31 @@ def _make_batch_sampler(cfg: SamplerConfig, scheme: ShardScheme,
 
 def make_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
                   scheme: ShardScheme, step_fn, minibatch: int,
-                  collect: bool = True):
+                  collect: bool = True, collect_state=None):
     """Client-side Update(T, theta_0, s) for ONE chain — the same math as
     the legacy ``FederatedSampler._round`` generalised to ragged shards.
-    Returns round(theta, key, shard_id, shard_data, bank_rt)."""
-    sample = _make_batch_sampler(cfg, scheme, minibatch)
+    Returns round(state, key, shard_id, shard_data, bank_rt).
 
-    def round_fn(theta, key, shard_id, shard_data, bank_rt=None):
+    ``state`` is whatever pytree ``step_fn`` carries: the parameter pytree
+    for Langevin dynamics, the (theta, momentum) pair for SGHMC.
+    ``collect_state`` projects the carried state to the traced sample
+    (identity by default; SGHMC traces theta only)."""
+    sample = _make_batch_sampler(cfg, scheme, minibatch)
+    if collect_state is None:
+        collect_state = lambda s: s  # noqa: E731
+
+    def round_fn(state, key, shard_id, shard_data, bank_rt=None):
         def body(carry, k):
-            theta = carry
+            state = carry
             k_batch, k_step = jax.random.split(k)
             batch = sample(k_batch, shard_id, shard_data)
-            theta = step_fn(theta, k_step, batch, shard_id, minibatch,
+            state = step_fn(state, k_step, batch, shard_id, minibatch,
                             bank_rt=bank_rt)
-            return theta, theta if collect else None
+            return state, collect_state(state) if collect else None
 
         keys = jax.random.split(key, cfg.local_updates)
-        theta, trace = jax.lax.scan(body, theta, keys)
-        return theta, trace
+        state, trace = jax.lax.scan(body, state, keys)
+        return state, trace
 
     return round_fn
 
@@ -345,6 +352,19 @@ class MeshChainEngine:
     leaf is not fp32 (the packed buffer carries fp32 state across steps,
     which would skip the per-step dtype round-trip lower-precision
     parameters get on the per-leaf path).
+
+    ``dynamics='sghmc'`` swaps the per-step update for federated SGHMC
+    (core/sghmc.py) over (theta, momentum) chain state — same estimator
+    stack, reassignment, and collective path; the trace carries theta
+    only. SGHMC runs the reference executor (``use_kernel`` must stay
+    False: the fused kernels implement the Langevin update).
+
+    ``n_chains`` no longer needs to divide the mesh data axis: odd chain
+    counts are padded with dummy chains up to the next multiple (the pad
+    chains run on the last data group(s) and are sliced out of every
+    output). The REAL chains' RNG streams are derived from the true
+    ``n_chains``, so a padded run stays bit-identical to the
+    ``run_vmap`` oracle with the same chain count.
     """
     log_lik_fn: LogLikFn
     cfg: SamplerConfig
@@ -355,6 +375,8 @@ class MeshChainEngine:
     mesh: Any = None
     sizes: Optional[tuple] = None
     packed: Optional[bool] = None
+    dynamics: str = "langevin"
+    sghmc: Any = None  # Optional[SGHMCConfig]; None -> defaults
 
     def __post_init__(self):
         if self.mesh is None:
@@ -367,8 +389,22 @@ class MeshChainEngine:
                  else tuple(int(n) for n in self.sizes))
         assert len(sizes) == s and max(sizes) == max_n, (sizes, max_n)
         self.scheme = ShardScheme(sizes=sizes, probs=self.cfg.probs())
-        self.step_fn = make_step_fn(self.log_lik_fn, self.cfg, self.scheme,
-                                    self.bank, use_kernel=False)
+        if self.dynamics == "sghmc":
+            if self.use_kernel or self.packed:
+                raise ValueError(
+                    "dynamics='sghmc' runs the reference executor: the "
+                    "fused Pallas kernels implement the Langevin update "
+                    "(pass use_kernel=False)")
+            from repro.core.sghmc import SGHMCConfig, make_sghmc_step
+            self.step_fn = make_sghmc_step(
+                self.log_lik_fn, self.cfg, self.scheme, self.bank,
+                self.sghmc if self.sghmc is not None else SGHMCConfig())
+        elif self.dynamics == "langevin":
+            self.step_fn = make_step_fn(self.log_lik_fn, self.cfg,
+                                        self.scheme, self.bank,
+                                        use_kernel=False)
+        else:
+            raise ValueError(self.dynamics)
         self._executors = {}
 
     # -- executors ---------------------------------------------------------
@@ -393,7 +429,8 @@ class MeshChainEngine:
                              "leaves (carries fp32 state across steps)")
         return kops.make_packed_layout(theta0)
 
-    def _executor(self, *, num_rounds: int, n_chains: int, reassign: str,
+    def _executor(self, *, num_rounds: int, n_chains: int,
+                  n_total: Optional[int] = None, reassign: str,
                   collect: bool, collect_every: int,
                   layout: Optional[kops.PackedChains]):
         """jit(shard_map(scan-over-rounds)) executor: ONE dispatch runs
@@ -402,15 +439,25 @@ class MeshChainEngine:
         inside the scan. Chain state is donated, the trace comes back as
         a preallocated (C, num_rounds * ceil(T/collect_every), ...) block,
         and the final round key is returned so chunked callers (adaptive
-        refresh) continue the same stream. Cached per configuration."""
-        cache_key = (num_rounds, n_chains, reassign, collect,
+        refresh) continue the same stream. Cached per configuration.
+
+        ``n_chains`` is the REAL chain count (the RNG fan-out width — it
+        must match the oracle's); ``n_total`` >= n_chains is the padded
+        count actually resident on the mesh (a data-axis multiple). Pad
+        chains get sid 0 (categorical; their permutation slot otherwise)
+        and a zero key; their trajectories are computed and discarded by
+        ``run``'s output slice."""
+        if n_total is None:
+            n_total = n_chains
+        cache_key = (num_rounds, n_chains, n_total, reassign, collect,
                      collect_every, layout)
         if cache_key in self._executors:
             return self._executors[cache_key]
 
         cfg = self.cfg
         S = cfg.num_shards
-        per = n_chains // self.mesh.shape["data"]
+        per = n_total // self.mesh.shape["data"]
+        n_pad = n_total - n_chains
         probs = jnp.asarray(cfg.probs())
         bank_kind = self.bank.kind if self.bank is not None else None
 
@@ -425,11 +472,22 @@ class MeshChainEngine:
         else:
             one_chain = make_round_fn(
                 self.log_lik_fn, cfg, self.scheme, self.step_fn,
-                self.minibatch, collect=collect)
+                self.minibatch, collect=collect,
+                collect_state=((lambda s: s[0])
+                               if self.dynamics == "sghmc" else None))
 
             def round_fn(thetas, keys, sids, shard_data, bank_rt):
                 return jax.vmap(one_chain, in_axes=(0, 0, 0, None, None))(
                     thetas, keys, sids, shard_data, bank_rt)
+
+        def pad_tail(arr):
+            """Extend a (n_chains, ...) per-chain operand to n_total rows
+            with zeros for the dummy pad chains (concatenate, not `pad`:
+            the scan bodies carry a no-pad-primitive jaxpr guarantee)."""
+            if n_pad == 0:
+                return arr
+            tail = jnp.zeros((n_pad,) + arr.shape[1:], arr.dtype)
+            return jnp.concatenate([arr, tail])
 
         def block(key, chains, shard_data, bank_rt):
             if layout is not None:
@@ -448,14 +506,14 @@ class MeshChainEngine:
                     sids = jnp.zeros((per,), jnp.int32)
                 elif reassign == "categorical":   # paper Algorithm 1
                     sids = jax.lax.dynamic_slice_in_dim(
-                        jax.random.categorical(
+                        pad_tail(jax.random.categorical(
                             k_assign,
-                            jnp.log(probs)[None].repeat(n_chains, 0)),
+                            jnp.log(probs)[None].repeat(n_chains, 0))),
                         blk, per)
                 else:                             # SPMD variant (DESIGN 4.1)
                     sids = _perm_sids_slice(k_assign, S, blk, per)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
-                    jax.random.split(k_run, n_chains), blk, per)
+                    pad_tail(jax.random.split(k_run, n_chains)), blk, per)
                 state, trace = round_fn(state, keys_blk, sids, shard_data,
                                         rt_bank)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
@@ -506,7 +564,7 @@ class MeshChainEngine:
     def run(self, key: jax.Array, theta0: PyTree, num_rounds: int, *,
             n_chains: int = 1, reassign: str = "categorical",
             collect_every: int = 1, refresh_every: Optional[int] = None,
-            collect: bool = True):
+            collect: bool = True, stacked: bool = False):
         """Same contract (and same RNG stream) as the legacy
         ``FederatedSampler.run``: returns stacked samples with leading axes
         (n_chains, num_rounds * T_local / collect_every, ...), or the final
@@ -516,25 +574,59 @@ class MeshChainEngine:
         All rounds execute as ONE jitted scan (one host dispatch per run;
         with ``refresh_every``, one per refresh segment — the refresh
         itself is a host-side surrogate re-fit between segments).
+
+        ``stacked=True`` treats ``theta0`` as per-chain states with a
+        leading (n_chains, ...) axis instead of one state to broadcast —
+        the entry point for round-at-a-time drivers that carry chain
+        state across calls (the retired launch/steps.py federated round).
+
+        ``dynamics='sghmc'`` engines accept the plain parameter pytree
+        and pair it with zero momenta internally (the momenta are part of
+        the mailed chain state); ``collect=False`` returns the
+        (theta, momentum) pairs.
         """
         d_size = self.mesh.shape["data"]
-        if n_chains % d_size:
-            raise ValueError(
-                f"n_chains={n_chains} must divide over the data axis "
-                f"({d_size})")
+        n_total = n_chains + (-n_chains) % d_size
         if self.cfg.method != "sgld" and reassign not in ("categorical",
                                                           "permutation"):
             raise ValueError(reassign)
         if self.cfg.method != "sgld" and reassign == "permutation":
-            assert n_chains <= self.cfg.num_shards, \
-                (n_chains, self.cfg.num_shards)
-        layout = self._layout_for(theta0)
+            if n_total > self.cfg.num_shards:
+                raise ValueError(
+                    f"permutation reassignment needs n_chains (padded to "
+                    f"the data axis: {n_total}) <= num_shards "
+                    f"({self.cfg.num_shards}); use reassign='categorical'")
+        if self.dynamics == "sghmc":
+            if refresh_every:
+                raise NotImplementedError(
+                    "adaptive refresh is not wired for sghmc dynamics")
+            from repro.core.sghmc import init_momentum
+            if stacked:
+                theta0 = (theta0, jax.tree.map(jnp.zeros_like, theta0))
+            else:
+                theta0 = (theta0, init_momentum(theta0))
+        layout = self._layout_for(
+            jax.tree.map(lambda t: t[0], theta0) if stacked else theta0)
         cshard = NamedSharding(self.mesh, self._chain_spec())
-        chains = jax.device_put(
-            jax.tree.map(
+        if stacked:
+            assert jax.tree.leaves(theta0)[0].shape[0] == n_chains, \
+                (jax.tree.leaves(theta0)[0].shape, n_chains)
+            # pad chains replicate chain 0's state (their updates are
+            # computed and discarded — any finite state works). The
+            # unpadded leaves are COPIED: the executor donates its chain
+            # operand, and donating the caller's own arrays would delete
+            # them under a round-at-a-time driver.
+            chains = jax.tree.map(
+                lambda t: jnp.concatenate(
+                    [t, jnp.broadcast_to(t[:1], (n_total - n_chains,)
+                                         + t.shape[1:])])
+                if n_total > n_chains else t.copy(), theta0)
+        else:
+            chains = jax.tree.map(
                 lambda t: jnp.broadcast_to(
-                    t[None], (n_chains,) + t.shape).copy(), theta0),
-            jax.tree.map(lambda _: cshard, theta0))
+                    t[None], (n_total,) + t.shape).copy(), theta0)
+        chains = jax.device_put(
+            chains, jax.tree.map(lambda _: cshard, chains))
         bank_rt = self.bank
         seg_len = (refresh_every if (refresh_every
                                      and self.cfg.method == "fsgld")
@@ -551,19 +643,24 @@ class MeshChainEngine:
                     raise NotImplementedError(
                         "adaptive refresh supports flat-parameter 'diag' "
                         f"banks only (got {getattr(self.bank, 'kind', None)!r})")
-                center = jax.tree.map(lambda t: t.mean(0), chains)
+                center = jax.tree.map(
+                    lambda t: t[:n_chains].mean(0), chains)
                 bank_rt = self.refresh(center)
             seg = min(seg_len, num_rounds - r0)
             execute = self._executor(
-                num_rounds=seg, n_chains=n_chains, reassign=reassign,
-                collect=collect, collect_every=collect_every, layout=layout)
+                num_rounds=seg, n_chains=n_chains, n_total=n_total,
+                reassign=reassign, collect=collect,
+                collect_every=collect_every, layout=layout)
             chains, trace, key = execute(key, chains, self.shard_data,
                                          bank_rt)
             if collect:
                 out.append(trace)
             r0 += seg
+        take = (lambda t: t[:n_chains]) if n_total > n_chains \
+            else (lambda t: t)
         if not collect:
-            return chains
+            return jax.tree.map(take, chains)
+        out = [jax.tree.map(take, t) for t in out]
         if len(out) == 1:
             return out[0]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out)

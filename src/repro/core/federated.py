@@ -10,6 +10,7 @@ variant (DESIGN.md Sec 4.1).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -22,6 +23,23 @@ from repro.core.surrogate import (Gaussian, SurrogateBank, fit_gaussian,
 
 PyTree = Any
 
+_deprecation_warned = False
+
+
+def _warn_deprecated():
+    """One DeprecationWarning per process: FederatedSampler survives as a
+    thin shim over the chain engine (``run`` already delegates) plus the
+    ``run_vmap`` bit-exactness oracle; new code goes through the
+    ``repro.api`` facade."""
+    global _deprecation_warned
+    if not _deprecation_warned:
+        warnings.warn(
+            "FederatedSampler is deprecated: construct the sampler "
+            "through repro.api.FSGLD (same engine, same bit-exact "
+            "results; FederatedSampler.run_vmap remains the regression "
+            "oracle)", DeprecationWarning, stacklevel=3)
+        _deprecation_warned = True
+
 
 def _minibatch(key, shard_data: PyTree, shard_id, n_s: int, m: int) -> PyTree:
     """Sample m indices with replacement from shard ``shard_id`` (matching
@@ -33,7 +51,10 @@ def _minibatch(key, shard_data: PyTree, shard_id, n_s: int, m: int) -> PyTree:
 
 @dataclasses.dataclass
 class FederatedSampler:
-    """Paper-scale runtime for SGLD / DSGLD / FSGLD.
+    """DEPRECATED paper-scale runtime for SGLD / DSGLD / FSGLD — use
+    ``repro.api.FSGLD``. Kept as a thin shim (``run`` delegates to the
+    chain engine and is bit-identical to the facade) and as the home of
+    the ``run_vmap`` regression oracle.
 
     shard_data: pytree with leaves (S, N_s, ...) — equally-sized shards.
     """
@@ -45,6 +66,7 @@ class FederatedSampler:
     use_kernel: bool = False
 
     def __post_init__(self):
+        _warn_deprecated()
         leaf = jax.tree.leaves(self.shard_data)[0]
         s, n = leaf.shape[0], leaf.shape[1]
         assert s == self.cfg.num_shards, (s, self.cfg.num_shards)

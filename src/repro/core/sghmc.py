@@ -47,10 +47,10 @@ def make_sghmc_step(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     a = hmc.friction
     noise_sig = jnp.sqrt(2.0 * a * hmc.temperature)
 
-    def step(state, key, batch, shard_id, m, step_size=None):
+    def step(state, key, batch, shard_id, m, step_size=None, bank_rt=None):
         theta, r = state
         h = cfg.step_size if step_size is None else step_size
-        d = drift_fn(theta, batch, shard_id, m)
+        d = drift_fn(theta, batch, shard_id, m, bank_rt)
         xi = tree_randn_like(key, theta)
         r = jax.tree.map(
             lambda rr, dd, nn: ((1.0 - a) * rr + h * dd.astype(rr.dtype)

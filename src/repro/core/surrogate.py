@@ -104,10 +104,28 @@ class SurrogateBank:
         return Gaussian(_tree_index(self.means, s),
                         _tree_index(self.precs, s), self.kind)
 
+    def astype(self, dtype) -> "SurrogateBank":
+        """Bank with means STORED at ``dtype`` (e.g. bf16 at billion-param
+        scale — the large-model runtime's surrogate memory format).
+        Precisions stay fp32: they are tiny (scalar per tensor / one vector)
+        and enter the update as multipliers, where bf16 rounding would bias
+        the conducive term rather than just blur the anchor point. All
+        gradient paths upcast means at use (``Gaussian.grad_log``), so a
+        bf16 bank is a drop-in for every executor."""
+        cast = lambda t: jax.tree.map(  # noqa: E731
+            lambda l: l.astype(dtype), t)
+        return SurrogateBank(
+            cast(self.means), self.precs,
+            Gaussian(cast(self.global_.mean), self.global_.prec, self.kind),
+            self.kind)
 
-def make_bank(means: PyTree, precs: PyTree, kind: str) -> SurrogateBank:
+
+def make_bank(means: PyTree, precs: PyTree, kind: str,
+              store_dtype=None) -> SurrogateBank:
     """Build a bank from stacked per-shard means/precisions and precompute
-    the product-Gaussian global surrogate."""
+    the product-Gaussian global surrogate. ``store_dtype`` stores the means
+    (only) at a reduced dtype — see ``SurrogateBank.astype``. The global
+    product is computed in the input dtype BEFORE the cast."""
     if kind == "linear":
         # product of linear members: b_g = sum_s b_s (grad of log prod)
         mean_g = jax.tree.map(lambda b: b.sum(0), means)
@@ -129,7 +147,8 @@ def make_bank(means: PyTree, precs: PyTree, kind: str) -> SurrogateBank:
             means, precs, prec_g)
     else:
         raise ValueError(kind)
-    return SurrogateBank(means, precs, Gaussian(mean_g, prec_g, kind), kind)
+    bank = SurrogateBank(means, precs, Gaussian(mean_g, prec_g, kind), kind)
+    return bank if store_dtype is None else bank.astype(store_dtype)
 
 
 # ---------------------------------------------------------------------------

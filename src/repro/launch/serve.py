@@ -1,8 +1,13 @@
 """Batched serving driver: prefill (runs the full forward) + decode loop
 against the KV cache / recurrent state, serving a posterior sample.
 
+The sample comes from the ``repro.api`` facade: point ``--ckpt`` at a
+checkpoint written by ``repro.launch.train`` (one draw from the FSGLD
+weight posterior) and this driver serves it; without ``--ckpt`` it serves
+freshly initialised weights (shape smoke).
+
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+        --batch 4 --prompt-len 32 --gen 16 [--ckpt /path/from/train]
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import make_serve_step
@@ -27,12 +33,23 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--ckpt", default=None,
+                    help="posterior-sample checkpoint from "
+                         "repro.launch.train (repro.api.FSGLD output); "
+                         "omitted -> fresh init_params")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(cfg, key)
+    if args.ckpt:
+        params, step, extra = checkpoint.restore(args.ckpt, params)
+        # np_checkpoint restores host numpy arrays; device-put them so
+        # tracer-indexed gathers (embed lookup) stay jittable
+        params = jax.tree.map(jnp.asarray, params)
+        print(f"serving posterior sample from {args.ckpt} "
+              f"(round {step}, method={extra.get('method')})")
     B = args.batch
     total = args.prompt_len + args.gen
 

@@ -1,8 +1,16 @@
 """pjit-able step functions for the production runtime.
 
-LARGE-MODEL mode (DESIGN.md Sec 4): one global chain; the FSGLD update for
-the full transformer posterior with per-tensor scalar-precision surrogates.
-``train_step`` is what the multi-pod dry-run lowers for every architecture.
+LARGE-MODEL mode (DESIGN.md Sec 4): the FSGLD update for the full
+transformer posterior with per-tensor scalar-precision surrogates.
+``train_step`` is what the multi-pod dry-run lowers for every
+architecture; the actual sampling loop (single- and multi-chain) runs on
+the chain engine via ``repro.api.FSGLD`` — the ppermute federated round
+that used to live here is retired (see ``make_federated_round``).
+
+Surrogates everywhere are ``repro.core.surrogate.SurrogateBank`` (with a
+bf16 storage option); the flat ``{mu_g, mu_s, lam_g, lam_s}`` dict these
+step functions consume is just the bank's per-round lowering operand
+(``bank_round_state`` / ``init_surrogate_state``).
 
 Serving lowers ``serve_step`` (one token against a KV cache / recurrent
 state) and ``prefill_step``.
@@ -36,10 +44,27 @@ def make_surrogate_state(params_shape: PyTree, dtype=jnp.bfloat16) -> PyTree:
 def init_surrogate_state(params: PyTree, *, lam: float = 1e-4,
                          dtype=jnp.bfloat16) -> PyTree:
     """Concrete surrogate state centred on the current params — the warm
-    'identity' surrogate used before local fits are communicated."""
+    'identity' surrogate used before local fits are communicated (the
+    round-state a one-shard SurrogateBank at ``params`` would lower to,
+    built directly to stay bit-stable)."""
     means = jax.tree.map(lambda p: p.astype(dtype), params)
     lams = jax.tree.map(lambda p: jnp.float32(lam), params)
     return {"mu_g": means, "mu_s": means, "lam_g": lams, "lam_s": lams}
+
+
+def bank_round_state(bank, s, dtype=jnp.bfloat16) -> PyTree:
+    """SurrogateBank -> the flat per-round operand ``make_train_step``
+    consumes: global + resident-client ('scalar' kind) means at the
+    storage dtype, fp32 scalar precisions. The bridge between the ONE
+    surrogate protocol (repro.core.surrogate.SurrogateBank) and the
+    lowering-time dict the pjit step functions take."""
+    assert bank.kind == "scalar", bank.kind
+    q_s = bank.shard(s)
+    cast = lambda t: jax.tree.map(  # noqa: E731
+        lambda l: l.astype(dtype), t)
+    return {"mu_g": cast(bank.global_.mean), "mu_s": cast(q_s.mean),
+            "lam_g": jax.tree.map(jnp.float32, bank.global_.prec),
+            "lam_s": jax.tree.map(jnp.float32, q_s.prec)}
 
 
 def make_train_step(cfg: ArchConfig, sampler: SamplerConfig, *,
@@ -112,54 +137,80 @@ def make_serve_step(cfg: ArchConfig, *, with_enc: Optional[bool] = None):
 
 
 # ---------------------------------------------------------------------------
-# FEDERATED mode: C = |data axis| parallel chains, T_local in-client steps,
-# chain reassignment as one collective-permute over the data axis.
+# FEDERATED mode: the large-model communication round now RUNS ON THE CHAIN
+# ENGINE (core/engine.py) — chains shard over the mesh 'data' axis with the
+# engine's SPMD permutation reassignment and scanned round bodies, the same
+# reassignment/collective path the small-model configs use. The private
+# ppermute ring loop that used to live here is retired; only a deprecation
+# shim remains.
 # ---------------------------------------------------------------------------
 
+_federated_round_warned = False
+
+
 def make_federated_round(cfg: ArchConfig, sampler: SamplerConfig, mesh, *,
-                         scale: float, n_chains: int):
-    """One communication round in federated mode (DESIGN.md Sec 4.1).
+                         scale: float = None, n_chains: int,
+                         minibatch: int = 8):
+    """DEPRECATED shim: the large-model federated round runs on
+    ``repro.core.engine.MeshChainEngine`` (drive it through
+    ``repro.api.FSGLD``). This wrapper keeps the old constructor shape
+    but the returned callable now has the engine contract
 
-    chains: params pytree with a leading chain axis (C,) sharded over
-    'data' — each data-group hosts ONE chain resident at ONE client.
-    surr: per-client surrogate state stacked over the same axis (each
-    client stores its own q_s locally; the global q is replicated inside).
-    After T_local local FSGLD steps, chains rotate to the next client via
-    ``jax.lax.ppermute`` — the paper's 'Reassign_chain' as one ICI hop.
-    The ring schedule visits every client equally often, preserving the
-    uniform f_s = 1/S marginal of Algorithm 1 (ppermute permutations are
-    compile-time static, so the i.i.d.-categorical variant lives only in
-    the simulator; see DESIGN.md Sec 4.1).
-    """
-    from jax.experimental.shard_map import shard_map
+        round(chains, bank, shard_data, key) -> chains
 
-    from repro.sharding.rules import chain_spec
+    with ``chains`` a (C, ...)-stacked params pytree sharded over 'data',
+    ``bank`` a repro.core.surrogate.SurrogateBank (or None), and
+    ``shard_data`` the resident client shards with leaves (S, n, ...) —
+    the round draws its own minibatches (size ``minibatch``) instead of
+    consuming pre-drawn batches, and reassignment is the engine's
+    collision-free SPMD permutation instead of the static ppermute ring.
+    ``scale`` is accepted for signature compatibility and ignored: the
+    engine derives the exact N_s/(f_s m) factor from the shard scheme.
+    Output is bit-identical to ``repro.api.FSGLD`` driving the same
+    engine configuration (the shim IS the facade's engine)."""
+    global _federated_round_warned
+    import warnings
+    if not _federated_round_warned:
+        warnings.warn(
+            "make_federated_round is deprecated: the large-model round "
+            "runs on MeshChainEngine — drive it via repro.api.FSGLD",
+            DeprecationWarning, stacklevel=2)
+        _federated_round_warned = True
 
-    f_s = 1.0 / n_chains
-    step = make_train_step(cfg, sampler, scale=scale, f_s=f_s)
-    perm = [(i, int((i + 1) % n_chains)) for i in range(n_chains)]
+    from repro import api
 
-    def local_round(chain, surr, batches, seed):
-        # leading sharded axis C becomes a local size-1 block: squeeze it.
-        chain = jax.tree.map(lambda x: x[0], chain)
-        surr = jax.tree.map(lambda x: x[0], surr)
-        batches = jax.tree.map(lambda x: x[0], batches)
-        key = jax.random.PRNGKey(seed[0, 0])  # local block: (1, 1) uint32
+    cell = {}
 
-        def body(carry, batch):
-            chain, key = carry
-            key, k = jax.random.split(key)
-            chain, metrics = step(chain, surr, batch, k)
-            return (chain, key), metrics["ll_per_token"]
+    def round_fn(chains, bank, shard_data, key):
+        # the facade (and its engine executor caches) are rebuilt whenever
+        # the caller hands in a different bank or shard set — a stale
+        # cache would silently sample with round-1 surrogates forever
+        cache_key = (id(bank), id(shard_data))
+        if cell.get("key") != cache_key:
+            if bank is not None:
+                method, spec = sampler.method, api.SurrogateSpec(
+                    kind=bank.kind, bank=bank)
+            else:
+                # no communicated bank: the old round ran the identity
+                # surrogate, whose conducive term is exactly zero — the
+                # DSGLD estimator
+                method = "dsgld" if sampler.method == "fsgld" \
+                    else sampler.method
+                spec = api.SurrogateSpec(kind="none")
+            cell["key"] = cache_key
+            cell["fsgld"] = api.FSGLD(
+                api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
+                              prior_precision=sampler.prior_precision,
+                              temperature=sampler.temperature),
+                shard_data, minibatch=minibatch,
+                step_size=sampler.step_size, method=method,
+                surrogate=spec,
+                schedule=api.Schedule(
+                    rounds=1, local_steps=sampler.local_updates,
+                    n_chains=n_chains, reassign="permutation"),
+                execution=api.Execution(mesh=mesh, collect=False))
+        return cell["fsgld"].engine.run(
+            key, chains, 1, n_chains=n_chains, reassign="permutation",
+            collect=False, stacked=True)
 
-        (chain, _), lls = jax.lax.scan(body, (chain, key), batches)
-        chain = jax.tree.map(lambda x: jax.lax.ppermute(x, "data", perm),
-                             chain)
-        return (jax.tree.map(lambda x: x[None], chain), lls[None])
-
-    pspec = chain_spec()  # chains ride the 'data' axis (sharding/rules.py)
-    return shard_map(
-        local_round, mesh=mesh,
-        in_specs=(pspec, pspec, pspec, pspec),
-        out_specs=(pspec, pspec),
-        check_rep=False)
+    return round_fn

@@ -2,14 +2,27 @@
 
 Phases (paper Algorithm 1 + Sec 3.1):
   1. local surrogate fitting — short SGLD runs per client shard against the
-     local likelihood, fit per-tensor scalar-precision Gaussians, combine
-     into the global product q (computed once, communicated once);
-  2. FSGLD sampling — per round the scheduler draws a client
-     s ~ Categorical(f), feeds that client's minibatches, and the chain
-     takes ``local_updates`` Langevin steps with the conducive correction.
+     local likelihood, fit per-tensor scalar-precision Gaussians (bf16
+     storage), combine into the global product q (computed once,
+     communicated once);
+  2. FSGLD sampling — EVERY chain count (1..C) runs on the mesh-parallel
+     chain engine through the ``repro.api`` facade: chains shard over the
+     mesh 'data' axis, the scheduler reassigns chains to clients in-scan,
+     and the chain takes ``local_updates`` Langevin steps per round with
+     the conducive correction. The old single-chain host loop and the
+     ppermute federated round are retired — both scales share one
+     reassignment/collective path.
 
 On this CPU container run with ``--smoke`` (reduced config, 1x1 mesh); on a
 real cluster the same script drives the 16x16 / 2x16x16 production meshes.
+
+KNOWN LIMIT (ROADMAP open item): the chain engine places chains on the
+mesh 'data' axis and keeps parameters REPLICATED over 'model' (that axis
+carries surrogate-refresh work only), so truly-billion-parameter archs
+that need tensor-parallel weights per chain do not fit yet — the
+model-axis param sharding lives in the pjit ``make_train_step`` lowering
+path (launch/dryrun.py) and still has to be nested under the engine's
+data-axis shard_map.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
         --rounds 10 --method fsgld
@@ -22,51 +35,12 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import checkpoint
-from repro.configs import SamplerConfig, get_config, get_smoke_config
-from repro.core.surrogate import make_bank
+from repro import api, checkpoint
+from repro.configs import get_config, get_smoke_config
 from repro.data import token_shards
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import (init_surrogate_state, make_train_step)
 from repro.models import init_params, log_lik_fn
-from repro.sharding import batch_specs, param_shardings
-
-
-def fit_surrogates(cfg, sampler: SamplerConfig, params, shards, key, *,
-                   fit_steps: int, minibatch: int, lam_floor=1e-8):
-    """Phase 1: per-client SGLD against the local likelihood + per-tensor
-    isotropic Gaussian fits (DESIGN.md Sec 4.2). Returns a 'scalar' bank."""
-    S = sampler.num_shards
-    n_s = shards["tokens"].shape[1]
-
-    def local_sgld(data_s, k):
-        def body(theta, kk):
-            k1, k2 = jax.random.split(kk)
-            idx = jax.random.randint(k1, (minibatch,), 0, n_s)
-            batch = jax.tree.map(lambda d: d[idx], data_s)
-            g = jax.grad(lambda p: log_lik_fn(p, cfg, batch))(theta)
-            h = sampler.step_size
-            leaves, tdef = jax.tree.flatten(theta)
-            gl = jax.tree.leaves(g)
-            ks = jax.random.split(k2, len(leaves))
-            new = [t + (h / 2) * (n_s / minibatch) * gg.astype(t.dtype)
-                   + jnp.sqrt(h) * jax.random.normal(nk, t.shape, t.dtype)
-                   for t, gg, nk in zip(leaves, gl, ks)]
-            theta = jax.tree.unflatten(tdef, new)
-            return theta, theta
-        _, trace = jax.lax.scan(body, params, jax.random.split(k, fit_steps))
-        # keep the second half of the trace
-        return jax.tree.map(lambda t: t[fit_steps // 2:], trace)
-
-    traces = jax.jit(jax.vmap(local_sgld))(
-        shards, jax.random.split(key, S))
-    means = jax.tree.map(lambda t: t.mean(1), traces)          # (S, ...)
-    precs = jax.tree.map(
-        lambda t: 1.0 / (t.var(1).reshape(S, -1).mean(-1) + lam_floor),
-        traces)                                                 # (S,)
-    return make_bank(means, precs, "scalar")
 
 
 def main(argv=None):
@@ -78,19 +52,20 @@ def main(argv=None):
                     choices=["sgld", "dsgld", "fsgld"])
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--chains", type=int, default=1,
-                    help=">1 runs the mesh-parallel chain engine "
-                         "(core/engine.py): chains shard over the mesh "
-                         "'data' axis, reassignment is the collision-free "
-                         "SPMD permutation")
+                    help="parallel chains on the mesh chain engine "
+                         "(core/engine.py); chains shard over the mesh "
+                         "'data' axis (any count — odd counts are padded "
+                         "over the axis), reassignment is the "
+                         "collision-free SPMD permutation")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route chain updates through the chain-batched "
-                         "fused Pallas kernel")
+                    help="route chain updates through the fused Pallas "
+                         "kernel executors")
     ap.add_argument("--packed", default=None,
                     action=argparse.BooleanOptionalAction,
                     help="with --use-kernel: packed single-launch steps "
                          "(one pallas_call per step for the whole chain "
-                         "block; default auto — on for fp32 params). "
-                         "--no-packed keeps the per-leaf kernel path")
+                         "block; needs fp32 params). --no-packed keeps "
+                         "the per-leaf kernel path")
     ap.add_argument("--local-updates", type=int, default=4)
     ap.add_argument("--num-shards", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
@@ -106,10 +81,6 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh() if args.smoke \
         else make_production_mesh(multi_pod=args.multi_pod)
-    sampler = SamplerConfig(method=args.method, step_size=args.step_size,
-                            num_shards=args.num_shards,
-                            local_updates=args.local_updates,
-                            surrogate="scalar")
     key = jax.random.PRNGKey(args.seed)
     k_param, k_data, k_fit, k_run = jax.random.split(key, 4)
 
@@ -123,98 +94,65 @@ def main(argv=None):
         k_data, num_shards=args.num_shards, shard_size=args.shard_size,
         seq_len=args.seq, vocab_size=cfg.vocab_size)
 
+    # ---- the one front door: declarative facade over the chain engine ----
+    minibatch = min(args.batch, args.shard_size)
+    if not args.use_kernel:
+        executor = "vmap"
+    elif args.packed is False:
+        executor = "per_leaf"
+    else:
+        executor = "packed"
+    # the engine pads chains up to the data axis; permutation mode needs
+    # the PADDED count to fit in [0, S)
+    padded_chains = args.chains + (-args.chains) % mesh.shape["data"]
+    reassign = ("permutation" if padded_chains <= args.num_shards
+                else "categorical")
+    fsgld = api.FSGLD(
+        api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
+                      prior_precision=1.0),
+        shards, minibatch=minibatch, step_size=args.step_size,
+        method=args.method,
+        surrogate=(api.SurrogateSpec(
+            kind="scalar", fit="local_sgld", fit_steps=args.fit_steps,
+            fit_minibatch=minibatch) if args.method == "fsgld"
+            else api.SurrogateSpec(kind="none")),
+        schedule=api.Schedule(
+            rounds=args.rounds, local_steps=args.local_updates,
+            n_chains=args.chains, reassign=reassign),
+        execution=api.Execution(
+            mesh=mesh, executor=executor, collect=False,
+            dtype=jnp.dtype(cfg.surrogate_dtype)))
+
     # ---- phase 1: surrogates (once, before sampling) ----
     if args.method == "fsgld":
         t0 = time.time()
-        bank = fit_surrogates(cfg, sampler, params, shards, k_fit,
-                              fit_steps=args.fit_steps,
-                              minibatch=min(args.batch,
-                                            args.shard_size))
+        fsgld.fit(k_fit, params)
         print(f"surrogates fitted in {time.time()-t0:.1f}s "
-              f"(communicated once)")
-    else:
-        bank = None
+              f"(communicated once; means stored as "
+              f"{cfg.surrogate_dtype})")
 
-    # ---- phase 2 (multi-chain): mesh-parallel chain engine ----
-    if args.chains > 1:
-        from repro.core.engine import MeshChainEngine
-
-        eng = MeshChainEngine(
-            lambda p, b: log_lik_fn(p, cfg, b), sampler, shards,
-            min(args.batch, args.shard_size), bank=bank,
-            use_kernel=args.use_kernel, mesh=mesh, packed=args.packed)
-        reassign = ("permutation" if args.chains <= args.num_shards
-                    else "categorical")
-        t0 = time.time()
-        finals = eng.run(k_run, params, args.rounds, n_chains=args.chains,
-                         reassign=reassign, collect=False)
-        dt = time.time() - t0
-        probe = jax.tree.map(lambda d: d[0][:args.batch], shards)
-        lls = jax.vmap(lambda p: log_lik_fn(p, cfg, probe))(finals)
-        lls = np.asarray(lls) / probe["tokens"].size
-        for c, ll in enumerate(lls):
-            print(f"chain {c:3d} ll/token={float(ll):8.4f}")
-        steps = args.rounds * args.local_updates * args.chains
-        print(f"{args.chains} chains x {args.rounds} rounds "
-              f"({steps} chain-steps) in {dt:.1f}s "
-              f"= {steps / dt:.1f} steps/s "
-              f"[reassign={reassign} kernel={args.use_kernel} "
-              f"packed={args.packed if args.packed is not None else 'auto'}]")
-        if args.ckpt:
-            checkpoint.save(args.ckpt,
-                            jax.tree.map(lambda t: t[0], finals),
-                            step=args.rounds,
-                            extra={"method": args.method, "arch": cfg.name,
-                                   "chains": args.chains})
-            print(f"checkpoint -> {args.ckpt}")
-        print(f"final ll/token {float(np.mean(lls)):.4f}")
-        return 0
-
-    # ---- phase 2: FSGLD rounds ----
-    N_s = args.shard_size  # sequences per client
-    f_s = 1.0 / args.num_shards
-    scale = N_s / (f_s * args.batch)
-    step = make_train_step(cfg, sampler, scale=scale, f_s=f_s)
-    pshard = param_shardings(params, mesh)
-    step_jit = jax.jit(step, in_shardings=(
-        pshard, None, None, None), out_shardings=(pshard, None))
-
-    if bank is not None:
-        mu_g = jax.tree.map(lambda x: x.astype(jnp.bfloat16),
-                            bank.global_.mean)
-        lam_g = bank.global_.prec
-    else:
-        surr0 = init_surrogate_state(params, lam=0.0)
-
-    probs = jnp.full((args.num_shards,), f_s)
-    lls = []
+    # ---- phase 2: FSGLD rounds on the chain engine ----
     t0 = time.time()
-    for r in range(args.rounds):
-        k_run, k_shard, k_steps = jax.random.split(k_run, 3)
-        s = int(jax.random.categorical(k_shard, jnp.log(probs)))
-        if bank is not None:
-            qs = bank.shard(s)
-            surr = {"mu_g": mu_g,
-                    "mu_s": jax.tree.map(lambda x: x.astype(jnp.bfloat16),
-                                         qs.mean),
-                    "lam_g": lam_g, "lam_s": qs.prec}
-        else:
-            surr = surr0
-        for t in range(args.local_updates):
-            k_steps, k_b, k_u = jax.random.split(k_steps, 3)
-            idx = jax.random.randint(k_b, (args.batch,), 0, N_s)
-            batch = jax.tree.map(lambda d: d[s][idx], shards)
-            params, metrics = step_jit(params, surr, batch, k_u)
-        ll = float(metrics["ll_per_token"])
-        lls.append(ll)
-        print(f"round {r:3d} client={s:2d} ll/token={ll:8.4f} "
-              f"({time.time()-t0:.1f}s)", flush=True)
-
+    finals = fsgld.sample(k_run, params)
+    dt = time.time() - t0
+    probe = jax.tree.map(lambda d: d[0][:args.batch], shards)
+    lls = jax.vmap(lambda p: log_lik_fn(p, cfg, probe))(finals)
+    lls = np.asarray(lls) / probe["tokens"].size
+    for c, ll in enumerate(lls):
+        print(f"chain {c:3d} ll/token={float(ll):8.4f}")
+    steps = args.rounds * args.local_updates * args.chains
+    print(f"{args.chains} chain(s) x {args.rounds} rounds "
+          f"({steps} chain-steps) in {dt:.1f}s "
+          f"= {steps / dt:.1f} steps/s "
+          f"[reassign={reassign} executor={executor}]")
     if args.ckpt:
-        checkpoint.save(args.ckpt, params, step=args.rounds,
-                        extra={"method": args.method, "arch": cfg.name})
+        checkpoint.save(args.ckpt,
+                        jax.tree.map(lambda t: t[0], finals),
+                        step=args.rounds,
+                        extra={"method": args.method, "arch": cfg.name,
+                               "chains": args.chains})
         print(f"checkpoint -> {args.ckpt}")
-    print(f"final ll/token {np.mean(lls[-max(1, len(lls)//4):]):.4f}")
+    print(f"final ll/token {float(np.mean(lls)):.4f}")
     return 0
 
 

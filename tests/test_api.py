@@ -1,0 +1,384 @@
+"""The unified ``repro.api`` facade (PR 3).
+
+Contracts under test:
+
+  * ``FSGLD.sample`` is BIT-IDENTICAL to the ``run_vmap`` oracle for all
+    three methods across all three executors (the facade routes every
+    workload through the chain engine and adds nothing to the math);
+  * the deprecation shims (``FederatedSampler``, ``make_federated_round``)
+    warn exactly once and produce bit-identical samples to the facade;
+  * odd chain counts run on multi-device data axes (pad + mask) with the
+    REAL chains' RNG streams equal to the oracle's;
+  * ``kernel='sghmc'`` routes federated SGHMC through the same engine;
+  * declarative surrogate fitting (refresh / fisher / local_sgld) and the
+    bf16 storage option produce working banks.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, make_bank,
+                        analytic_gaussian_likelihood_surrogate)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem(key, S=5, n=40, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _legacy(method, data, bank, use_kernel=False, local=5, step=1e-4):
+    cfg = SamplerConfig(method=method, step_size=step, num_shards=5,
+                        local_updates=local, prior_precision=1.0)
+    return FederatedSampler(log_lik, cfg, data, minibatch=8,
+                            bank=bank if method == "fsgld" else None,
+                            use_kernel=use_kernel)
+
+
+def _facade(method, data, bank, executor="vmap", local=5, step=1e-4,
+            rounds=4, n_chains=4, **kw):
+    return api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=step, method=method,
+        surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                   if method == "fsgld"
+                   else api.SurrogateSpec(kind="none")),
+        schedule=api.Schedule(rounds=rounds, local_steps=local,
+                              n_chains=n_chains),
+        execution=api.Execution(executor=executor), **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness against the run_vmap oracle (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["sgld", "dsgld", "fsgld"])
+@pytest.mark.parametrize("executor", ["vmap", "per_leaf", "packed"])
+def test_facade_bitmatches_oracle(method, executor):
+    data, bank = _problem(jax.random.PRNGKey(0))
+    got = _facade(method, data, bank, executor=executor).sample(
+        jax.random.PRNGKey(7), jnp.zeros(3))
+    ref = _legacy(method, data, bank,
+                  use_kernel=(executor != "vmap")).run_vmap(
+        jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
+    assert got.shape == ref.shape == (4, 20, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_facade_permutation_and_thinning_match_oracle():
+    data, bank = _problem(jax.random.PRNGKey(1))
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=3, local_steps=4, n_chains=4,
+                              reassign="permutation", thin=2))
+    got = f.sample(jax.random.PRNGKey(3), jnp.zeros(3))
+    ref = _legacy("fsgld", data, bank, local=4).run_vmap(
+        jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=4,
+        reassign="permutation", collect_every=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_facade_ragged_client_list_input():
+    """A list of per-client pytrees is padded with pad_shards; NaN pad
+    rows stay provably dead (finite trace)."""
+    key = jax.random.PRNGKey(2)
+    base = jax.random.normal(key, (4, 64, 3))
+    per = [{"x": base[s, : 10 + 7 * s]} for s in range(4)]
+    f = api.FSGLD(api.Posterior(log_lik), per, minibatch=6,
+                  step_size=1e-4, method="dsgld",
+                  schedule=api.Schedule(rounds=2, local_steps=3,
+                                        n_chains=2))
+    tr = f.sample(jax.random.PRNGKey(3), jnp.zeros(3))
+    assert tr.shape == (2, 6, 3)
+    assert bool(jnp.all(jnp.isfinite(tr)))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warn once, bit-identical to the facade
+# ---------------------------------------------------------------------------
+
+def test_federated_sampler_shim_warns_once_and_matches_facade():
+    import repro.core.federated as fed
+    data, bank = _problem(jax.random.PRNGKey(0))
+    fed._deprecation_warned = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = _legacy("fsgld", data, bank)
+        _legacy("dsgld", data, bank)  # second construction: no new warning
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+               and "FederatedSampler" in str(x.message)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+    a = old.run(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
+    b = _facade("fsgld", data, bank).sample(jax.random.PRNGKey(7),
+                                            jnp.zeros(3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_make_federated_round_shim_warns_once_and_matches_facade():
+    """The retired large-model round: the shim delegates to the chain
+    engine, so one shim round == one facade round, bitwise — on real
+    token shards with a real (tiny) transformer posterior."""
+    import repro.launch.steps as steps
+    from repro.configs import get_smoke_config
+    from repro.data import token_shards
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import init_params, log_lik_fn
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    sampler = SamplerConfig(method="dsgld", step_size=1e-6, num_shards=4,
+                            local_updates=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shards = token_shards(jax.random.PRNGKey(1), num_shards=4,
+                          shard_size=16, seq_len=16,
+                          vocab_size=cfg.vocab_size)
+    C = 2
+    chains = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (C,) + t.shape), params)
+
+    steps._federated_round_warned = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rnd = steps.make_federated_round(cfg, sampler, make_host_mesh(),
+                                         n_chains=C, minibatch=4)
+        steps.make_federated_round(cfg, sampler, make_host_mesh(),
+                                   n_chains=C, minibatch=4)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+               and "make_federated_round" in str(x.message)]
+    assert len(dep) == 1, [str(x.message) for x in w]
+
+    got = rnd(chains, None, shards, jax.random.PRNGKey(7))
+    f = api.FSGLD(
+        api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
+                      prior_precision=sampler.prior_precision),
+        shards, minibatch=4, step_size=1e-6, method="dsgld",
+        schedule=api.Schedule(rounds=1, local_steps=2, n_chains=C,
+                              reassign="permutation"),
+        execution=api.Execution(collect=False))
+    ref = f.sample(jax.random.PRNGKey(7), params)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        got, ref)
+
+    # handing the round a DIFFERENT bank must rebuild the engine (a stale
+    # cache would silently keep sampling with the old surrogates)
+    from repro.core.surrogate import make_bank as mk
+    # per-shard means OFFSET from the chain state: at theta == mu the
+    # conducive term is exactly zero and fsgld degenerates to dsgld
+    means = jax.tree.map(
+        lambda p: (jnp.broadcast_to(p[None], (4,) + p.shape)
+                   + jnp.arange(1.0, 5.0).reshape((4,) + (1,) * p.ndim)),
+        params)
+    precs = jax.tree.map(lambda p: jnp.full((4,), 0.5), params)
+    bank = mk(means, precs, "scalar")
+    sampler_f = SamplerConfig(method="fsgld", step_size=1e-6,
+                              num_shards=4, local_updates=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        rnd2 = steps.make_federated_round(cfg, sampler_f, make_host_mesh(),
+                                          n_chains=C, minibatch=4)
+    out_nobank = rnd2(chains, None, shards, jax.random.PRNGKey(9))
+    out_bank = rnd2(chains, bank, shards, jax.random.PRNGKey(9))
+    # same key, different surrogate state -> different samples
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(out_nobank),
+                        jax.tree.leaves(out_bank)))
+
+
+# ---------------------------------------------------------------------------
+# odd chain counts: pad over the data axis instead of raising
+# ---------------------------------------------------------------------------
+
+def test_odd_chain_count_host_mesh_bitmatches_oracle():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    got = _facade("fsgld", data, bank, n_chains=3).sample(
+        jax.random.PRNGKey(7), jnp.zeros(3))
+    ref = _legacy("fsgld", data, bank).run_vmap(
+        jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=3)
+    assert got.shape == (3, 20, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_odd_chain_count_multidevice_subprocess():
+    """3 chains on a 2-way data axis: padded to 4, pad chain discarded.
+    The real chains' RNG streams equal the oracle's; numerics agree to
+    compiler tolerance (XLA may fuse the differently-shaped programs
+    with one-ulp differences)."""
+    script = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import api
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, make_bank,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.launch.mesh import make_sim_mesh
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+key = jax.random.PRNGKey(0)
+S, n, d = 5, 24, 3
+x = jax.random.normal(key, (S, n, d)) + jnp.arange(S)[:, None, None]
+mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+bank = make_bank(mu_s, prec_s, "diag")
+cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                    local_updates=3, prior_precision=1.0)
+samp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=6, bank=bank)
+for C in (1, 3):
+    for re in ("categorical", "permutation"):
+        f = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+            minibatch=6, step_size=1e-4,
+            surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+            schedule=api.Schedule(rounds=3, local_steps=3, n_chains=C,
+                                  reassign=re),
+            execution=api.Execution(mesh=make_sim_mesh(data=2, model=1)))
+        got = f.sample(jax.random.PRNGKey(7), jnp.zeros(d))
+        ref = samp.run_vmap(jax.random.PRNGKey(7), jnp.zeros(d), 3,
+                            n_chains=C, reassign=re)
+        assert got.shape == ref.shape == (C, 9, d), got.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-8)
+print("ODD_CHAINS_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "ODD_CHAINS_OK" in r.stdout, (r.stdout, r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# kernel='sghmc': the orphaned module becomes a facade option
+# ---------------------------------------------------------------------------
+
+def test_sghmc_kernel_runs_multichain_through_engine():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4, kernel="sghmc", friction=0.1,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=3, local_steps=5, n_chains=4))
+    tr = f.sample(jax.random.PRNGKey(7), jnp.zeros(3))
+    assert tr.shape == (4, 15, 3)
+    assert bool(jnp.all(jnp.isfinite(tr)))
+    # the chains moved and differ from the Langevin kernel's output
+    ref = _facade("fsgld", data, bank).sample(jax.random.PRNGKey(7),
+                                              jnp.zeros(3))
+    assert float(jnp.abs(tr).max()) > 0.0
+    assert not np.array_equal(np.asarray(tr[:, :15]), np.asarray(ref[:, :15]))
+
+
+def test_sghmc_converges_on_conjugate_gaussian():
+    """Statistical check (the engine SGHMC has no legacy oracle): the
+    posterior mean lands, matching FederatedSGHMC's contract."""
+    key = jax.random.PRNGKey(0)
+    S, n, d = 10, 200, 2
+    data, bank = _problem(key, S=S, n=n, d=d)
+    post_mean = data["x"].reshape(-1, d).sum(0) / (1 + S * n)
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=10,
+        step_size=2e-5, kernel="sghmc",
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=150, local_steps=100, thin=10))
+    tr = f.sample(jax.random.PRNGKey(1), jnp.zeros(d))[0]
+    tr = tr[tr.shape[0] // 2:]
+    mse = float(jnp.sum((tr.mean(0) - post_mean) ** 2))
+    assert mse < 5e-3, mse
+
+
+def test_sghmc_rejects_kernel_executors():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = api.FSGLD(api.Posterior(log_lik), data, minibatch=8,
+                  kernel="sghmc",
+                  surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+                  schedule=api.Schedule(rounds=1, local_steps=2),
+                  execution=api.Execution(executor="packed"))
+    with pytest.raises(ValueError):
+        f.sample(jax.random.PRNGKey(0), jnp.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# declarative surrogate fitting + storage dtype
+# ---------------------------------------------------------------------------
+
+def test_fit_refresh_gradient_matching():
+    """fit='refresh' reproduces repro.core.refresh_bank at theta0."""
+    from repro.core import refresh_bank
+    data, _ = _problem(jax.random.PRNGKey(3))
+    theta0 = jnp.array([0.2, -0.4, 0.1])
+    f = api.FSGLD(api.Posterior(log_lik), data, minibatch=8,
+                  surrogate=api.SurrogateSpec(kind="diag", fit="refresh"),
+                  schedule=api.Schedule(rounds=1, local_steps=2))
+    bank = f.fit(jax.random.PRNGKey(0), theta0)
+    ref = refresh_bank(log_lik, data, theta0)
+    np.testing.assert_array_equal(np.asarray(bank.means),
+                                  np.asarray(ref.means))
+    np.testing.assert_array_equal(np.asarray(bank.precs),
+                                  np.asarray(ref.precs))
+
+
+def test_fit_local_sgld_scalar_pytree_with_bf16_storage():
+    """'scalar' local-SGLD fitting on a multi-leaf posterior + bf16 bank
+    storage (Execution.dtype) — the large-model phase-1 path in generic
+    form. Sampling through the engine stays finite."""
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (4, 24, 2))
+    w = jax.random.normal(ks[1], (2, 5))
+    y = x @ w + 0.1 * jax.random.normal(ks[2], (4, 24, 5))
+
+    def ll(theta, batch):
+        pred = batch["x"] @ theta["w"] + theta["b"]
+        return -0.5 * jnp.sum((batch["y"] - pred) ** 2)
+
+    t0 = {"b": jnp.zeros(5), "w": jnp.zeros((2, 5))}
+    f = api.FSGLD(
+        api.Posterior(ll), {"x": x, "y": y}, minibatch=6, step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="scalar", fit="local_sgld",
+                                    fit_steps=20, fit_minibatch=6),
+        schedule=api.Schedule(rounds=2, local_steps=3, n_chains=2),
+        execution=api.Execution(dtype=jnp.bfloat16))
+    tr = f.sample(jax.random.PRNGKey(5), t0)
+    assert f.bank.kind == "scalar"
+    assert jax.tree.leaves(f.bank.means)[0].dtype == jnp.bfloat16
+    assert jax.tree.leaves(f.bank.precs)[0].dtype == jnp.float32
+    assert all(bool(jnp.all(jnp.isfinite(t)))
+               for t in jax.tree.leaves(tr))
+
+
+def test_bank_astype_roundtrip_and_gradients():
+    from repro.core import Gaussian  # noqa: F401
+    data, bank = _problem(jax.random.PRNGKey(0))
+    b16 = bank.astype(jnp.bfloat16)
+    assert b16.means.dtype == jnp.bfloat16
+    assert b16.global_.mean.dtype == jnp.bfloat16
+    assert b16.precs.dtype == jnp.float32
+    g = b16.shard(0).grad_log(jnp.zeros(3))
+    assert g.dtype == jnp.float32 and bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_method_surrogate_validation():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        api.FSGLD(api.Posterior(log_lik), data, minibatch=8,
+                  method="fsgld", surrogate=api.SurrogateSpec(kind="none"))

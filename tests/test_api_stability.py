@@ -1,0 +1,100 @@
+"""API-stability lane: the public ``repro.api`` surface is snapshot-tested.
+
+Two gates:
+
+  * the exported symbols and their call signatures must match the
+    snapshot below — a mismatch means the public API changed, which is
+    fine ONLY as a deliberate act: update the snapshot AND the README
+    migration table in the same commit;
+  * the README "## API" quickstart block must actually run (doctest-style
+    extraction — the documented first contact with the repo can never go
+    stale).
+"""
+import inspect
+import os
+import re
+
+import pytest
+
+from repro import api
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _params(obj):
+    """Ordered (name, has_default) tuples of a callable's signature,
+    self excluded."""
+    sig = inspect.signature(obj)
+    return tuple((n, p.default is not inspect.Parameter.empty)
+                 for n, p in sig.parameters.items() if n != "self")
+
+
+# The snapshot. Field ORDER is part of the contract (positional calls);
+# (name, has_default) pairs catch silently-added required arguments.
+EXPECTED_ALL = ("Posterior", "SurrogateSpec", "Schedule", "Execution",
+                "FSGLD", "fit_bank_local_sgld")
+
+EXPECTED_SIGNATURES = {
+    "Posterior": (("log_lik", False), ("prior_precision", True),
+                  ("temperature", True)),
+    "SurrogateSpec": (("kind", True), ("bank", True), ("fit", True),
+                      ("refresh_every", True), ("fit_steps", True),
+                      ("fit_minibatch", True), ("fit_step_size", True)),
+    "Schedule": (("rounds", False), ("local_steps", True),
+                 ("n_chains", True), ("reassign", True), ("thin", True)),
+    "Execution": (("mesh", True), ("executor", True), ("dtype", True),
+                  ("collect", True)),
+    "FSGLD": (("posterior", False), ("data", False), ("minibatch", False),
+              ("step_size", True), ("method", True), ("kernel", True),
+              ("alpha", True), ("friction", True), ("surrogate", True),
+              ("schedule", True), ("execution", True),
+              ("shard_probs", True), ("sizes", True)),
+    "FSGLD.sample": (("key", False), ("theta0", False), ("rounds", True),
+                     ("n_chains", True)),
+    "FSGLD.fit": (("key", False), ("theta0", False)),
+    "fit_bank_local_sgld": (("log_lik_fn", False), ("shard_data", False),
+                            ("theta0", False), ("key", False),
+                            ("fit_steps", False), ("minibatch", False),
+                            ("step_size", False), ("kind", True),
+                            ("lam_floor", True)),
+}
+
+
+def test_public_symbols_snapshot():
+    assert tuple(api.__all__) == EXPECTED_ALL, (
+        "repro.api.__all__ changed — update the snapshot and the README "
+        f"migration table deliberately: {api.__all__}")
+    for name in EXPECTED_ALL:
+        assert hasattr(api, name), name
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED_SIGNATURES))
+def test_signature_snapshot(name):
+    obj = api
+    for part in name.split("."):
+        obj = getattr(obj, part)
+    got = _params(obj)
+    assert got == EXPECTED_SIGNATURES[name], (
+        f"signature of repro.api.{name} changed — update the snapshot "
+        f"and the README migration table deliberately:\n got {got}\n "
+        f"want {EXPECTED_SIGNATURES[name]}")
+
+
+# ---------------------------------------------------------------------------
+# README quickstart doctest
+# ---------------------------------------------------------------------------
+
+def _readme_api_block() -> str:
+    text = open(os.path.join(REPO, "README.md")).read()
+    m = re.search(r"^## API$(.*?)^## ", text, re.M | re.S)
+    assert m, "README has no '## API' section"
+    code = re.search(r"```python\n(.*?)```", m.group(1), re.S)
+    assert code, "README '## API' section has no python quickstart block"
+    return code.group(1)
+
+
+def test_readme_quickstart_runs():
+    """Exec the README quickstart verbatim: its asserts are the test."""
+    src = _readme_api_block()
+    assert "api.FSGLD(" in src and "sample(" in src
+    exec(compile(src, "README.md:<api-quickstart>", "exec"), {})

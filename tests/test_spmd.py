@@ -18,45 +18,44 @@ def _run(script: str, devices: int, timeout=900):
                           capture_output=True, text=True, timeout=timeout)
 
 
-def test_federated_round_ppermute_rotates_chains():
-    """4 chains on a 4-way data axis: after one round every chain state has
-    moved to the next device (the paper's Reassign_chain as one collective
-    permute) and the sampler keeps sampling (finite lls)."""
+def test_large_model_round_runs_on_chain_engine_multidevice():
+    """The large-model federated round runs ON THE CHAIN ENGINE (the
+    private ppermute ring in launch/steps.py is retired): 4 transformer
+    chains on a 4-way data axis go through repro.api.FSGLD, reassignment
+    is the engine's collision-free SPMD permutation, the sampler keeps
+    sampling (finite chains) and the chains diverge (each visited its own
+    client sequence)."""
     script = r"""
 import jax, jax.numpy as jnp
-from repro.configs import get_smoke_config, SamplerConfig
-from repro.launch.steps import init_surrogate_state, make_federated_round
-from repro.models import init_params
+import numpy as np
+from repro import api
+from repro.configs import get_smoke_config
+from repro.data import token_shards
+from repro.models import init_params, log_lik_fn
 mesh = jax.make_mesh((4, 1), ("data", "model"))
 cfg = get_smoke_config("qwen3-1.7b")
-sampler = SamplerConfig(method="fsgld", step_size=1e-6)
-C, T = 4, 2
 params = init_params(cfg, jax.random.PRNGKey(0))
-chains = jax.tree.map(
-    lambda t: jnp.stack([t + i for i in range(C)]), params)
-surr = jax.vmap(lambda i: init_surrogate_state(params, lam=1e-4))(
-    jnp.arange(C))
-B, S = 2, 16
-batches = {
-    "tokens": jax.random.randint(jax.random.PRNGKey(1), (C, T, B, S), 0,
-                                 cfg.vocab_size),
-    "labels": jax.random.randint(jax.random.PRNGKey(2), (C, T, B, S), 0,
-                                 cfg.vocab_size)}
-seeds = jnp.arange(C, dtype=jnp.uint32)[:, None]
-rnd = make_federated_round(cfg, sampler, mesh, scale=10.0, n_chains=C)
-with mesh:
-    new_chains, lls = jax.jit(rnd)(chains, surr, batches, seeds)
-assert jnp.all(jnp.isfinite(lls)), lls
-# marker params (embed offsets) rotated by one position around the ring
-emb_old = chains["embed"][:, 0, 0]
-emb_new = new_chains["embed"][:, 0, 0]
-# chain i moved to position (i+1) % C; step perturbation is ~1e-6-scale
-err = jnp.abs(emb_new - jnp.roll(emb_old, 1)).max()
-assert err < 1e-2, (emb_old, emb_new)
-print("PPERMUTE_OK")
+shards = token_shards(jax.random.PRNGKey(1), num_shards=4, shard_size=16,
+                      seq_len=16, vocab_size=cfg.vocab_size)
+f = api.FSGLD(
+    api.Posterior(lambda p, b: log_lik_fn(p, cfg, b), prior_precision=1.0),
+    shards, minibatch=4, step_size=1e-4, method="dsgld",
+    schedule=api.Schedule(rounds=2, local_steps=2, n_chains=4,
+                          reassign="permutation"),
+    execution=api.Execution(mesh=mesh, collect=False))
+finals = f.sample(jax.random.PRNGKey(7), params)
+leaves = jax.tree.leaves(finals)
+assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+           for l in leaves)
+assert leaves[0].shape[0] == 4
+# chains visited different client sequences: their states diverged
+emb = finals["embed"].reshape(4, -1)
+d01 = float(jnp.abs(emb[0] - emb[1]).max())
+assert d01 > 0.0, "chains did not diverge"
+print("ENGINE_ROUND_OK")
 """
     r = _run(script, devices=4)
-    assert "PPERMUTE_OK" in r.stdout, (r.stdout, r.stderr[-2000:])
+    assert "ENGINE_ROUND_OK" in r.stdout, (r.stdout, r.stderr[-2000:])
 
 
 @pytest.mark.slow
