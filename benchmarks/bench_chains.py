@@ -20,10 +20,13 @@ normalizer in check_regression.py).
 derived = chain-steps/second aggregate throughput (higher is better);
 us_per_call = wall microseconds per chain-step. The ``packed_speedup``
 rows carry packed / per-leaf steps/s (PR 2 acceptance: >= 1.5x on the
-BNN config); ``dispatch`` rows estimate the per-run-call dispatch
-overhead vs the marginal cost of one extra scanned round (t(R) ~ a + bR
-fitted from two round counts). Tiny shapes for the CI bench-smoke lane
-via REPRO_BENCH_SCALE=0.01; paper-scale via SCALE=10.
+BNN config; PR 4 adds the ``sghmc_packed_speedup`` row at a 5x floor —
+both gated ABSOLUTELY by check_regression.py via the ``speedup-floor=``
+note marker, machine-independent because both sides share the backend);
+``dispatch`` rows estimate the per-run-call dispatch overhead vs the
+marginal cost of one extra scanned round (t(R) ~ a + bR fitted from two
+round counts). Tiny shapes for the CI bench-smoke lane via
+REPRO_BENCH_SCALE=0.01; paper-scale via SCALE=10.
 """
 from __future__ import annotations
 
@@ -99,10 +102,11 @@ def _facade_runner(fsgld, t_local):
     return go
 
 
-def _facade(log_lik, data, bank, m, t_local, executor, surrogate_kind):
+def _facade(log_lik, data, bank, m, t_local, executor, surrogate_kind,
+            kernel="sgld"):
     return api.FSGLD(
         api.Posterior(log_lik, prior_precision=1.0), data, minibatch=m,
-        step_size=1e-5,
+        step_size=1e-5, kernel=kernel, friction=0.1,
         surrogate=api.SurrogateSpec(kind=surrogate_kind, bank=bank),
         schedule=api.Schedule(rounds=4, local_steps=t_local, thin=t_local),
         execution=api.Execution(executor=executor))
@@ -176,7 +180,8 @@ def _bnn_rows(key, rows):
                         note="derived = chain-steps/s"))
     rows.append(Row(f"chains/bnn/packed_speedup/S{S}/C{C}", 0.0,
                     thru["packed"] / thru["perleaf"],
-                    note="derived = packed / per-leaf steps/s"))
+                    note="derived = packed / per-leaf steps/s; "
+                         "speedup-floor=1.5"))
 
     # dispatch overhead: fit t(R) ~ a + b*R on the packed engine — a is
     # the per-run-call host dispatch cost, b the marginal scanned round
@@ -190,6 +195,29 @@ def _bnn_rows(key, rows):
     rows.append(Row(f"chains/bnn/dispatch/S{S}/C{C}", 1e6 * a, 1e6 * b,
                     note="us_per_call = us dispatch per run() call; "
                          "derived = marginal us per scanned round"))
+
+    # SGHMC on the fused executors (PR 4): same BNN posterior, momentum
+    # riding the packed layout's second buffer. The vmap row is the
+    # pure-jnp reference executor — on this CPU container the Pallas
+    # kernels run INTERPRETED, so vmap wins here; on a real TPU the
+    # packed single-launch path is the fast one (the gated floor below
+    # is therefore packed vs per-leaf — same-backend, dispatch-count
+    # economics — not packed vs vmap).
+    sghmc_thru = {}
+    for tag, ex in [("vmap", "vmap"), ("perleaf", "per_leaf"),
+                    ("packed", "packed")]:
+        eng = _facade(bnn_log_lik, data, bank, m, t_local, ex, "scalar",
+                      kernel="sghmc")
+        us, th, _ = _time_run(_facade_runner(eng, t_local),
+                              jax.random.PRNGKey(1), theta0, rounds, C,
+                              t_local)
+        sghmc_thru[tag] = th
+        rows.append(Row(f"chains/bnn/sghmc/{tag}/S{S}/C{C}", us, th,
+                        note="derived = chain-steps/s"))
+    rows.append(Row(
+        f"chains/bnn/sghmc_packed_speedup/S{S}/C{C}", 0.0,
+        sghmc_thru["packed"] / sghmc_thru["perleaf"],
+        note="derived = packed / per-leaf steps/s; speedup-floor=5.0"))
 
 
 def run():

@@ -8,6 +8,10 @@ matched throughput row regresses by more than the threshold:
         benchmarks/BENCH_chains.json --threshold 0.30
 
 Gate semantics:
+  * rows whose note carries ``speedup-floor=X`` are gated ABSOLUTELY
+    (derived >= X, no baseline needed): they are same-run executor
+    ratios (packed / per-leaf steps/s), machine-independent by
+    construction — see ``check_speedup_floors``;
   * no baseline file            -> SKIP (exit 0) — the lane still runs
     and uploads its artifact, the gate just has nothing to compare to;
   * scale mismatch              -> SKIP (exit 0) — a SCALE=0.01 smoke run
@@ -43,12 +47,35 @@ import sys
 
 THROUGHPUT_MARK = "chain-steps/s"
 CONTROL_PREFIX = "chains/vmap/"
+FLOOR_MARK = "speedup-floor="
 
 
 def _rows(env: dict) -> dict:
     return {r["name"]: r for r in env.get("rows", [])
             if THROUGHPUT_MARK in r.get("note", "")
             and math.isfinite(r.get("derived", float("nan")))}
+
+
+def check_speedup_floors(env: dict) -> list:
+    """ABSOLUTE gate on speedup ratio rows: a row whose note carries
+    ``speedup-floor=X`` fails when derived < X. Unlike the baseline
+    comparison this needs no baseline and no machine-speed normalization
+    — both sides of the ratio ran on the same backend in the same
+    process (e.g. packed vs per-leaf kernel steps/s), so the floor is
+    portable across machines. Returns the failing row names."""
+    failed = []
+    for r in env.get("rows", []):
+        note = r.get("note", "")
+        if FLOOR_MARK not in note:
+            continue
+        floor = float(note.split(FLOOR_MARK, 1)[1].split(";")[0].split()[0])
+        got = r.get("derived", float("nan"))
+        ok = math.isfinite(got) and got >= floor
+        print(f"{'ok  ' if ok else 'FAIL'} {r['name']}: speedup "
+              f"{got:.2f}x (floor {floor:.2f}x)")
+        if not ok:
+            failed.append(r["name"])
+    return failed
 
 
 def main(argv=None) -> int:
@@ -59,11 +86,19 @@ def main(argv=None) -> int:
                     help="max tolerated fractional steps/s drop")
     args = ap.parse_args(argv)
 
+    with open(args.current) as f:
+        cur = json.load(f)
+    # absolute speedup floors gate even without a baseline (they compare
+    # two executors inside the SAME run, not a run against history)
+    floor_failed = check_speedup_floors(cur)
+    if floor_failed:
+        print(f"speedup floor(s) violated: {floor_failed}",
+              file=sys.stderr)
+        return 1
+
     if not os.path.exists(args.baseline):
         print(f"no baseline at {args.baseline}: gate SKIPPED")
         return 0
-    with open(args.current) as f:
-        cur = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
     if cur.get("schema") != base.get("schema"):

@@ -142,7 +142,8 @@ class Execution:
       'per_leaf' — chain-batched fused Pallas kernel, one pallas_call per
                    leaf per step.
       'packed'   — single-launch packed executor: ONE pallas_call per step
-                   for the whole chain block (fp32 params only).
+                   for the whole chain block (any floating param dtypes;
+                   non-fp32 leaves quantize back per step).
       'auto'     — 'packed' on TPU backends, 'vmap' elsewhere (the Pallas
                    kernels run interpreted off-TPU, which is for
                    correctness work, not speed).
@@ -170,7 +171,10 @@ class FSGLD:
     than 'none'; 'dsgld'/'sgld' ignore surrogates). ``kernel`` selects
     the transition dynamics: 'sgld' (the Langevin family above) or
     'sghmc' (federated SGHMC with the SAME conducive estimator stack —
-    see repro.core.sghmc; ``friction`` is its alpha_f knob).
+    see repro.core.sghmc; ``friction`` is its alpha_f knob). Both
+    dynamics compose with every executor — packed SGHMC carries the
+    momenta in a second chain-major buffer and is bit-identical to the
+    run_vmap oracle (tests/test_parity_matrix.py).
     """
 
     def __init__(self, posterior: Posterior, data: PyTree, *,
@@ -256,27 +260,23 @@ class FSGLD:
     # -- engine resolution -------------------------------------------------
 
     def _resolve_executor(self) -> tuple[bool, Optional[bool]]:
-        """executor name -> (use_kernel, packed) engine knobs."""
+        """executor name -> (use_kernel, packed) engine knobs. Every
+        executor composes with both transition kernels ('sgld'/'sghmc');
+        the packed executor takes any mix of floating parameter dtypes
+        (non-fp32 leaves quantize back per step)."""
         ex = self.execution.executor
-        if self.kernel == "sghmc":
-            if ex in ("per_leaf", "packed"):
-                raise ValueError(
-                    "kernel='sghmc' runs the reference executor (the "
-                    "fused Pallas kernels implement the Langevin update); "
-                    "use executor='vmap' or 'auto'")
-            return False, None
         if ex == "auto":
             if jax.default_backend() == "tpu":
-                # engine auto mode: packed for fp32 params, silent
-                # per-leaf fallback otherwise (packed=None) — 'auto' must
-                # not crash on the mixed-dtype models it exists for
+                # engine auto mode: packed for floating params, silent
+                # per-leaf fallback for non-float leaves (packed=None) —
+                # 'auto' must never crash on an exotic parameter tree
                 return True, None
             ex = "vmap"
         if ex == "vmap":
             return False, None
         if ex == "per_leaf":
             return True, False
-        return True, True  # 'packed' (strict: raises on non-fp32)
+        return True, True  # 'packed' (strict: raises on non-float leaves)
 
     @property
     def engine(self) -> MeshChainEngine:

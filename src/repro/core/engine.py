@@ -159,52 +159,116 @@ def make_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     return round_fn
 
 
+def make_masked_grad_vmap(grad_fn, *, per: int, n_chains: int, d_size: int):
+    """Per-block gradient pass that SKIPS pad-chain work.
+
+    Odd chain counts pad the block to ``n_total = d_size * per`` resident
+    chains; the pad chains live at the global tail, so each data group i
+    holds ``real_i = clip(n_chains - i*per, 0, per)`` real chains. With no
+    padding this is a plain ``vmap(grad_fn)``. Otherwise the round body
+    switches on ``axis_index('data')`` into a branch that vmaps the
+    gradient over ONLY the group's real chains and concatenates zeros for
+    the pad slots — the branches are per-device programs inside shard_map,
+    so only the taken one executes and the pad chains' gradient FLOPs are
+    genuinely skipped (asserted on the branch jaxprs in
+    tests/test_packed_executor.py), not computed-and-discarded. The pad
+    chains' elementwise kernel-update rows remain (they are ~pad/C of the
+    cheap update cost; the gradient pass is the expensive part).
+    """
+    n_pad = d_size * per - n_chains
+    if n_pad == 0:
+        return lambda thetas, batches: jax.vmap(grad_fn)(thetas, batches)
+
+    def branch(real):
+        def go(args):
+            thetas, batches = args
+            if real == 0:
+                return jax.tree.map(jnp.zeros_like, thetas)
+            head = jax.vmap(grad_fn)(
+                jax.tree.map(lambda t: jax.lax.slice_in_dim(t, 0, real),
+                             thetas),
+                jax.tree.map(lambda t: jax.lax.slice_in_dim(t, 0, real),
+                             batches))
+            if real == per:
+                return head
+            # concatenate, not `pad`: scan bodies carry a no-pad-jaxpr
+            # guarantee (see _executor.pad_tail)
+            return jax.tree.map(
+                lambda g: jnp.concatenate(
+                    [g, jnp.zeros((per - real,) + g.shape[1:], g.dtype)]),
+                head)
+
+        return go
+
+    branches = [branch(min(max(n_chains - i * per, 0), per))
+                for i in range(d_size)]
+
+    def masked(thetas, batches):
+        return jax.lax.switch(jax.lax.axis_index("data"), branches,
+                              (thetas, batches))
+
+    return masked
+
+
 def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
                         scheme: ShardScheme, minibatch: int,
-                        bank_kind: Optional[str], collect: bool = True):
+                        bank_kind: Optional[str], collect: bool = True,
+                        dynamics: str = "langevin", sghmc=None,
+                        grad_vmap=None):
     """CHAIN-BATCHED round for the fused-kernel path: gradients are vmapped
     over the local chain block, then the whole block goes through ONE
     chain-batched Pallas update per leaf per step.
 
-    Returns round(thetas, keys, sids, shard_data, bank) operating on
-    (C_blk, ...)-stacked chain states.
+    Returns round(state, keys, sids, shard_data, bank) operating on
+    (C_blk, ...)-stacked chain states — the parameter pytree for Langevin
+    dynamics, the (thetas, momenta) pair for SGHMC (``sghmc``: the
+    SGHMCConfig supplying friction/temperature). ``grad_vmap`` overrides
+    the block gradient pass (pad-chain masking, ``make_masked_grad_vmap``).
     """
     sample = _make_batch_sampler(cfg, scheme, minibatch)
-    grad_fn = jax.grad(log_lik_fn)
+    if grad_vmap is None:
+        grad_fn = jax.grad(log_lik_fn)
+        grad_vmap = lambda th, b: jax.vmap(grad_fn)(th, b)  # noqa: E731
     # only FSGLD carries the conducive correction — mirror the gating in
     # make_step_fn's kernel path, else a resident bank would silently add
     # the surrogate term to DSGLD/SGLD updates.
     use_surrogate = cfg.method == "fsgld"
     if not use_surrogate:
         bank_kind = None
+    hmc = dynamics == "sghmc"
+    dyn_kw = (dict(dynamics="sghmc", friction=sghmc.friction,
+                   temperature=sghmc.temperature) if hmc
+              else dict(temperature=cfg.temperature))
 
-    def round_fn(thetas, keys, sids, shard_data, bank=None):
+    def round_fn(state, keys, sids, shard_data, bank=None):
         if not use_surrogate:
             bank = None
         scale, f_s = chain_scales(cfg, scheme, sids, minibatch)
 
         def body(carry, ks):
-            thetas = carry
+            thetas, r = carry if hmc else (carry, None)
             kk = jax.vmap(jax.random.split)(ks)       # (C, 2, 2)
             k_batch, k_step = kk[:, 0], kk[:, 1]
             batches = jax.vmap(
                 lambda k, s: sample(k, s, shard_data))(k_batch, sids)
-            glls = jax.vmap(grad_fn)(thetas, batches)
-            thetas = kops.fused_update_chains_tree(
+            glls = grad_vmap(thetas, batches)
+            out = kops.fused_update_chains_tree(
                 thetas, glls, k_step, h=cfg.step_size, scale=scale,
                 f_s=f_s, prior_prec=cfg.prior_precision, alpha=cfg.alpha,
-                temperature=cfg.temperature, bank=bank, sids=sids,
-                surrogate_kind=bank_kind)
-            return thetas, thetas if collect else None
+                bank=bank, sids=sids, surrogate_kind=bank_kind,
+                momentum=r, **dyn_kw)
+            thetas = out[0] if hmc else out
+            carry = out if hmc else thetas
+            return carry, thetas if collect else None
 
         keys_t = jax.vmap(lambda k: jax.random.split(
             k, cfg.local_updates))(keys)              # (C, T, 2)
-        thetas, trace = jax.lax.scan(body, thetas,
-                                     jnp.swapaxes(keys_t, 0, 1))
+        state, trace = jax.lax.scan(body, state,
+                                    jnp.swapaxes(keys_t, 0, 1))
         if collect and trace is not None:
             # (T, C, ...) -> (C, T, ...) to match the vmap-of-scan layout
             trace = jax.tree.map(lambda t: jnp.swapaxes(t, 0, 1), trace)
-        return thetas, trace
+        return state, trace
 
     return round_fn
 
@@ -256,30 +320,39 @@ def pack_bank(layout: kops.PackedChains, bank: Optional[SurrogateBank]):
 def make_packed_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
                          scheme: ShardScheme, minibatch: int,
                          bank_kind: Optional[str],
-                         layout: kops.PackedChains, collect: bool = True):
+                         layout: kops.PackedChains, collect: bool = True,
+                         dynamics: str = "langevin", sghmc=None,
+                         grad_vmap=None):
     """SINGLE-LAUNCH round for the packed executor: the chain block's whole
     parameter pytree lives in one chain-major packed buffer and every step
     issues exactly one ``pallas_call`` (kernels.ops.packed_step).
 
-    State is the pair ``(packed, thetas)``: the packed buffer is
+    State is ``(packed, thetas)`` — or ``(packed, momenta_packed, thetas)``
+    for ``dynamics='sghmc'``, the momenta riding a SECOND chain-major
+    buffer over the same segment table: the packed buffers are
     authoritative; the unpacked pytree mirror feeds the gradient pass and
     trace collection, so the scan body contains NO pad/ravel work — leaf
     gradients are written into the packed gradient buffer by static
     update-slices, and the only per-round (not per-step) work is gathering
     the resident-client surrogate rows and prebuilding the scalar rows.
-    RNG streams (batch draws, per-(chain, leaf) noise seeds) are derived
-    exactly as the per-leaf chain-batched round derives them, so results
-    are bit-identical to it — and therefore to the ``run_vmap`` oracle.
+    Non-fp32 leaves quantize back to their storage dtype after every step
+    (``layout.quantize``, identity for all-fp32 trees), replaying the
+    per-leaf kernel's dtype round-trip. RNG streams (batch draws,
+    per-(chain, leaf) noise seeds) are derived exactly as the per-leaf
+    chain-batched round derives them, so results are bit-identical to it —
+    and therefore to the ``run_vmap`` oracle.
     """
     sample = _make_batch_sampler(cfg, scheme, minibatch)
-    grad_fn = jax.grad(log_lik_fn)
+    if grad_vmap is None:
+        grad_fn = jax.grad(log_lik_fn)
+        grad_vmap = lambda th, b: jax.vmap(grad_fn)(th, b)  # noqa: E731
     use_surrogate = cfg.method == "fsgld"
     if not use_surrogate:
         bank_kind = None
     L = layout.num_leaves
+    hmc = dynamics == "sghmc"
 
     def round_fn(state, keys, sids, shard_data, pbank=None):
-        th_p, thetas = state
         if not use_surrogate:
             pbank = None
         scale, f_s = chain_scales(cfg, scheme, sids, minibatch)
@@ -303,31 +376,41 @@ def make_packed_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
         scalars = kops.packed_scalar_rows(
             layout, h=cfg.step_size, scale=scale, f_s=f_s,
             prior_prec=cfg.prior_precision, alpha=cfg.alpha,
-            temperature=cfg.temperature, lam_g_leaf=lam_g_leaf,
-            lam_s_leaf=lam_s_leaf)
+            temperature=(sghmc.temperature if hmc else cfg.temperature),
+            lam_g_leaf=lam_g_leaf, lam_s_leaf=lam_s_leaf,
+            friction=(sghmc.friction if hmc else 0.0))
 
         def body(carry, ks):
-            th_p, thetas = carry
+            if hmc:
+                th_p, r_p, thetas = carry
+            else:
+                (th_p, thetas), r_p = carry, None
             kk = jax.vmap(jax.random.split)(ks)       # (C, 2, 2)
             k_batch, k_step = kk[:, 0], kk[:, 1]
             batches = jax.vmap(
                 lambda k, s: sample(k, s, shard_data))(k_batch, sids)
-            glls = jax.vmap(grad_fn)(thetas, batches)
+            glls = grad_vmap(thetas, batches)
             g_p = layout.pack(glls)
             seeds = kops.chain_leaf_seeds(k_step, L)
-            th_p = kops.packed_step(
+            out = kops.packed_step(
                 layout, th_p, g_p, seeds, scalars, variant=variant,
-                mu_g=mu_g, mu_s=mu_s, lam_g=lam_gp, lam_s=lam_sp)
+                mu_g=mu_g, mu_s=mu_s, lam_g=lam_gp, lam_s=lam_sp,
+                r_p=r_p, dynamics=dynamics)
+            th_p = layout.quantize(out[0] if hmc else out)
             thetas = layout.unpack(th_p)
-            return (th_p, thetas), thetas if collect else None
+            if hmc:
+                carry = (th_p, layout.quantize(out[1]), thetas)
+            else:
+                carry = (th_p, thetas)
+            return carry, thetas if collect else None
 
         keys_t = jax.vmap(lambda k: jax.random.split(
             k, cfg.local_updates))(keys)              # (C, T, 2)
-        (th_p, thetas), trace = jax.lax.scan(body, (th_p, thetas),
-                                             jnp.swapaxes(keys_t, 0, 1))
+        state, trace = jax.lax.scan(body, state,
+                                    jnp.swapaxes(keys_t, 0, 1))
         if collect and trace is not None:
             trace = jax.tree.map(lambda t: jnp.swapaxes(t, 0, 1), trace)
-        return (th_p, thetas), trace
+        return state, trace
 
     return round_fn
 
@@ -347,17 +430,20 @@ class MeshChainEngine:
 
     ``use_kernel=True`` + ``packed`` (default: auto) selects the
     single-launch packed executor — one ``pallas_call`` per step for the
-    whole chain block. ``packed=False`` keeps the PR 1 per-leaf
-    chain-batched kernel path; auto falls back to it when a parameter
-    leaf is not fp32 (the packed buffer carries fp32 state across steps,
-    which would skip the per-step dtype round-trip lower-precision
-    parameters get on the per-leaf path).
+    whole chain block, for ANY mix of floating parameter-leaf dtypes
+    (non-fp32 leaves quantize back to their storage dtype each step,
+    replaying the per-leaf kernel's round-trip bit-exactly).
+    ``packed=False`` keeps the PR 1 per-leaf chain-batched kernel path;
+    auto falls back to it only for non-float leaves.
 
     ``dynamics='sghmc'`` swaps the per-step update for federated SGHMC
     (core/sghmc.py) over (theta, momentum) chain state — same estimator
     stack, reassignment, and collective path; the trace carries theta
-    only. SGHMC runs the reference executor (``use_kernel`` must stay
-    False: the fused kernels implement the Langevin update).
+    only. SGHMC composes with every executor: the reference vmap path
+    runs the pure-jnp integrator, the fused-kernel paths route through
+    the SGHMC variant of the Pallas kernels (the packed layout carries
+    the momenta in a second chain-major buffer over the same segment
+    table).
 
     ``n_chains`` no longer needs to divide the mesh data axis: odd chain
     counts are padded with dummy chains up to the next multiple (the pad
@@ -390,15 +476,14 @@ class MeshChainEngine:
         assert len(sizes) == s and max(sizes) == max_n, (sizes, max_n)
         self.scheme = ShardScheme(sizes=sizes, probs=self.cfg.probs())
         if self.dynamics == "sghmc":
-            if self.use_kernel or self.packed:
-                raise ValueError(
-                    "dynamics='sghmc' runs the reference executor: the "
-                    "fused Pallas kernels implement the Langevin update "
-                    "(pass use_kernel=False)")
             from repro.core.sghmc import SGHMCConfig, make_sghmc_step
+            if self.sghmc is None:
+                self.sghmc = SGHMCConfig()
+            # the pure-jnp integrator backs the reference vmap executor;
+            # the kernel executors route through the fused SGHMC kernels
             self.step_fn = make_sghmc_step(
                 self.log_lik_fn, self.cfg, self.scheme, self.bank,
-                self.sghmc if self.sghmc is not None else SGHMCConfig())
+                self.sghmc)
         elif self.dynamics == "langevin":
             self.step_fn = make_step_fn(self.log_lik_fn, self.cfg,
                                         self.scheme, self.bank,
@@ -414,19 +499,24 @@ class MeshChainEngine:
 
     def _layout_for(self, theta0: PyTree) -> Optional[kops.PackedChains]:
         """Resolve the packed layout for this run, or None for the
-        per-leaf paths."""
+        per-leaf paths. Mixed floating dtypes pack (non-fp32 leaves
+        quantize back each step); non-float leaves cannot ride the fp32
+        buffer — auto falls back to the per-leaf path, explicit
+        packed=True refuses."""
         if not self.use_kernel:
             if self.packed:
                 raise ValueError("packed=True requires use_kernel=True")
             return None
-        fp32 = all(l.dtype == jnp.float32 for l in jax.tree.leaves(theta0))
-        if self.packed is None and not fp32:
-            return None
         if self.packed is False:
             return None
-        if not fp32:
-            raise ValueError("packed executor requires fp32 parameter "
-                             "leaves (carries fp32 state across steps)")
+        floating = all(jnp.issubdtype(l.dtype, jnp.floating)
+                       for l in jax.tree.leaves(theta0))
+        if not floating:
+            if self.packed is None:
+                return None
+            raise ValueError("packed executor requires floating-point "
+                             "parameter leaves (state rides an fp32 "
+                             "buffer with per-leaf quantize-back)")
         return kops.make_packed_layout(theta0)
 
     def _executor(self, *, num_rounds: int, n_chains: int,
@@ -461,14 +551,19 @@ class MeshChainEngine:
         probs = jnp.asarray(cfg.probs())
         bank_kind = self.bank.kind if self.bank is not None else None
 
+        grad_vmap = make_masked_grad_vmap(
+            jax.grad(self.log_lik_fn), per=per, n_chains=n_chains,
+            d_size=self.mesh.shape["data"]) if n_pad else None
         if layout is not None:
             round_fn = make_packed_round_fn(
                 self.log_lik_fn, cfg, self.scheme, self.minibatch,
-                bank_kind, layout, collect=collect)
+                bank_kind, layout, collect=collect, dynamics=self.dynamics,
+                sghmc=self.sghmc, grad_vmap=grad_vmap)
         elif self.use_kernel:
             round_fn = make_chain_round_fn(
                 self.log_lik_fn, cfg, self.scheme, self.minibatch,
-                bank_kind, collect=collect)
+                bank_kind, collect=collect, dynamics=self.dynamics,
+                sghmc=self.sghmc, grad_vmap=grad_vmap)
         else:
             one_chain = make_round_fn(
                 self.log_lik_fn, cfg, self.scheme, self.step_fn,
@@ -489,11 +584,20 @@ class MeshChainEngine:
             tail = jnp.zeros((n_pad,) + arr.shape[1:], arr.dtype)
             return jnp.concatenate([arr, tail])
 
+        hmc = self.dynamics == "sghmc"
+
         def block(key, chains, shard_data, bank_rt):
             if layout is not None:
                 rt_bank = pack_bank(
                     layout, bank_rt if cfg.method == "fsgld" else None)
-                state = (layout.pack(chains), chains)
+                if hmc:
+                    th_c, r_c = chains
+                    # the momenta ride a SECOND chain-major buffer over
+                    # the SAME segment table (their own seed stream is
+                    # the per-step noise draw routed by seed BlockSpecs)
+                    state = (layout.pack(th_c), layout.pack(r_c), th_c)
+                else:
+                    state = (layout.pack(chains), chains)
             else:
                 rt_bank = bank_rt
                 state = chains
@@ -522,7 +626,11 @@ class MeshChainEngine:
 
             (key, state), traces = jax.lax.scan(
                 round_body, (key, state), None, length=num_rounds)
-            chains_out = state[1] if layout is not None else state
+            if layout is not None:
+                chains_out = ((state[2], layout.unpack(state[1])) if hmc
+                              else state[1])
+            else:
+                chains_out = state
             if collect:
                 # (R, C_blk, T/ce, ...) -> (C_blk, R * T/ce, ...): same
                 # round-major order the legacy host-side concatenate built.
@@ -601,12 +709,14 @@ class MeshChainEngine:
                 raise NotImplementedError(
                     "adaptive refresh is not wired for sghmc dynamics")
             from repro.core.sghmc import init_momentum
-            if stacked:
-                theta0 = (theta0, jax.tree.map(jnp.zeros_like, theta0))
-            else:
-                theta0 = (theta0, init_momentum(theta0))
+            # zero momenta in theta0's structure — per-chain when stacked,
+            # broadcast with theta0 otherwise (same expression either way)
+            theta0 = (theta0, init_momentum(theta0))
+        # the packed layout is built from the PARAMETER pytree alone: the
+        # sghmc momenta share its structure (and hence its segment table)
+        ex_theta = theta0[0] if self.dynamics == "sghmc" else theta0
         layout = self._layout_for(
-            jax.tree.map(lambda t: t[0], theta0) if stacked else theta0)
+            jax.tree.map(lambda t: t[0], ex_theta) if stacked else ex_theta)
         cshard = NamedSharding(self.mesh, self._chain_spec())
         if stacked:
             assert jax.tree.leaves(theta0)[0].shape[0] == n_chains, \

@@ -57,6 +57,11 @@ class FederatedSampler:
     the ``run_vmap`` regression oracle.
 
     shard_data: pytree with leaves (S, N_s, ...) — equally-sized shards.
+    ``dynamics='sghmc'`` swaps the Langevin step for the federated SGHMC
+    integrator (core/sghmc.py; ``sghmc`` carries friction/temperature) —
+    chain state becomes the (theta, momentum) pair, the trace stays
+    theta-only. Combined with ``use_kernel`` this is the ``run_vmap``
+    oracle for the engine's fused SGHMC executors.
     """
     log_lik_fn: LogLikFn
     cfg: SamplerConfig
@@ -64,6 +69,8 @@ class FederatedSampler:
     minibatch: int
     bank: Optional[SurrogateBank] = None
     use_kernel: bool = False
+    dynamics: str = "langevin"
+    sghmc: Any = None  # Optional[SGHMCConfig]; None -> defaults
 
     def __post_init__(self):
         _warn_deprecated()
@@ -71,19 +78,30 @@ class FederatedSampler:
         s, n = leaf.shape[0], leaf.shape[1]
         assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
         self.scheme = ShardScheme(sizes=(n,) * s, probs=self.cfg.probs())
-        self.step_fn = make_step_fn(self.log_lik_fn, self.cfg, self.scheme,
-                                    self.bank, use_kernel=self.use_kernel)
+        if self.dynamics == "sghmc":
+            from repro.core.sghmc import SGHMCConfig, make_sghmc_step
+            if self.sghmc is None:
+                self.sghmc = SGHMCConfig()
+            self.step_fn = make_sghmc_step(
+                self.log_lik_fn, self.cfg, self.scheme, self.bank,
+                self.sghmc, use_kernel=self.use_kernel)
+        elif self.dynamics == "langevin":
+            self.step_fn = make_step_fn(
+                self.log_lik_fn, self.cfg, self.scheme, self.bank,
+                use_kernel=self.use_kernel)
+        else:
+            raise ValueError(self.dynamics)
         # built once: re-wrapping vmap per run() call would retrace every
         # time (jit caches on callable identity)
         self._vround = jax.jit(jax.vmap(self._round,
                                         in_axes=(0, 0, 0, None)))
 
     # -- client-side Update(T, theta_0, s) --------------------------------
-    def _round(self, theta, key, shard_id, bank_rt=None):
+    def _round(self, state, key, shard_id, bank_rt=None):
         n_s = self.scheme.sizes[0]
 
         def body(carry, k):
-            theta = carry
+            state = carry
             k_batch, k_step = jax.random.split(k)
             if self.cfg.method == "sgld":  # centralized: pool all shards
                 pooled = jax.tree.map(
@@ -95,13 +113,13 @@ class FederatedSampler:
             else:
                 batch = _minibatch(k_batch, self.shard_data, shard_id, n_s,
                                    self.minibatch)
-            theta = self.step_fn(theta, k_step, batch, shard_id,
+            state = self.step_fn(state, k_step, batch, shard_id,
                                  self.minibatch, bank_rt=bank_rt)
-            return theta, theta
+            return state, (state[0] if self.dynamics == "sghmc" else state)
 
         keys = jax.random.split(key, self.cfg.local_updates)
-        theta, trace = jax.lax.scan(body, theta, keys)
-        return theta, trace
+        state, trace = jax.lax.scan(body, state, keys)
+        return state, trace
 
     # -- server-side loop ---------------------------------------------------
     def run(self, key: jax.Array, theta0: PyTree, num_rounds: int,
@@ -120,7 +138,8 @@ class FederatedSampler:
         if not hasattr(self, "_engine"):
             self._engine = MeshChainEngine(
                 self.log_lik_fn, self.cfg, self.shard_data, self.minibatch,
-                bank=self.bank, use_kernel=self.use_kernel)
+                bank=self.bank, use_kernel=self.use_kernel,
+                dynamics=self.dynamics, sghmc=self.sghmc)
         return self._engine.run(
             key, theta0, num_rounds, n_chains=n_chains, reassign=reassign,
             collect_every=collect_every, refresh_every=refresh_every)
@@ -131,8 +150,14 @@ class FederatedSampler:
                  refresh_every: Optional[int] = None):
         """LEGACY single-host vmap executor (pre-mesh runtime). Kept as the
         bit-exactness oracle for the shard_map engine; prefer ``run``."""
+        if refresh_every and self.dynamics == "sghmc":
+            raise NotImplementedError(
+                "adaptive refresh is not wired for sghmc dynamics")
         probs = jnp.asarray(self.cfg.probs())
         S = self.cfg.num_shards
+        if self.dynamics == "sghmc":
+            from repro.core.sghmc import init_momentum
+            theta0 = (theta0, init_momentum(theta0))
         chains = jax.tree.map(
             lambda t: jnp.broadcast_to(t[None], (n_chains,) + t.shape).copy(),
             theta0)

@@ -155,6 +155,33 @@ def make_drift_fn(
     return drift
 
 
+def kernel_step_operands(cfg: SamplerConfig, scheme: ShardScheme,
+                         bank: Optional[SurrogateBank]) -> Callable:
+    """Shared per-step operand resolution for the fused-kernel step paths
+    (the Langevin step below and the SGHMC step in core/sghmc.py — same
+    estimator stack, different integrator): returns
+    resolve(shard_id, m, bank_rt) -> (scale, f_s, q_global, q_shard) with
+    the DSGLD/FSGLD unbiasing factors (paper Eq. 4) and the resident
+    surrogate pair (None for SGLD/DSGLD)."""
+    sizes, probs = scheme.as_arrays()
+
+    def resolve(shard_id, m, bank_rt=None):
+        b = bank_rt if bank_rt is not None else bank
+        if cfg.method == "sgld":
+            scale = jnp.float32(scheme.total / m)
+            f_s = jnp.float32(1.0)
+        else:
+            f_s = probs[shard_id]
+            scale = sizes[shard_id] / (f_s * m)
+        if cfg.method == "fsgld":
+            q_g, q_s = b.global_, b.shard(shard_id)
+        else:
+            q_g = q_s = None
+        return scale, f_s, q_g, q_s
+
+    return resolve
+
+
 def make_step_fn(
     log_lik_fn: LogLikFn,
     cfg: SamplerConfig,
@@ -178,22 +205,12 @@ def make_step_fn(
         return step
 
     from repro.kernels import ops as kops
-    sizes, probs = scheme.as_arrays()
+    resolve = kernel_step_operands(cfg, scheme, bank)
 
     def step(theta, key, batch, shard_id, m, step_size=None, bank_rt=None):
         h = cfg.step_size if step_size is None else step_size
-        b = bank_rt if bank_rt is not None else bank
         gll = jax.grad(log_lik_fn)(theta, batch)
-        if cfg.method == "sgld":
-            scale = jnp.float32(scheme.total / m)
-            f_s = jnp.float32(1.0)
-        else:
-            f_s = probs[shard_id]
-            scale = sizes[shard_id] / (f_s * m)
-        if cfg.method == "fsgld":
-            q_g, q_s = b.global_, b.shard(shard_id)
-        else:
-            q_g = q_s = None
+        scale, f_s, q_g, q_s = resolve(shard_id, m, bank_rt)
         return kops.fused_update_tree(
             theta, gll, key, h=h, scale=scale, f_s=f_s,
             prior_prec=cfg.prior_precision, alpha=cfg.alpha,

@@ -38,11 +38,36 @@ class SGHMCConfig:
 def make_sghmc_step(log_lik_fn: LogLikFn, cfg: SamplerConfig,
                     scheme: ShardScheme,
                     bank: Optional[SurrogateBank] = None,
-                    hmc: SGHMCConfig = SGHMCConfig()):
+                    hmc: SGHMCConfig = SGHMCConfig(),
+                    use_kernel: bool = False):
     """Returns step((theta, r), key, batch, shard_id, m) -> (theta', r').
 
     cfg.method selects the drift ('sgld'/'dsgld' -> plain, 'fsgld' ->
-    + conducive term); momenta r live in the same pytree structure."""
+    + conducive term); momenta r live in the same pytree structure.
+    ``use_kernel=True`` routes the update through the fused Pallas SGHMC
+    integrator (kernels/ops.py, ``dynamics='sghmc'``) — same drift, one
+    HBM pass, in-kernel hash noise with the same per-leaf seed derivation
+    as the Langevin kernel path."""
+    if use_kernel:
+        from repro.core.sampler import kernel_step_operands
+        from repro.kernels import ops as kops
+        resolve = kernel_step_operands(cfg, scheme, bank)
+
+        def step(state, key, batch, shard_id, m, step_size=None,
+                 bank_rt=None):
+            theta, r = state
+            h = cfg.step_size if step_size is None else step_size
+            gll = jax.grad(log_lik_fn)(theta, batch)
+            scale, f_s, q_g, q_s = resolve(shard_id, m, bank_rt)
+            return kops.fused_update_tree(
+                theta, gll, key, h=h, scale=scale, f_s=f_s,
+                prior_prec=cfg.prior_precision, alpha=cfg.alpha,
+                temperature=hmc.temperature, q_global=q_g, q_shard=q_s,
+                surrogate_kind=(bank.kind if bank is not None else None),
+                momentum=r, friction=hmc.friction, dynamics="sghmc")
+
+        return step
+
     drift_fn = make_drift_fn(log_lik_fn, cfg, scheme, bank)
     a = hmc.friction
     noise_sig = jnp.sqrt(2.0 * a * hmc.temperature)

@@ -17,10 +17,18 @@ Using a counter-based hash (instead of pltpu.prng_random_bits) keeps the
 kernel bit-exactly reproducible by the pure-jnp oracle in ref.py — the
 correctness tests assert end-to-end equality including the noise.
 
-Three variants:
+Three DRIFT variants:
   plain   — SGLD/DSGLD (alpha = 0): operands (theta, g)
   scalar  — per-tensor scalar precisions: operands (theta, g, mu_g, mu_s)
   diag    — diagonal precisions: operands (theta, g, mu_g, mu_s, lam_g, lam_s)
+
+crossed with two DYNAMICS (the paper's conducive correction is drift-level,
+so it composes with any SG-MCMC integrator — see core/sghmc.py):
+  langevin — the update above (one output);
+  sghmc    — naive-Euler SGHMC with friction alpha_f (S_FRIC scalar row):
+                 r'     = (1 - a) r + h * drift + sqrt(2 a tau) sqrt(h) xi
+                 theta' = theta + r'
+             extra momentum operand, two outputs (theta', r').
 
 All operate on parameters reshaped to (rows, 128); the jit'd wrapper in
 ops.py handles ravel / pad / unpad and per-tensor seeds.
@@ -38,8 +46,13 @@ LANE = 128
 BLOCK_ROWS = 256  # 256 x 128 fp32 = 128 KiB per operand tile in VMEM
 PACK_BLOCK_ROWS = 8  # packed multi-leaf grid: fp32 min tile, small pad waste
 
-# scalar-operand layout (single (1, 8) f32 row broadcast to every block)
-S_H, S_SCALE, S_FS, S_PRIOR, S_ALPHA, S_TEMP, S_LAMG, S_LAMS = range(8)
+# scalar-operand layout (one f32 row broadcast to every block of a
+# (chain, leaf)); S_FRIC is the SGHMC friction alpha_f, dead for langevin
+(S_H, S_SCALE, S_FS, S_PRIOR, S_ALPHA, S_TEMP, S_LAMG, S_LAMS,
+ S_FRIC) = range(9)
+SCALAR_COLS = 9
+
+_N_SUR = {"plain": 0, "scalar": 2, "diag": 4}
 
 
 def _mix(h: jax.Array) -> jax.Array:
@@ -80,66 +93,117 @@ def _global_idx(block_rows: int, blocks_per_chain: int) -> jax.Array:
     return base + row * jnp.uint32(LANE) + col
 
 
-def _update(theta, drift, sc, seed, block_rows, bpc):
-    h = sc[0, S_H]
-    sig = jnp.sqrt(h * sc[0, S_TEMP])
-    xi = _gaussian_noise(seed, _global_idx(block_rows, bpc))
-    return theta + (h * 0.5) * drift + sig * xi
+def _drift(variant, sc, th, g, sur):
+    """The shared FSGLD drift: prior + scaled minibatch gradient
+    (+ conducive term for the surrogate variants)."""
+    base = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g
+    if variant == "plain":
+        return base
+    if variant == "scalar":
+        mg, ms = sur
+        cond = sc[0, S_LAMG] * (mg - th) \
+            - (sc[0, S_LAMS] / sc[0, S_FS]) * (ms - th)
+    else:  # diag
+        mg, ms, lg, ls = sur
+        cond = lg * (mg - th) - (ls / sc[0, S_FS]) * (ms - th)
+    return base + sc[0, S_ALPHA] * cond
 
 
-def _kernel_plain(seed_ref, sc_ref, th_ref, g_ref, out_ref, *, block_rows,
-                  bpc):
-    sc = sc_ref[...]
-    th = th_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g
-    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows, bpc)
+def _make_kernel(variant: str, dynamics: str, *, block_rows: int, bpc: int,
+                 packed: bool):
+    """Kernel body for one (drift variant, dynamics, layout) cell.
+
+    Ref order: [seg, base,] seed, scalars, theta, [momentum,] g,
+    [surrogate operands...], theta_out[, momentum_out]. The langevin cells
+    reproduce the original per-dynamics kernels expression-for-expression,
+    so noise and rounding are unchanged.
+    """
+    n_sur = _N_SUR[variant]
+    momentum = dynamics == "sghmc"
+
+    def kernel(*refs):
+        if packed:
+            _seg_ref, base_ref, seed_ref, sc_ref = refs[:4]
+            refs = refs[4:]
+        else:
+            seed_ref, sc_ref = refs[:2]
+            refs = refs[2:]
+        th_ref = refs[0]
+        r_ref = refs[1] if momentum else None
+        k = 2 if momentum else 1
+        g_ref = refs[k]
+        sur = [refs[k + 1 + i][...].astype(jnp.float32)
+               for i in range(n_sur)]
+        outs = refs[k + 1 + n_sur:]
+
+        sc = sc_ref[0] if packed else sc_ref[...]     # (1, SCALAR_COLS)
+        th = th_ref[...].astype(jnp.float32)
+        g = g_ref[...].astype(jnp.float32)
+        drift = _drift(variant, sc, th, g, sur)
+
+        if packed:
+            # in-leaf element index from the prefetched segment table:
+            # keeps the noise stream bit-identical to the per-leaf kernel
+            seed = seed_ref[0, 0]
+            base = base_ref[pl.program_id(0) % bpc].astype(jnp.uint32)
+            row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 0)
+            col = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 1)
+            idx = base + row * jnp.uint32(LANE) + col
+        else:
+            seed = seed_ref[0]
+            idx = _global_idx(block_rows, bpc)
+        xi = _gaussian_noise(seed, idx)
+
+        h = sc[0, S_H]
+        if dynamics == "langevin":
+            sig = jnp.sqrt(h * sc[0, S_TEMP])
+            outs[0][...] = th + (h * 0.5) * drift + sig * xi
+        else:
+            a = sc[0, S_FRIC]
+            noise_sig = jnp.sqrt(2.0 * a * sc[0, S_TEMP])
+            r = r_ref[...].astype(jnp.float32)
+            r_new = (1.0 - a) * r + h * drift \
+                + (noise_sig * jnp.sqrt(h)) * xi
+            outs[0][...] = th + r_new
+            outs[1][...] = r_new
+
+    return kernel
 
 
-def _kernel_scalar(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, out_ref,
-                   *, block_rows, bpc):
-    sc = sc_ref[...]
-    th = th_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    mg = mg_ref[...].astype(jnp.float32)
-    ms = ms_ref[...].astype(jnp.float32)
-    cond = sc[0, S_LAMG] * (mg - th) \
-        - (sc[0, S_LAMS] / sc[0, S_FS]) * (ms - th)
-    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
-    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows, bpc)
+def _variant_ops(variant, mu_g, mu_s, lam_g, lam_s, tile, shared_tile):
+    """Surrogate operand / BlockSpec lists shared by both launchers.
+    Shared (global) operands re-read per chain via ``shared_tile``."""
+    if variant == "plain":
+        return [], []
+    if variant == "scalar":
+        return [mu_g, mu_s], [shared_tile, tile]
+    if variant == "diag":
+        return [mu_g, mu_s, lam_g, lam_s], \
+            [shared_tile, tile, shared_tile, tile]
+    raise ValueError(variant)
 
 
-def _kernel_diag(seed_ref, sc_ref, th_ref, g_ref, mg_ref, ms_ref, lg_ref,
-                 ls_ref, out_ref, *, block_rows, bpc):
-    sc = sc_ref[...]
-    th = th_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    mg = mg_ref[...].astype(jnp.float32)
-    ms = ms_ref[...].astype(jnp.float32)
-    lg = lg_ref[...].astype(jnp.float32)
-    ls = ls_ref[...].astype(jnp.float32)
-    cond = lg * (mg - th) - (ls / sc[0, S_FS]) * (ms - th)
-    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
-    out_ref[...] = _update(th, drift, sc, seed_ref[0], block_rows, bpc)
-
-
-@functools.partial(jax.jit, static_argnames=("variant", "interpret",
-                                             "block_rows", "chains"))
+@functools.partial(jax.jit, static_argnames=("variant", "dynamics",
+                                             "interpret", "block_rows",
+                                             "chains"))
 def fsgld_update_2d(theta2d: jax.Array, g2d: jax.Array, seed: jax.Array,
                     scalars: jax.Array, *, variant: str = "plain",
+                    dynamics: str = "langevin", r2d=None,
                     mu_g=None, mu_s=None, lam_g=None, lam_s=None,
                     interpret: bool = False,
                     block_rows: int = BLOCK_ROWS,
-                    chains: int = 1) -> jax.Array:
+                    chains: int = 1):
     """Run the fused update on (rows, 128)-shaped operands.
 
-    scalars: (chains, 8) f32 rows [h, scale, f_s, prior_prec, alpha,
-    temperature, lam_g, lam_s]; seed: (chains,) uint32.
+    scalars: (chains, SCALAR_COLS) f32 rows [h, scale, f_s, prior_prec,
+    alpha, temperature, lam_g, lam_s, friction]; seed: (chains,) uint32.
+    ``dynamics='sghmc'`` takes the (rows, 128) momentum buffer ``r2d`` and
+    returns the pair (theta', r'); 'langevin' returns theta' alone.
 
     CHAIN-BATCHED mode (``chains`` > 1): the leading ``rows`` axis is
     chain-major — rows [c*rows_c, (c+1)*rows_c) hold chain c's parameters
-    (rows_c = rows / chains). Per-chain operands (theta, g, mu_s, lam_s) are
-    full-height; per-chain *scalars* and *seeds* are selected by the
+    (rows_c = rows / chains). Per-chain operands (theta, r, g, mu_s, lam_s)
+    are full-height; per-chain *scalars* and *seeds* are selected by the
     BlockSpec index map ``i // bpc`` and SHARED operands (mu_g, lam_g — the
     global surrogate, identical for every chain) are (rows_c, 128) and
     re-read per chain via ``i % bpc``, so one pallas_call covers the whole
@@ -158,36 +222,37 @@ def fsgld_update_2d(theta2d: jax.Array, g2d: jax.Array, seed: jax.Array,
 
     tile = pl.BlockSpec((br, LANE), lambda i: (i, 0))
     shared_tile = pl.BlockSpec((br, LANE), lambda i: (i % bpc, 0))
-    scalar_spec = pl.BlockSpec((1, 8), lambda i: (i // bpc, 0))
+    scalar_spec = pl.BlockSpec((1, SCALAR_COLS), lambda i: (i // bpc, 0))
     seed_spec = pl.BlockSpec((1,), lambda i: (i // bpc,))
 
-    if variant == "plain":
-        kernel = functools.partial(_kernel_plain, block_rows=br, bpc=bpc)
-        ops = [theta2d, g2d]
-        specs = [tile, tile]
-    elif variant == "scalar":
-        kernel = functools.partial(_kernel_scalar, block_rows=br, bpc=bpc)
-        ops = [theta2d, g2d, mu_g, mu_s]
-        specs = [tile, tile, shared_tile, tile]
-    elif variant == "diag":
-        kernel = functools.partial(_kernel_diag, block_rows=br, bpc=bpc)
-        ops = [theta2d, g2d, mu_g, mu_s, lam_g, lam_s]
-        specs = [tile, tile, shared_tile, tile, shared_tile, tile]
+    kernel = _make_kernel(variant, dynamics, block_rows=br, bpc=bpc,
+                          packed=False)
+    sur_ops, sur_specs = _variant_ops(variant, mu_g, mu_s, lam_g, lam_s,
+                                      tile, shared_tile)
+    if dynamics == "sghmc":
+        assert r2d is not None and r2d.shape == theta2d.shape
+        ops = [theta2d, r2d, g2d] + sur_ops
+        specs = [tile, tile, tile] + sur_specs
+        out_specs = (tile, tile)
+        out_shape = (jax.ShapeDtypeStruct((rows, LANE), jnp.float32),) * 2
     else:
-        raise ValueError(variant)
+        ops = [theta2d, g2d] + sur_ops
+        specs = [tile, tile] + sur_specs
+        out_specs = tile
+        out_shape = jax.ShapeDtypeStruct((rows, LANE), jnp.float32)
 
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[seed_spec, scalar_spec] + specs,
-        out_specs=tile,
-        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(seed, scalars, *ops)
 
 
 # ---------------------------------------------------------------------------
-# packed multi-leaf single-launch kernel (PR 2)
+# packed multi-leaf single-launch kernel (PR 2; SGHMC + mixed dtypes PR 4)
 #
 # The whole parameter pytree of a whole chain block rides in ONE
 # (C * rows_total, 128) buffer: each leaf owns a contiguous run of rows
@@ -197,80 +262,34 @@ def fsgld_update_2d(theta2d: jax.Array, g2d: jax.Array, seed: jax.Array,
 # maps look the (chain, leaf) coordinate up in it, so one pallas_call per
 # step covers every leaf of every chain while noise streams stay
 # bit-identical to the per-leaf kernel above (same per-(chain, leaf) seed,
-# same in-leaf element index).
+# same in-leaf element index). ``dynamics='sghmc'`` adds a SECOND
+# chain-major buffer — the momenta — sharing the same segment table.
 # ---------------------------------------------------------------------------
 
 
-def _packed_update(th, drift, sc, seed, base_ref, block_rows, bpc):
-    h = sc[0, S_H]
-    sig = jnp.sqrt(h * sc[0, S_TEMP])
-    base = base_ref[pl.program_id(0) % bpc].astype(jnp.uint32)
-    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 0)
-    col = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, LANE), 1)
-    xi = _gaussian_noise(seed, base + row * jnp.uint32(LANE) + col)
-    return th + (h * 0.5) * drift + sig * xi
-
-
-def _pkernel_plain(seg_ref, base_ref, seed_ref, sc_ref, th_ref, g_ref,
-                   out_ref, *, block_rows, bpc):
-    sc = sc_ref[0]  # (1, 8) row for this (chain, leaf)
-    th = th_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g
-    out_ref[...] = _packed_update(th, drift, sc, seed_ref[0, 0], base_ref,
-                                  block_rows, bpc)
-
-
-def _pkernel_scalar(seg_ref, base_ref, seed_ref, sc_ref, th_ref, g_ref,
-                    mg_ref, ms_ref, out_ref, *, block_rows, bpc):
-    sc = sc_ref[0]
-    th = th_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    mg = mg_ref[...].astype(jnp.float32)
-    ms = ms_ref[...].astype(jnp.float32)
-    cond = sc[0, S_LAMG] * (mg - th) \
-        - (sc[0, S_LAMS] / sc[0, S_FS]) * (ms - th)
-    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
-    out_ref[...] = _packed_update(th, drift, sc, seed_ref[0, 0], base_ref,
-                                  block_rows, bpc)
-
-
-def _pkernel_diag(seg_ref, base_ref, seed_ref, sc_ref, th_ref, g_ref,
-                  mg_ref, ms_ref, lg_ref, ls_ref, out_ref, *, block_rows,
-                  bpc):
-    sc = sc_ref[0]
-    th = th_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    mg = mg_ref[...].astype(jnp.float32)
-    ms = ms_ref[...].astype(jnp.float32)
-    lg = lg_ref[...].astype(jnp.float32)
-    ls = ls_ref[...].astype(jnp.float32)
-    cond = lg * (mg - th) - (ls / sc[0, S_FS]) * (ms - th)
-    drift = -sc[0, S_PRIOR] * th + sc[0, S_SCALE] * g + sc[0, S_ALPHA] * cond
-    out_ref[...] = _packed_update(th, drift, sc, seed_ref[0, 0], base_ref,
-                                  block_rows, bpc)
-
-
 @functools.partial(jax.jit, static_argnames=(
-    "variant", "interpret", "block_rows", "chains", "seg_leaf", "seg_base"))
+    "variant", "dynamics", "interpret", "block_rows", "chains", "seg_leaf",
+    "seg_base"))
 def fsgld_update_packed(theta2d: jax.Array, g2d: jax.Array,
                         seeds: jax.Array, scalars: jax.Array, *,
-                        variant: str = "plain", mu_g=None, mu_s=None,
-                        lam_g=None, lam_s=None,
+                        variant: str = "plain",
+                        dynamics: str = "langevin", r2d=None,
+                        mu_g=None, mu_s=None, lam_g=None, lam_s=None,
                         seg_leaf: tuple = (0,), seg_base: tuple = (0,),
                         interpret: bool = False,
                         block_rows: int = PACK_BLOCK_ROWS,
-                        chains: int = 1) -> jax.Array:
+                        chains: int = 1):
     """SINGLE-LAUNCH fused update over a packed multi-leaf chain block.
 
-    theta2d/g2d: (chains * rows_total, 128) chain-major packed buffers,
-    rows_total = block_rows * len(seg_leaf). seeds: (chains, L) uint32 —
-    one stream per (chain, leaf), matching the per-leaf kernel's seed
-    derivation. scalars: (chains, L, 8) rows in the S_* layout (per-leaf
-    scalar precisions for the 'scalar' variant live in S_LAMG/S_LAMS).
-    mu_g/lam_g: (rows_total, 128) packed GLOBAL surrogate, re-read per
-    chain; mu_s/lam_s: (chains * rows_total, 128) packed per-chain
-    resident-client surrogates.
+    theta2d/g2d (and ``r2d``, the momenta, for ``dynamics='sghmc'``):
+    (chains * rows_total, 128) chain-major packed buffers, rows_total =
+    block_rows * len(seg_leaf). seeds: (chains, L) uint32 — one stream per
+    (chain, leaf), matching the per-leaf kernel's seed derivation.
+    scalars: (chains, L, SCALAR_COLS) rows in the S_* layout (per-leaf
+    scalar precisions for the 'scalar' variant live in S_LAMG/S_LAMS, the
+    SGHMC friction in S_FRIC). mu_g/lam_g: (rows_total, 128) packed GLOBAL
+    surrogate, re-read per chain; mu_s/lam_s: (chains * rows_total, 128)
+    packed per-chain resident-client surrogates.
 
     seg_leaf[j] names the leaf block j belongs to; seg_base[j] is the
     element offset of block j inside that leaf's padded vector. Both are
@@ -279,6 +298,7 @@ def fsgld_update_packed(theta2d: jax.Array, g2d: jax.Array,
     one HBM pass, zero per-leaf dispatch. Bit-identical to per-leaf
     ``fsgld_update_2d`` calls because pad rows at each leaf tail are
     discarded at unpack and live elements keep their in-leaf index.
+    Returns theta' ('langevin') or the pair (theta', r') ('sghmc').
     """
     rows = theta2d.shape[0]
     assert theta2d.shape[1] == LANE, theta2d.shape
@@ -294,36 +314,34 @@ def fsgld_update_packed(theta2d: jax.Array, g2d: jax.Array,
                                lambda i, sg, bs: (i % bpc, 0))
     seed_spec = pl.BlockSpec((1, 1),
                              lambda i, sg, bs: (i // bpc, sg[i % bpc]))
-    scalar_spec = pl.BlockSpec((1, 1, 8),
+    scalar_spec = pl.BlockSpec((1, 1, SCALAR_COLS),
                                lambda i, sg, bs: (i // bpc, sg[i % bpc], 0))
 
-    if variant == "plain":
-        kernel = functools.partial(_pkernel_plain, block_rows=block_rows,
-                                   bpc=bpc)
-        ops = [theta2d, g2d]
-        specs = [tile, tile]
-    elif variant == "scalar":
-        kernel = functools.partial(_pkernel_scalar, block_rows=block_rows,
-                                   bpc=bpc)
-        ops = [theta2d, g2d, mu_g, mu_s]
-        specs = [tile, tile, shared_tile, tile]
-    elif variant == "diag":
-        kernel = functools.partial(_pkernel_diag, block_rows=block_rows,
-                                   bpc=bpc)
-        ops = [theta2d, g2d, mu_g, mu_s, lam_g, lam_s]
-        specs = [tile, tile, shared_tile, tile, shared_tile, tile]
+    kernel = _make_kernel(variant, dynamics, block_rows=block_rows, bpc=bpc,
+                          packed=True)
+    sur_ops, sur_specs = _variant_ops(variant, mu_g, mu_s, lam_g, lam_s,
+                                      tile, shared_tile)
+    if dynamics == "sghmc":
+        assert r2d is not None and r2d.shape == theta2d.shape
+        ops = [theta2d, r2d, g2d] + sur_ops
+        specs = [tile, tile, tile] + sur_specs
+        out_specs = (tile, tile)
+        out_shape = (jax.ShapeDtypeStruct((rows, LANE), jnp.float32),) * 2
     else:
-        raise ValueError(variant)
+        ops = [theta2d, g2d] + sur_ops
+        specs = [tile, tile] + sur_specs
+        out_specs = tile
+        out_shape = jax.ShapeDtypeStruct((rows, LANE), jnp.float32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[seed_spec, scalar_spec] + specs,
-        out_specs=tile,
+        out_specs=out_specs,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        out_shape=out_shape,
         interpret=interpret,
     )(seg_t, base_t, seeds, scalars, *ops)

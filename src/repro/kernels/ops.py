@@ -10,7 +10,11 @@ modulo `interpret=False`).
 chain lives in ONE chain-major (C * rows_total, 128) buffer, built once
 per run by `pack`; per-step updates go through `packed_step`, which issues
 exactly one `pallas_call` for the whole chain block using the layout's
-static segment table (see kernels/fsgld_update.py).
+static segment table (see kernels/fsgld_update.py). The layout is
+MULTI-SEGMENT (PR 4): SGHMC dynamics add a second chain-major momentum
+buffer sharing the same segment table, and non-fp32 parameter leaves ride
+the fp32 buffer with a per-step `quantize` round-trip back to their
+storage dtype — bit-identical to the per-leaf kernel's dtype handling.
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fsgld_update import (LANE, PACK_BLOCK_ROWS,
+from repro.kernels.fsgld_update import (LANE, PACK_BLOCK_ROWS, SCALAR_COLS,
                                         fsgld_update_2d, fsgld_update_packed)
 
 PyTree = Any
@@ -40,21 +44,29 @@ def _pad_2d(vec: jax.Array, block_rows: int):
 
 
 def _scalars_row(h, scale, f_s, prior_prec, alpha, temperature, lam_g,
-                 lam_s) -> jax.Array:
+                 lam_s, friction=0.0) -> jax.Array:
     return jnp.stack([
         jnp.float32(h), jnp.asarray(scale, jnp.float32),
         jnp.asarray(f_s, jnp.float32), jnp.float32(prior_prec),
         jnp.float32(alpha), jnp.float32(temperature),
         jnp.asarray(lam_g, jnp.float32), jnp.asarray(lam_s, jnp.float32),
-    ]).reshape(1, 8)
+        jnp.asarray(friction, jnp.float32),
+    ]).reshape(1, SCALAR_COLS)
 
 
 def fused_update_flat(theta: jax.Array, g: jax.Array, seed: jax.Array, *,
                       h, scale, f_s=1.0, prior_prec=0.0, alpha=0.0,
                       temperature=1.0, mu_g=None, mu_s=None, lam_g=None,
-                      lam_s=None, block_rows: int = 256,
-                      interpret: Optional[bool] = None) -> jax.Array:
-    """Fused Langevin update of one flat fp32 vector. Seeds: uint32 scalar."""
+                      lam_s=None, momentum=None, friction=0.0,
+                      dynamics: str = "langevin", block_rows: int = 256,
+                      interpret: Optional[bool] = None):
+    """Fused update of one flat vector. Seeds: uint32 scalar.
+
+    ``dynamics='langevin'`` (default) returns theta'; ``'sghmc'`` carries
+    the ``momentum`` operand through the SGHMC integrator and returns the
+    pair (theta', momentum'). Non-fp32 operands round-trip through fp32
+    per step (the kernels compute at fp32 and cast back out).
+    """
     interpret = INTERPRET if interpret is None else interpret
     orig_shape, orig_dtype = theta.shape, theta.dtype
     th2, n = _pad_2d(theta.reshape(-1), block_rows)
@@ -80,21 +92,31 @@ def fused_update_flat(theta: jax.Array, g: jax.Array, seed: jax.Array, *,
               "lam_g": _pad_2d(lam_g.reshape(-1), block_rows)[0],
               "lam_s": _pad_2d(lam_s.reshape(-1), block_rows)[0]}
         lam_row = (0.0, 0.0)
+    if dynamics == "sghmc":
+        kw["r2d"] = _pad_2d(momentum.reshape(-1), block_rows)[0]
 
     sc = _scalars_row(h, scale, f_s, prior_prec, alpha, temperature,
-                      *lam_row)
+                      *lam_row, friction)
     out = fsgld_update_2d(th2, g2, seed.reshape(1).astype(jnp.uint32), sc,
-                          variant=variant, interpret=interpret,
-                          block_rows=br, **kw)
-    return out.reshape(-1)[:n].reshape(orig_shape).astype(orig_dtype)
+                          variant=variant, dynamics=dynamics,
+                          interpret=interpret, block_rows=br, **kw)
+
+    def unpad(o, dt):
+        return o.reshape(-1)[:n].reshape(orig_shape).astype(dt)
+
+    if dynamics == "sghmc":
+        return unpad(out[0], orig_dtype), unpad(out[1], momentum.dtype)
+    return unpad(out, orig_dtype)
 
 
 def fused_update_chains_flat(theta: jax.Array, g: jax.Array,
                              seeds: jax.Array, *, h, scale, f_s,
                              prior_prec=0.0, alpha=0.0, temperature=1.0,
                              mu_g=None, mu_s=None, lam_g=None, lam_s=None,
+                             momentum=None, friction=0.0,
+                             dynamics: str = "langevin",
                              block_rows: int = 256,
-                             interpret: Optional[bool] = None) -> jax.Array:
+                             interpret: Optional[bool] = None):
     """CHAIN-BATCHED fused update: one pallas_call over a whole chain block.
 
     theta, g: (C, ...) stacked per-chain tensors; seeds: (C,) uint32;
@@ -106,6 +128,8 @@ def fused_update_chains_flat(theta: jax.Array, g: jax.Array,
     per chain via BlockSpec index maps instead of materialising a (C, P)
     broadcast, so the hot elementwise update stays one HBM pass per
     chain-block. Bit-identical to C separate fused_update_flat calls.
+    ``dynamics='sghmc'`` carries the (C, ...) ``momentum`` stack through
+    the SGHMC integrator and returns the (theta', momentum') pair.
     """
     interpret = INTERPRET if interpret is None else interpret
     C = theta.shape[0]
@@ -148,20 +172,32 @@ def fused_update_chains_flat(theta: jax.Array, g: jax.Array,
     def col(v):
         return jnp.broadcast_to(jnp.asarray(v, jnp.float32), (C,))
 
+    if dynamics == "sghmc":
+        kw["r2d"] = pad_chains(momentum)
+
     sc = jnp.stack([col(h), scale_c, fs_c, col(prior_prec), col(alpha),
-                    col(temperature), lam_rows[0], lam_rows[1]], axis=1)
+                    col(temperature), lam_rows[0], lam_rows[1],
+                    col(friction)], axis=1)
     br = min(block_rows, rows_c)
     out = fsgld_update_2d(th2, g2, seeds.astype(jnp.uint32), sc,
-                          variant=variant, interpret=interpret,
-                          block_rows=br, chains=C, **kw)
-    return (out.reshape(C, -1)[:, :n].reshape(orig_shape)
-            .astype(orig_dtype))
+                          variant=variant, dynamics=dynamics,
+                          interpret=interpret, block_rows=br, chains=C,
+                          **kw)
+
+    def unpad(o, dt):
+        return o.reshape(C, -1)[:, :n].reshape(orig_shape).astype(dt)
+
+    if dynamics == "sghmc":
+        return unpad(out[0], orig_dtype), unpad(out[1], momentum.dtype)
+    return unpad(out, orig_dtype)
 
 
 def fused_update_chains_tree(theta: PyTree, g: PyTree, keys: jax.Array, *,
                              h, scale, f_s, prior_prec=0.0, alpha=0.0,
                              temperature=1.0, bank=None, sids=None,
-                             surrogate_kind: Optional[str] = None) -> PyTree:
+                             surrogate_kind: Optional[str] = None,
+                             momentum: Optional[PyTree] = None,
+                             friction=0.0, dynamics: str = "langevin"):
     """Chain-batched fused update across a parameter pytree whose leaves
     carry a leading chain axis (C, ...).
 
@@ -170,9 +206,13 @@ def fused_update_chains_tree(theta: PyTree, g: PyTree, keys: jax.Array, *,
     chain's resident client, or None for SGLD/DSGLD. Per-leaf per-chain
     seeds are derived exactly as fused_update_tree does per chain, so the
     result bit-matches a vmap of the single-chain kernel path.
+    ``dynamics='sghmc'`` takes the ``momentum`` pytree (same structure,
+    leading chain axis) and returns the (theta', momentum') pair.
     """
     leaves, treedef = jax.tree.flatten(theta)
     gleaves = jax.tree.leaves(g)
+    rleaves = (jax.tree.leaves(momentum) if momentum is not None
+               else [None] * len(leaves))
     L = len(leaves)
     all_seeds = jax.vmap(lambda k: jax.random.split(k, L))(keys)  # (C, L, 2)
 
@@ -190,19 +230,28 @@ def fused_update_chains_tree(theta: PyTree, g: PyTree, keys: jax.Array, *,
     else:
         raise ValueError(surrogate_kind)
 
-    out = []
-    for i, (t, gg) in enumerate(zip(leaves, gleaves)):
+    out, out_r = [], []
+    for i, (t, gg, rr) in enumerate(zip(leaves, gleaves, rleaves)):
         seed_c = jax.vmap(
             lambda s: jax.random.randint(s, (), 0, 2**31 - 1)
             .astype(jnp.uint32))(all_seeds[:, i])
-        out.append(fused_update_chains_flat(
+        res = fused_update_chains_flat(
             t, gg, seed_c, h=h, scale=scale, f_s=f_s,
             prior_prec=prior_prec, alpha=alpha, temperature=temperature,
             mu_g=mu_gs[i], mu_s=mu_ss[i],
             lam_g=(jnp.asarray(lg[i], jnp.float32)
                    if lg[i] is not None else None),
             lam_s=(jnp.asarray(ls[i], jnp.float32)
-                   if ls[i] is not None else None)))
+                   if ls[i] is not None else None),
+            momentum=rr, friction=friction, dynamics=dynamics)
+        if dynamics == "sghmc":
+            out.append(res[0])
+            out_r.append(res[1])
+        else:
+            out.append(res)
+    if dynamics == "sghmc":
+        return (jax.tree.unflatten(treedef, out),
+                jax.tree.unflatten(treedef, out_r))
     return jax.tree.unflatten(treedef, out)
 
 
@@ -274,6 +323,37 @@ class PackedChains:
             leaves.append(seg.reshape((c,) + shape).astype(dt))
         return jax.tree.unflatten(self.treedef, leaves)
 
+    @property
+    def all_fp32(self) -> bool:
+        return all(dt == jnp.float32 for dt in self.dtypes)
+
+    def quantize(self, buf: jax.Array) -> jax.Array:
+        """Per-step storage-dtype round-trip for non-fp32 leaves.
+
+        The packed buffer carries fp32 state across steps, but the
+        per-leaf kernel path casts each leaf back to its own dtype at
+        every step end (``fused_update_flat``'s ``astype(orig_dtype)``)
+        and re-widens it on the next step. Replaying that round-trip
+        (fp32 -> leaf dtype -> fp32) on each non-fp32 leaf's row segment
+        keeps the packed executor bit-identical to the per-leaf path —
+        and to the ``run_vmap`` oracle — for bf16/fp16 parameter leaves.
+        Identity (the SAME array, zero ops) when every leaf is fp32;
+        static slices + update-slices otherwise, so it can sit inside a
+        scanned round body without tripping the no-pad jaxpr gate.
+        """
+        if self.all_fp32:
+            return buf
+        flat = buf.reshape(-1, self.rows_total * LANE)
+        c = flat.shape[0]
+        for dt, off, r in zip(self.dtypes, self.row_offsets, self.rows):
+            if dt == jnp.float32:
+                continue
+            seg = jax.lax.slice(flat, (0, off * LANE),
+                                (c, (off + r) * LANE))
+            seg = seg.astype(dt).astype(jnp.float32)
+            flat = jax.lax.dynamic_update_slice(flat, seg, (0, off * LANE))
+        return flat.reshape(buf.shape)
+
 
 def make_packed_layout(theta: PyTree,
                        block_rows: int = PACK_BLOCK_ROWS) -> PackedChains:
@@ -314,11 +394,12 @@ def chain_leaf_seeds(keys: jax.Array, num_leaves: int) -> jax.Array:
 
 def packed_scalar_rows(layout: PackedChains, *, h, scale, f_s, prior_prec,
                        alpha, temperature, lam_g_leaf=None,
-                       lam_s_leaf=None) -> jax.Array:
-    """Prebuild the (C, L, 8) scalar-operand rows for a whole round: scale
-    and f_s vary per chain (resident client), lam_g/lam_s vary per leaf in
-    the 'scalar' surrogate variant ((L,) global / (C, L) resident scalar
-    precisions); everything else broadcasts."""
+                       lam_s_leaf=None, friction=0.0) -> jax.Array:
+    """Prebuild the (C, L, SCALAR_COLS) scalar-operand rows for a whole
+    round: scale and f_s vary per chain (resident client), lam_g/lam_s
+    vary per leaf in the 'scalar' surrogate variant ((L,) global / (C, L)
+    resident scalar precisions); friction is the SGHMC alpha_f (dead for
+    langevin dynamics); everything else broadcasts."""
     C = scale.shape[0]
     L = layout.num_leaves
     col = lambda v: jnp.broadcast_to(  # noqa: E731
@@ -329,41 +410,51 @@ def packed_scalar_rows(layout: PackedChains, *, h, scale, f_s, prior_prec,
         else lam_s_leaf.astype(jnp.float32)
     return jnp.stack([
         col(h), col(scale[:, None]), col(f_s[:, None]), col(prior_prec),
-        col(alpha), col(temperature), lamg, lams], axis=-1)
+        col(alpha), col(temperature), lamg, lams, col(friction)], axis=-1)
 
 
 def packed_step(layout: PackedChains, theta_p: jax.Array, g_p: jax.Array,
                 seeds: jax.Array, scalars: jax.Array, *, variant: str,
-                mu_g=None, mu_s=None, lam_g=None, lam_s=None,
-                interpret: Optional[bool] = None) -> jax.Array:
+                mu_g=None, mu_s=None, lam_g=None, lam_s=None, r_p=None,
+                dynamics: str = "langevin",
+                interpret: Optional[bool] = None):
     """ONE pallas_call updating every leaf of every chain in the block.
 
-    theta_p/g_p/mu_s/lam_s: (C * rows_total, 128) packed buffers;
+    theta_p/g_p/mu_s/lam_s (and ``r_p``, the packed momenta, for
+    ``dynamics='sghmc'``): (C * rows_total, 128) packed buffers;
     mu_g/lam_g: (rows_total, 128) packed global surrogate (re-read per
     chain by the kernel's shared BlockSpec); seeds: (C, L) uint32 from
-    ``chain_leaf_seeds``; scalars: (C, L, 8) from ``packed_scalar_rows``.
+    ``chain_leaf_seeds``; scalars: (C, L, SCALAR_COLS) from
+    ``packed_scalar_rows``. Returns theta_p' or (theta_p', r_p').
     """
     interpret = INTERPRET if interpret is None else interpret
     C = seeds.shape[0]
     return fsgld_update_packed(
-        theta_p, g_p, seeds, scalars, variant=variant, mu_g=mu_g,
-        mu_s=mu_s, lam_g=lam_g, lam_s=lam_s, seg_leaf=layout.seg_leaf,
-        seg_base=layout.seg_base, block_rows=layout.block_rows,
-        chains=C, interpret=interpret)
+        theta_p, g_p, seeds, scalars, variant=variant, dynamics=dynamics,
+        r2d=r_p, mu_g=mu_g, mu_s=mu_s, lam_g=lam_g, lam_s=lam_s,
+        seg_leaf=layout.seg_leaf, seg_base=layout.seg_base,
+        block_rows=layout.block_rows, chains=C, interpret=interpret)
 
 
 def fused_update_tree(theta: PyTree, g: PyTree, key: jax.Array, *, h, scale,
                       f_s=1.0, prior_prec=0.0, alpha=0.0, temperature=1.0,
                       q_global=None, q_shard=None,
-                      surrogate_kind: Optional[str] = None) -> PyTree:
+                      surrogate_kind: Optional[str] = None,
+                      momentum: Optional[PyTree] = None, friction=0.0,
+                      dynamics: str = "langevin"):
     """Apply the fused update across a parameter pytree.
 
     q_global/q_shard: repro.core.surrogate.Gaussian with 'diag' (flat-vector
     params) or 'scalar' (pytree means + per-leaf scalar precisions)
-    structure, or None for SGLD/DSGLD.
+    structure, or None for SGLD/DSGLD. ``dynamics='sghmc'`` takes the
+    ``momentum`` pytree and returns the (theta', momentum') pair; leaf
+    seeds are derived identically for both dynamics (split the step key
+    per leaf, one int31 draw each).
     """
     leaves, treedef = jax.tree.flatten(theta)
     gleaves = jax.tree.leaves(g)
+    rleaves = (jax.tree.leaves(momentum) if momentum is not None
+               else [None] * len(leaves))
     seeds = jax.random.split(key, len(leaves))
 
     if q_global is None:
@@ -380,16 +471,25 @@ def fused_update_tree(theta: PyTree, g: PyTree, key: jax.Array, *, h, scale,
     else:
         raise ValueError(surrogate_kind)
 
-    out = []
-    for i, (t, gg) in enumerate(zip(leaves, gleaves)):
+    out, out_r = [], []
+    for i, (t, gg, rr) in enumerate(zip(leaves, gleaves, rleaves)):
         seed = jax.random.randint(seeds[i], (), 0, 2**31 - 1).astype(
             jnp.uint32)
-        out.append(fused_update_flat(
+        res = fused_update_flat(
             t, gg, seed, h=h, scale=scale, f_s=f_s, prior_prec=prior_prec,
             alpha=alpha, temperature=temperature, mu_g=mu_gs[i],
             mu_s=mu_ss[i],
             lam_g=(jnp.asarray(lg[i], jnp.float32)
                    if lg[i] is not None else None),
             lam_s=(jnp.asarray(ls[i], jnp.float32)
-                   if ls[i] is not None else None)))
+                   if ls[i] is not None else None),
+            momentum=rr, friction=friction, dynamics=dynamics)
+        if dynamics == "sghmc":
+            out.append(res[0])
+            out_r.append(res[1])
+        else:
+            out.append(res)
+    if dynamics == "sghmc":
+        return (jax.tree.unflatten(treedef, out),
+                jax.tree.unflatten(treedef, out_r))
     return jax.tree.unflatten(treedef, out)

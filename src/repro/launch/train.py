@@ -64,8 +64,17 @@ def main(argv=None):
                     action=argparse.BooleanOptionalAction,
                     help="with --use-kernel: packed single-launch steps "
                          "(one pallas_call per step for the whole chain "
-                         "block; needs fp32 params). --no-packed keeps "
-                         "the per-leaf kernel path")
+                         "block; any floating param dtypes — non-fp32 "
+                         "leaves quantize back per step). --no-packed "
+                         "keeps the per-leaf kernel path")
+    ap.add_argument("--kernel", default="sgld",
+                    choices=["sgld", "sghmc"],
+                    help="transition dynamics: 'sgld' (Langevin) or "
+                         "'sghmc' (federated SGHMC — momenta ride the "
+                         "chain state; composes with every executor, "
+                         "packed included)")
+    ap.add_argument("--friction", type=float, default=0.1,
+                    help="SGHMC friction alpha_f (with --kernel sghmc)")
     ap.add_argument("--local-updates", type=int, default=4)
     ap.add_argument("--num-shards", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
@@ -111,7 +120,7 @@ def main(argv=None):
         api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
                       prior_precision=1.0),
         shards, minibatch=minibatch, step_size=args.step_size,
-        method=args.method,
+        method=args.method, kernel=args.kernel, friction=args.friction,
         surrogate=(api.SurrogateSpec(
             kind="scalar", fit="local_sgld", fit_steps=args.fit_steps,
             fit_minibatch=minibatch) if args.method == "fsgld"
@@ -135,6 +144,10 @@ def main(argv=None):
     t0 = time.time()
     finals = fsgld.sample(k_run, params)
     dt = time.time() - t0
+    if args.kernel == "sghmc":
+        # collect=False sghmc returns (theta, momentum) chain-state pairs;
+        # the ll probe (and the checkpoint) wants the parameters
+        finals = finals[0]
     probe = jax.tree.map(lambda d: d[0][:args.batch], shards)
     lls = jax.vmap(lambda p: log_lik_fn(p, cfg, probe))(finals)
     lls = np.asarray(lls) / probe["tokens"].size

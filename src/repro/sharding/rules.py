@@ -202,7 +202,10 @@ def packed_chain_spec() -> P:
     CHAIN-MAJOR, so sharding dim 0 over the chain axis keeps every
     chain's whole segment on one data group — the same placement the
     unpacked (C, ...) tree gets from ``chain_spec`` (requires
-    C % |data| == 0, which the engine already enforces)."""
+    C % |data| == 0, which the engine already enforces). EVERY
+    chain-major segment buffer of the multi-segment state shares this
+    spec — the SGHMC momentum buffer rides the same segment table and
+    the same chain-major row order as the parameter buffer."""
     return P(CHAIN_AXIS, None)
 
 

@@ -257,6 +257,23 @@ for C in (1, 3):
         assert got.shape == ref.shape == (C, 9, d), got.shape
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=1e-6, atol=1e-8)
+# packed SGHMC with an odd chain count: pad masking + the momentum
+# segment under real SPMD (PR 4)
+from repro.core.sghmc import SGHMCConfig
+hsamp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=6, bank=bank,
+                         use_kernel=True, dynamics="sghmc",
+                         sghmc=SGHMCConfig(friction=0.1))
+f = api.FSGLD(
+    api.Posterior(log_lik, prior_precision=1.0), {"x": x}, minibatch=6,
+    step_size=1e-4, kernel="sghmc", friction=0.1,
+    surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+    schedule=api.Schedule(rounds=3, local_steps=3, n_chains=3),
+    execution=api.Execution(mesh=make_sim_mesh(data=2, model=1),
+                            executor="packed"))
+got = f.sample(jax.random.PRNGKey(7), jnp.zeros(d))
+ref = hsamp.run_vmap(jax.random.PRNGKey(7), jnp.zeros(d), 3, n_chains=3)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                           rtol=1e-6, atol=1e-8)
 print("ODD_CHAINS_OK")
 """
     env = dict(os.environ)
@@ -306,15 +323,30 @@ def test_sghmc_converges_on_conjugate_gaussian():
     assert mse < 5e-3, mse
 
 
-def test_sghmc_rejects_kernel_executors():
+@pytest.mark.parametrize("executor", ["per_leaf", "packed"])
+def test_sghmc_composes_with_kernel_executors(executor):
+    """kernel='sghmc' now rides the fused executors (the PR 3 guard is
+    gone): packed/per-leaf SGHMC bit-match the run_vmap oracle with the
+    matching use_kernel + dynamics (the full grid lives in
+    tests/test_parity_matrix.py)."""
+    from repro.core.sghmc import SGHMCConfig
     data, bank = _problem(jax.random.PRNGKey(0))
-    f = api.FSGLD(api.Posterior(log_lik), data, minibatch=8,
-                  kernel="sghmc",
+    f = api.FSGLD(api.Posterior(log_lik, prior_precision=1.0), data,
+                  minibatch=8, step_size=1e-4, kernel="sghmc",
+                  friction=0.1,
                   surrogate=api.SurrogateSpec(kind="diag", bank=bank),
-                  schedule=api.Schedule(rounds=1, local_steps=2),
-                  execution=api.Execution(executor="packed"))
-    with pytest.raises(ValueError):
-        f.sample(jax.random.PRNGKey(0), jnp.zeros(3))
+                  schedule=api.Schedule(rounds=3, local_steps=5,
+                                        n_chains=4),
+                  execution=api.Execution(executor=executor))
+    got = f.sample(jax.random.PRNGKey(7), jnp.zeros(3))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=5, prior_precision=1.0)
+    ref = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank,
+                           use_kernel=True, dynamics="sghmc",
+                           sghmc=SGHMCConfig(friction=0.1)).run_vmap(
+        jax.random.PRNGKey(7), jnp.zeros(3), 3, n_chains=4)
+    assert got.shape == (4, 15, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
 # ---------------------------------------------------------------------------

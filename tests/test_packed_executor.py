@@ -1,19 +1,28 @@
-"""Packed single-launch executor (PR 2) correctness.
+"""Packed single-launch executor (PR 2; multi-segment PR 4) correctness.
 
 Contracts under test:
 
   * packed single-launch steps are BIT-IDENTICAL to the per-leaf
     chain-batched kernel — and therefore to the ``run_vmap`` oracle — for
-    plain / scalar / diag variants, multi-leaf pytrees, and ragged shards;
+    plain / scalar / diag variants, BOTH dynamics (langevin momentum-free
+    and SGHMC with the second momentum buffer), multi-leaf pytrees, and
+    ragged shards (the full executor x dynamics x dtype grid lives in
+    tests/test_parity_matrix.py);
   * one ``pallas_call`` per step for the whole chain block and ZERO
     ``pad`` primitives inside the scan bodies (asserted on the jaxpr);
   * ``MeshChainEngine.run`` traces ONCE for R rounds (scan-over-rounds,
-    no per-round retrace or dispatch).
+    no per-round retrace or dispatch);
+  * ``PackedChains`` pack/unpack round-trips exactly for any floating
+    dtype mix and ``quantize`` replays the per-leaf storage-dtype
+    round-trip (identity object for all-fp32 layouts);
+  * odd-chain pad devices SKIP pad-chain gradient work
+    (``make_masked_grad_vmap``, asserted on the switch branch jaxprs).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import SamplerConfig
 from repro.core import (FederatedSampler, MeshChainEngine, make_bank,
@@ -74,8 +83,10 @@ def _ragged_problem(key, S=5, d=3):
 # unit level: packed_step == per-leaf chain-batched kernel
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("dynamics", ["langevin", "sghmc"])
 @pytest.mark.parametrize("variant", ["plain", "scalar"])
-def test_packed_step_bitmatches_per_leaf_kernel_multileaf(variant):
+def test_packed_step_bitmatches_per_leaf_kernel_multileaf(variant,
+                                                          dynamics):
     key = jax.random.PRNGKey(0)
     C, S = 4, 5
     # "b" spans MULTIPLE packed blocks (2*1300 > 2 * block_rows*LANE =
@@ -92,6 +103,11 @@ def test_packed_step_bitmatches_per_leaf_kernel_multileaf(variant):
     scale = jnp.linspace(10.0, 40.0, C)
     f_s = jnp.linspace(0.1, 0.4, C)
     kw = dict(h=1e-4, prior_prec=1.0, alpha=1.0, temperature=1.0)
+    hmc = dynamics == "sghmc"
+    dyn_kw = dict(dynamics=dynamics, friction=0.25) if hmc else {}
+    mom = {n: 0.01 * jax.random.normal(jax.random.fold_in(ks[4], i),
+                                       (C,) + s)
+           for i, (n, s) in enumerate(shapes.items())} if hmc else None
 
     if variant == "plain":
         bank, kind = None, None
@@ -105,7 +121,10 @@ def test_packed_step_bitmatches_per_leaf_kernel_multileaf(variant):
 
     ref = ops.fused_update_chains_tree(
         theta, g, keys, scale=scale, f_s=f_s, bank=bank, sids=sids,
-        surrogate_kind=kind, **kw)
+        surrogate_kind=kind, momentum=mom, **dyn_kw, **kw)
+    ref_r = None
+    if hmc:
+        ref, ref_r = ref
 
     layout = ops.make_packed_layout(jax.tree.map(lambda t: t[0], theta))
     th_p = layout.pack(theta)
@@ -122,14 +141,23 @@ def test_packed_step_bitmatches_per_leaf_kernel_multileaf(variant):
         lam_s_leaf = pb["lam_s_leaf"][sids]
     scalars = ops.packed_scalar_rows(
         layout, scale=scale, f_s=f_s, lam_g_leaf=lam_g_leaf,
-        lam_s_leaf=lam_s_leaf, **kw)
+        lam_s_leaf=lam_s_leaf, friction=(0.25 if hmc else 0.0), **kw)
     out_p = ops.packed_step(layout, th_p, g_p, seeds, scalars,
                             variant=variant if bank else "plain",
-                            mu_g=mu_g, mu_s=mu_s)
-    got = layout.unpack(out_p)
+                            mu_g=mu_g, mu_s=mu_s,
+                            r_p=(layout.pack(mom) if hmc else None),
+                            dynamics=dynamics)
+    if hmc:
+        got, got_r = layout.unpack(out_p[0]), layout.unpack(out_p[1])
+    else:
+        got, got_r = layout.unpack(out_p), None
     for n in shapes:
         np.testing.assert_array_equal(np.asarray(got[n]),
                                       np.asarray(ref[n]), err_msg=n)
+        if hmc:
+            np.testing.assert_array_equal(np.asarray(got_r[n]),
+                                          np.asarray(ref_r[n]),
+                                          err_msg=f"momentum:{n}")
 
 
 def test_packed_step_bitmatches_per_leaf_kernel_diag():
@@ -311,16 +339,152 @@ def test_packed_run_jaxpr_single_pallas_call_no_pad_in_scan():
         assert body.count("pallas_call") <= 1
 
 
-def test_packed_fp32_only_guard():
+def test_packed_float_only_guard():
+    """bf16 (any floating dtype) now PACKS — the PR 2 fp32-only guard is
+    gone; only non-float leaves fall off the packed path (auto) or refuse
+    (explicit packed=True)."""
     data, bank = _flat_problem(jax.random.PRNGKey(0))
     cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=5,
                         local_updates=2, prior_precision=1.0)
     eng = MeshChainEngine(log_lik_flat, cfg, data, minibatch=8,
                           use_kernel=True)
-    # auto mode: non-fp32 params silently fall back to the per-leaf path
-    assert eng._layout_for(jnp.zeros(3, jnp.bfloat16)) is None
+    assert eng._layout_for(jnp.zeros(3, jnp.bfloat16)) is not None
+    # auto mode: non-FLOAT params silently fall back to the per-leaf path
+    assert eng._layout_for({"w": jnp.zeros(3),
+                            "steps": jnp.zeros(3, jnp.int32)}) is None
     # explicit packed=True refuses instead of changing dtype semantics
     eng2 = MeshChainEngine(log_lik_flat, cfg, data, minibatch=8,
                            use_kernel=True, packed=True)
     with pytest.raises(ValueError):
-        eng2._layout_for(jnp.zeros(3, jnp.bfloat16))
+        eng2._layout_for({"w": jnp.zeros(3),
+                          "steps": jnp.zeros(3, jnp.int32)})
+
+
+# ---------------------------------------------------------------------------
+# PackedChains pack/unpack round-trips: mixed dtypes, ragged/odd leaf shapes
+# ---------------------------------------------------------------------------
+
+_RT_DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_a=st.integers(1, 2200), n_b=st.integers(1, 3000),
+       chains=st.integers(1, 5), dt_combo=st.integers(0, 26))
+def test_pack_unpack_roundtrip_mixed_dtypes(n_a, n_b, chains, dt_combo):
+    """Property: pack -> unpack is the identity for ANY mix of floating
+    leaf dtypes and ragged leaf sizes (leaves spanning one block, many
+    blocks, or a fraction of one). Narrow-dtype leaves widen to fp32
+    losslessly, so the round trip is exact, and quantize() on a
+    fresh-packed buffer is a fixed point. ``dt_combo`` decodes base-3 into
+    the three leaf dtypes (0 = all fp32 ... 26 = all fp16)."""
+    dt_a, dt_b, dt_c = dt_combo % 3, (dt_combo // 3) % 3, dt_combo // 9
+    shapes = {"a": ((n_a,), _RT_DTYPES[dt_a]),
+              "b": ((2, n_b), _RT_DTYPES[dt_b]),
+              "c": ((37,), _RT_DTYPES[dt_c])}
+    key = jax.random.PRNGKey(n_a * 7 + n_b * 3 + dt_combo)
+    tree = {n: jax.random.normal(jax.random.fold_in(key, i),
+                                 (chains,) + s).astype(dt)
+            for i, (n, (s, dt)) in enumerate(shapes.items())}
+    layout = ops.make_packed_layout(jax.tree.map(lambda t: t[0], tree))
+    buf = layout.pack(tree)
+    assert buf.shape == (chains * layout.rows_total, ops.LANE)
+    assert buf.dtype == jnp.float32
+    back = layout.unpack(buf)
+    for n in tree:
+        assert back[n].dtype == tree[n].dtype, n
+        np.testing.assert_array_equal(np.asarray(back[n]),
+                                      np.asarray(tree[n]), err_msg=n)
+    # storage-dtype values are a fixed point of the per-step quantize
+    np.testing.assert_array_equal(np.asarray(layout.quantize(buf)),
+                                  np.asarray(buf))
+
+
+def test_quantize_matches_per_leaf_dtype_roundtrip():
+    """quantize() == unpack -> cast-to-storage-dtype -> repack, i.e. the
+    exact round trip the per-leaf kernel applies each step, on values NOT
+    already representable in the storage dtype."""
+    tree = {"a": jnp.zeros((3, 513), jnp.bfloat16),
+            "w": jnp.zeros((3, 2, 300), jnp.float32)}
+    layout = ops.make_packed_layout(jax.tree.map(lambda t: t[0], tree))
+    # fresh fp32 values with mantissas bf16 cannot hold
+    buf = layout.pack({"a": jax.random.normal(jax.random.PRNGKey(0),
+                                              (3, 513)) * 1.2345,
+                       "w": jax.random.normal(jax.random.PRNGKey(1),
+                                              (3, 2, 300)) * 1.2345})
+    q = layout.quantize(buf)
+    ref = layout.pack(layout.unpack(buf))  # unpack casts to leaf dtypes
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(ref))
+    got = layout.unpack(q)
+    # fp32 leaf untouched bitwise; bf16 leaf actually rounded
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(layout.unpack(buf)["w"]))
+    raw_a = np.asarray(buf.reshape(3, -1)[:, :513], np.float32)
+    assert not np.array_equal(np.asarray(got["a"], np.float32), raw_a)
+
+
+def test_quantize_identity_for_fp32_layout():
+    """All-fp32 layouts return the SAME buffer object: zero added ops in
+    the scanned round body (the no-pad/single-pallas jaxpr gate relies on
+    this)."""
+    tree = {"a": jnp.zeros((2, 40)), "b": jnp.zeros((2, 7))}
+    layout = ops.make_packed_layout(jax.tree.map(lambda t: t[0], tree))
+    buf = layout.pack(tree)
+    assert layout.quantize(buf) is buf
+
+
+# ---------------------------------------------------------------------------
+# pad-chain masking: odd-chain blocks skip pad gradients, not discard them
+# ---------------------------------------------------------------------------
+
+def test_masked_grad_vmap_skips_pad_chain_gradients():
+    """ROADMAP open item: with n_chains=3 on a 2-way data axis (per=2,
+    one pad chain), the pad device's switch branch must compute the
+    gradient over ONE chain and concatenate a zero row — not vmap the
+    full block and discard. Asserted structurally on the branch jaxprs."""
+    from repro.core.engine import make_masked_grad_vmap
+    from repro.launch.mesh import make_host_mesh
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    d = 3
+    grad_fn = jax.grad(lambda th, b: -0.5 * jnp.sum((b["x"] - th) ** 2))
+    masked = make_masked_grad_vmap(grad_fn, per=2, n_chains=3, d_size=2)
+    # no padding -> the plain vmap shortcut, no switch at all
+    plain = make_masked_grad_vmap(grad_fn, per=2, n_chains=4, d_size=2)
+    thetas = jnp.zeros((2, d))
+    batches = {"x": jnp.zeros((2, 6, d))}
+    pj = jax.make_jaxpr(plain)(thetas, batches)
+    assert all(e.primitive.name != "cond" for e in _all_eqns(pj.jaxpr))
+
+    # axis_index needs an axis context: trace inside shard_map on the
+    # host mesh (the switch itself only cares about the traced index)
+    mesh = make_host_mesh()
+    fn = shard_map(masked, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+                   check_rep=False)
+    jaxpr = jax.make_jaxpr(fn)(thetas, batches)
+    conds = [e for e in _all_eqns(jaxpr.jaxpr)
+             if e.primitive.name == "cond"]
+    assert conds, "pad masking switch missing from the round gradient pass"
+    branches = conds[0].params["branches"]
+    assert len(branches) == 2
+
+    def has_padding_concat(bj):
+        return any(
+            e.primitive.name == "concatenate"
+            and tuple(e.outvars[0].aval.shape) == (2, d)
+            and tuple(e.invars[-1].aval.shape) == (1, d)
+            for e in _all_eqns(bj.jaxpr))
+
+    def grad_widths(bj):
+        # leading dims of sliced per-branch gradient operands: the pad
+        # branch must slice the block down to its single real chain
+        return {tuple(e.outvars[0].aval.shape)[0]
+                for e in _all_eqns(bj.jaxpr)
+                if e.primitive.name in ("slice", "dynamic_slice")
+                and len(e.outvars[0].aval.shape) >= 2}
+
+    pad_branches = [b for b in branches if has_padding_concat(b)]
+    full_branches = [b for b in branches if not has_padding_concat(b)]
+    assert len(pad_branches) == 1 and len(full_branches) == 1
+    assert 1 in grad_widths(pad_branches[0]), \
+        "pad branch never sliced the block to its real chains"

@@ -1,0 +1,120 @@
+"""Executor x dynamics x dtype PARITY MATRIX (the PR 4 CI gate).
+
+Every cell of (vmap | per_leaf | packed) x (sgld | sghmc transition
+kernel) x (fp32 | bf16 parameter leaves) must be BIT-IDENTICAL to the
+``FederatedSampler.run_vmap`` oracle configured for the same cell
+(``use_kernel`` mirrors the executor, ``dynamics`` the transition
+kernel). This is the contract that lets the facade route every dynamics
+and dtype through the one fast path: the packed executor's momentum
+segment and per-leaf quantize-back may never drift from the reference
+semantics.
+
+Runs as its own CI lane (``parity-matrix`` in .github/workflows/ci.yml);
+locally: ``PYTHONPATH=src python -m pytest -q tests/test_parity_matrix.py``.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import SamplerConfig
+from repro.core import FederatedSampler, make_bank
+
+S, N, DIN, DOUT = 4, 24, 2, 300
+ROUNDS, LOCAL, CHAINS, M = 3, 3, 4, 6
+
+
+def log_lik(theta, batch):
+    pred = batch["x"] @ theta["w"] + theta["b"]
+    return -0.5 * jnp.sum((batch["y"] - pred) ** 2)
+
+
+def _problem(key, dtype):
+    """Multi-leaf linear-model posterior + 'scalar' bank; the w leaf spans
+    multiple packed blocks so in-leaf segment offsets are exercised."""
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (S, N, DIN))
+    w_true = jax.random.normal(ks[1], (DIN, DOUT))
+    y = x @ w_true + 0.1 * jax.random.normal(ks[2], (S, N, DOUT))
+    theta0 = {"b": jnp.zeros(DOUT, dtype), "w": jnp.zeros((DIN, DOUT), dtype)}
+    means = {"b": jax.random.normal(ks[3], (S, DOUT)) * 0.1,
+             "w": jnp.broadcast_to(w_true[None], (S, DIN, DOUT))
+             + 0.1 * jax.random.normal(ks[3], (S, DIN, DOUT))}
+    precs = {"b": jnp.linspace(1.0, 2.0, S),
+             "w": jnp.linspace(3.0, 5.0, S)}
+    return {"x": x, "y": y}, make_bank(means, precs, "scalar"), theta0
+
+
+_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+@pytest.mark.parametrize("dtype", ["fp32", "bf16"])
+@pytest.mark.parametrize("kernel", ["sgld", "sghmc"])
+@pytest.mark.parametrize("executor", ["vmap", "per_leaf", "packed"])
+def test_parity_cell_bitmatches_oracle(executor, kernel, dtype):
+    data, bank, theta0 = _problem(jax.random.PRNGKey(2), _DTYPES[dtype])
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=M,
+        step_size=1e-4, kernel=kernel, friction=0.1,
+        surrogate=api.SurrogateSpec(kind="scalar", bank=bank),
+        schedule=api.Schedule(rounds=ROUNDS, local_steps=LOCAL,
+                              n_chains=CHAINS),
+        execution=api.Execution(executor=executor))
+    if executor == "packed":
+        assert f.engine._layout_for(theta0) is not None, \
+            "packed cell silently fell back off the packed path"
+    got = f.sample(jax.random.PRNGKey(7), theta0)
+
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=LOCAL, prior_precision=1.0,
+                        surrogate="scalar")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.sghmc import SGHMCConfig
+        oracle = FederatedSampler(
+            log_lik, cfg, data, minibatch=M, bank=bank,
+            use_kernel=(executor != "vmap"),
+            dynamics=("sghmc" if kernel == "sghmc" else "langevin"),
+            sghmc=(SGHMCConfig(friction=0.1) if kernel == "sghmc"
+                   else None))
+    ref = oracle.run_vmap(jax.random.PRNGKey(7), theta0, ROUNDS,
+                          n_chains=CHAINS)
+    for name in theta0:
+        assert got[name].shape == (CHAINS, ROUNDS * LOCAL) \
+            + theta0[name].shape
+        assert got[name].dtype == theta0[name].dtype
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(ref[name]), err_msg=name)
+
+
+def test_mixed_dtype_tree_stays_packed_and_bitmatches():
+    """One bf16 leaf + one fp32 leaf in the SAME tree rides the packed
+    buffer (the old fp32-only guard is gone) and still bit-matches the
+    per-leaf kernel oracle leaf-for-leaf."""
+    data, bank, theta0 = _problem(jax.random.PRNGKey(5), jnp.float32)
+    theta0 = {"b": theta0["b"].astype(jnp.bfloat16), "w": theta0["w"]}
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=LOCAL, prior_precision=1.0,
+                        surrogate="scalar")
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=M,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="scalar", bank=bank),
+        schedule=api.Schedule(rounds=ROUNDS, local_steps=LOCAL,
+                              n_chains=CHAINS),
+        execution=api.Execution(executor="packed"))
+    assert f.engine._layout_for(theta0) is not None
+    got = f.sample(jax.random.PRNGKey(3), theta0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        oracle = FederatedSampler(log_lik, cfg, data, minibatch=M,
+                                  bank=bank, use_kernel=True)
+    ref = oracle.run_vmap(jax.random.PRNGKey(3), theta0, ROUNDS,
+                          n_chains=CHAINS)
+    assert got["b"].dtype == jnp.bfloat16 and got["w"].dtype == jnp.float32
+    for name in theta0:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(ref[name]), err_msg=name)
