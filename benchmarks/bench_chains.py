@@ -220,11 +220,54 @@ def _bnn_rows(key, rows):
         note="derived = packed / per-leaf steps/s; speedup-floor=5.0"))
 
 
+def _fed_rows(key, rows):
+    """Compressed vs uncompressed communication rounds (PR 5): the same
+    Gaussian posterior through the facade with a registry scenario. Every
+    row reports steps/s AND the estimated upload bytes per chain per
+    communication round (the ``bytes_per_round`` envelope column). The
+    ``compress_overhead`` ratio is gated absolutely: in-scan compression
+    at round boundaries must not halve throughput (both sides share the
+    backend, so the floor is machine-portable like the packed floors)."""
+    from repro.fed import SCENARIOS, Compression
+
+    d = max(int(4096 * SCALE), 64)
+    n = max(int(256 * SCALE), 16)
+    S, C = 4, 4
+    rounds, t_local = 4, 8
+    data, bank = _gauss_problem(jax.random.fold_in(key, 77), S, n, d)
+    theta0 = jnp.zeros(d)
+    m = min(32, n)
+
+    thru = {}
+    lanes = [("uncompressed", "identity", Compression()),
+             ("topk-1%", "topk-1%", SCENARIOS["topk-1%"].compression),
+             ("qsgd-8bit", "qsgd-8bit", SCENARIOS["qsgd-8bit"].compression)]
+    # ONE facade: scenarios swap per sample() call (the engine caches one
+    # executor per federation spec)
+    f = _facade(gauss_log_lik, data, bank, m, t_local, "vmap", "diag")
+    for tag, scenario, comp in lanes:
+        def runner(k, t0_, r, nc, _s=scenario):
+            return f.sample(k, t0_, rounds=r, n_chains=nc, federation=_s)
+
+        us, th, _ = _time_run(runner, jax.random.PRNGKey(1), theta0,
+                              rounds, C, t_local)
+        thru[tag] = th
+        rows.append(Row(f"chains/fed/{tag}/S{S}/C{C}", us, th,
+                        note="derived = chain-steps/s",
+                        bytes_per_round=comp.bytes_per_round(d)))
+    rows.append(Row(
+        f"chains/fed/compress_overhead/S{S}/C{C}", 0.0,
+        min(thru["topk-1%"], thru["qsgd-8bit"]) / thru["uncompressed"],
+        note="derived = compressed / uncompressed steps/s; "
+             "speedup-floor=0.5"))
+
+
 def run():
     key = jax.random.PRNGKey(0)
     rows = []
     _gauss_rows(key, rows)
     _bnn_rows(key, rows)
+    _fed_rows(key, rows)
     return rows
 
 

@@ -48,6 +48,7 @@ import sys
 THROUGHPUT_MARK = "chain-steps/s"
 CONTROL_PREFIX = "chains/vmap/"
 FLOOR_MARK = "speedup-floor="
+FED_PREFIX = "chains/fed/"
 
 
 def _rows(env: dict) -> dict:
@@ -78,6 +79,34 @@ def check_speedup_floors(env: dict) -> list:
     return failed
 
 
+def check_fed_bytes(env: dict) -> list:
+    """The compressed-rounds lanes must REPORT their wire cost: every
+    ``chains/fed/`` throughput row carries a finite positive
+    ``bytes_per_round``, and the compressed lanes upload strictly fewer
+    bytes than the uncompressed control — a compressor whose estimate
+    stops beating the exact exchange is a broken spec, gated here (no
+    baseline needed; the comparison is within one run)."""
+    fed = [r for r in env.get("rows", [])
+           if r["name"].startswith(FED_PREFIX)
+           and THROUGHPUT_MARK in r.get("note", "")]
+    if not fed:
+        return []
+    failed = []
+    exact = [r for r in fed if "/uncompressed/" in r["name"]]
+    exact_bytes = min((r.get("bytes_per_round") or float("inf"))
+                      for r in exact) if exact else float("inf")
+    for r in fed:
+        b = r.get("bytes_per_round")
+        ok = b is not None and math.isfinite(b) and b > 0
+        if ok and r not in exact:
+            ok = b < exact_bytes
+        print(f"{'ok  ' if ok else 'FAIL'} {r['name']}: "
+              f"bytes/round {b} (uncompressed {exact_bytes})")
+        if not ok:
+            failed.append(r["name"])
+    return failed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -91,6 +120,7 @@ def main(argv=None) -> int:
     # absolute speedup floors gate even without a baseline (they compare
     # two executors inside the SAME run, not a run against history)
     floor_failed = check_speedup_floors(cur)
+    floor_failed += check_fed_bytes(cur)
     if floor_failed:
         print(f"speedup floor(s) violated: {floor_failed}",
               file=sys.stderr)

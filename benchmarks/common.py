@@ -25,6 +25,11 @@ class Row:
     us_per_call: float
     derived: float
     note: str = ""
+    # bytes uploaded per chain per communication round (the compressed-
+    # rounds lanes); None on rows where the wire cost is not the point.
+    # Additive envelope column: absent->null in old baselines, ignored by
+    # consumers that don't know it.
+    bytes_per_round: Optional[float] = None
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.2f},{self.derived:.6g}"
@@ -32,7 +37,12 @@ class Row:
     def ok(self) -> bool:
         """A row with a non-finite metric is a FAILED measurement — the CI
         bench lane must gate on it, not archive it."""
-        return math.isfinite(self.us_per_call) and math.isfinite(self.derived)
+        fine = (math.isfinite(self.us_per_call)
+                and math.isfinite(self.derived))
+        if self.bytes_per_round is not None:
+            fine = fine and math.isfinite(self.bytes_per_round) \
+                and self.bytes_per_round > 0
+        return fine
 
 
 def rows_as_json(rows: list, *, failures: int = 0) -> dict:

@@ -1,11 +1,14 @@
 """Paper Figures 2-3: 2-D Gaussian mean under non-IID shards and delayed
-communication.
+communication — expressed through NAMED federation scenarios.
 
 S=10 shards of 200 points from N(mu_s, I), mu_s ~ U[-6,6]^2; h=1e-4, m=10.
-DSGLD collapses toward the mixture of local posteriors as the number of
-shard-local updates grows; FSGLD (analytic likelihood surrogates, exactly
-the paper's choice) stays on the true posterior and is insensitive to the
-local-update count.
+The delayed-communication axis is the registry's ``delayed-kx`` schedule
+(communicate every k-th round, one local step per round — exactly k
+shard-local updates between reassignments, the paper's x-axis) instead of
+a hand-rolled local-update loop: DSGLD collapses toward the mixture of
+local posteriors as the delay grows; FSGLD (analytic likelihood
+surrogates, exactly the paper's choice) stays on the true posterior and
+is insensitive to the delay.
 """
 from __future__ import annotations
 
@@ -19,6 +22,18 @@ from repro.core import analytic_gaussian_likelihood_surrogate, make_bank
 
 def log_lik(theta, batch):
     return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+# (method, registry scenario): the delayed-communication contrast of
+# Figs. 2-3, enumerated by name — the schedule is lowered into the
+# engine's scan, not rewired into the driver loop.
+CASES = [
+    ("dsgld", "identity"),
+    ("dsgld", "delayed-10x"),
+    ("dsgld", "delayed-100x"),
+    ("fsgld", "identity"),
+    ("fsgld", "delayed-100x"),
+]
 
 
 def run():
@@ -35,33 +50,32 @@ def run():
     total_steps = int(30_000 * max(SCALE, 1))
 
     rows = []
-    for method, local in [("dsgld", 1), ("dsgld", 10), ("dsgld", 100),
-                          ("fsgld", 1), ("fsgld", 100)]:
+    for method, scenario in CASES:
         samp = api.FSGLD(
             api.Posterior(log_lik, prior_precision=1.0), {"x": x},
             minibatch=10, step_size=1e-4, method=method,
             surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
                        if method == "fsgld"
                        else api.SurrogateSpec(kind="none")),
-            schedule=api.Schedule(rounds=total_steps // local,
-                                  local_steps=local, thin=10))
+            schedule=api.Schedule(rounds=total_steps, local_steps=1),
+            federation=scenario)
         with Timer() as t:
             trace = samp.sample(jax.random.PRNGKey(2), jnp.zeros(d))[0]
         trace = trace[trace.shape[0] // 2:]
         mse = float(jnp.sum((trace.mean(0) - post_mean) ** 2))
-        rows.append(Row(f"fig2/{method}_local{local}_mse",
+        rows.append(Row(f"fig2/{method}_{scenario}_mse",
                         t.us_per(total_steps), mse))
     by = {r.name: r.derived for r in rows}
     # paper claims encoded as derived indicator rows
-    rows.append(Row("fig3/dsgld_degrades_with_local_updates", 0.0,
-                    float(by["fig2/dsgld_local100_mse"]
-                          > 5 * by["fig2/dsgld_local1_mse"])))
-    rows.append(Row("fig3/fsgld_insensitive_to_local_updates", 0.0,
-                    float(by["fig2/fsgld_local100_mse"]
-                          < 3 * max(by["fig2/fsgld_local1_mse"], 1e-5))))
-    rows.append(Row("fig3/fsgld_beats_dsgld_at_100", 0.0,
-                    float(by["fig2/fsgld_local100_mse"]
-                          < 0.1 * by["fig2/dsgld_local100_mse"])))
+    rows.append(Row("fig3/dsgld_degrades_with_delay", 0.0,
+                    float(by["fig2/dsgld_delayed-100x_mse"]
+                          > 5 * by["fig2/dsgld_identity_mse"])))
+    rows.append(Row("fig3/fsgld_insensitive_to_delay", 0.0,
+                    float(by["fig2/fsgld_delayed-100x_mse"]
+                          < 3 * max(by["fig2/fsgld_identity_mse"], 1e-5))))
+    rows.append(Row("fig3/fsgld_beats_dsgld_at_100x", 0.0,
+                    float(by["fig2/fsgld_delayed-100x_mse"]
+                          < 0.1 * by["fig2/dsgld_delayed-100x_mse"])))
     return rows
 
 

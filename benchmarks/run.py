@@ -2,7 +2,8 @@
 ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
 
   fig1  — gradient-estimator variance (Bernoulli, non-IID shards)
-  fig2/3 — Gaussian mean: DSGLD mixture-collapse vs FSGLD, local-update sweep
+  fig2/3 — Gaussian mean: DSGLD mixture-collapse vs FSGLD under named
+           delayed-communication federation scenarios
   fig4  — bound constants eps_s^2 vs gamma_s^2
   fig5  — Bayesian metric learning (class-disjoint shards)
   table1 — Bayesian MLP, IID vs non-IID label imbalance

@@ -22,6 +22,11 @@ Four declarative pieces:
   * :class:`Execution`     — mesh, executor (``vmap``/``per_leaf``/
     ``packed``/``auto``), surrogate storage dtype (bf16 at scale),
     whether to collect a trace or return final states.
+  * :class:`Federation`    — the scenario (``repro.fed``): non-IID
+    partitioner, communication schedule (delayed rounds / partial
+    participation / stragglers), compressed round payloads — passed as
+    a spec or a registry name (``'dirichlet-0.1'``, ``'delayed-5x'``,
+    ``'topk-1%'``, ...), and executed INSIDE the engine's jitted scan.
 
 and one verb::
 
@@ -45,13 +50,15 @@ from repro.configs.base import SamplerConfig
 from repro.core.engine import MeshChainEngine, pad_shards
 from repro.core.federated import fit_bank_fisher, refresh_bank
 from repro.core.surrogate import SurrogateBank, fit_scalar_tree, make_bank
+from repro.fed import Federation, get_scenario
+from repro.fed.partition import partition as partition_clients
 
 PyTree = Any
 LogLikFn = Callable[[PyTree, PyTree], jax.Array]
 
 __all__ = [
-    "Posterior", "SurrogateSpec", "Schedule", "Execution", "FSGLD",
-    "fit_bank_local_sgld",
+    "Posterior", "SurrogateSpec", "Schedule", "Execution", "Federation",
+    "FSGLD", "fit_bank_local_sgld", "get_scenario",
 ]
 
 _EXECUTORS = ("auto", "vmap", "per_leaf", "packed")
@@ -175,6 +182,12 @@ class FSGLD:
     dynamics compose with every executor — packed SGHMC carries the
     momenta in a second chain-major buffer and is bit-identical to the
     run_vmap oracle (tests/test_parity_matrix.py).
+
+    ``federation`` selects the federation scenario (``repro.fed``): a
+    :class:`Federation` spec or a registry name. With a partition spec
+    the ``data`` argument is POOLED (N, ...) arrays and the partitioner
+    splits it onto clients; the schedule/compression axes lower into the
+    engine's scanned round body (identity == the oracle, bitwise).
     """
 
     def __init__(self, posterior: Posterior, data: PyTree, *,
@@ -185,7 +198,8 @@ class FSGLD:
                  schedule: Optional[Schedule] = None,
                  execution: Optional[Execution] = None,
                  shard_probs: Optional[tuple] = None,
-                 sizes: Optional[tuple] = None):
+                 sizes: Optional[tuple] = None,
+                 federation: Any = None):
         if method not in ("sgld", "dsgld", "fsgld"):
             raise ValueError(method)
         if kernel not in ("sgld", "sghmc"):
@@ -202,8 +216,19 @@ class FSGLD:
         self.execution = execution if execution is not None else Execution()
         self.kernel = kernel
         self.friction = friction
+        self.federation = (get_scenario(federation)
+                           if federation is not None else None)
 
-        if isinstance(data, (list, tuple)):
+        if self.federation is not None and \
+                self.federation.partition is not None:
+            # with a partition spec the data contract flips: ``data`` is
+            # POOLED (pytree of (N, ...) leaves) and the partitioner
+            # splits it onto clients (padded + masked, ragged ok). The
+            # partition RNG comes from the spec's own seed — changing the
+            # scenario never perturbs the sampling stream.
+            data, sizes = partition_clients(
+                None, data, self.federation.partition)
+        elif isinstance(data, (list, tuple)):
             data, inferred = pad_shards(list(data))
             sizes = sizes if sizes is not None else inferred
         self.data = data
@@ -303,7 +328,8 @@ class FSGLD:
 
     def sample(self, key: jax.Array, theta0: PyTree, *,
                rounds: Optional[int] = None,
-               n_chains: Optional[int] = None):
+               n_chains: Optional[int] = None,
+               federation: Any = None):
         """Run the full schedule and return stacked samples with leading
         axes (n_chains, rounds * local_steps / thin, ...) — or the final
         chain states when ``Execution.collect`` is False.
@@ -313,9 +339,27 @@ class FSGLD:
         oracle's RNG stream. ``rounds``/``n_chains`` override the
         schedule for sweep drivers; everything else is fixed at
         construction.
+
+        ``federation`` — a ``repro.fed.Federation`` spec or a registry
+        name (``'delayed-5x'``, ``'topk-1%'``, ...) — overrides the
+        constructor's scenario for this run. Only the ENGINE axes
+        (communication schedule, compression) can change per call: the
+        partition fixed the data at construction, so an override whose
+        partition differs is refused. The identity scenario is
+        bit-identical to ``federation=None`` on every executor.
         """
         if (self.cfg.method == "fsgld" and self.bank is None):
             self.fit(jax.random.fold_in(key, 0x5357), theta0)
+        fed = self.federation
+        if federation is not None:
+            fed = get_scenario(federation)
+            base = (self.federation.partition
+                    if self.federation is not None else None)
+            if fed.partition is not None and fed.partition != base:
+                raise ValueError(
+                    "sample(federation=...) cannot re-partition: the "
+                    "data was split at construction; pass the partition "
+                    "scenario to the FSGLD constructor instead")
         sched = self.schedule
         return self.engine.run(
             key, theta0, rounds if rounds is not None else sched.rounds,
@@ -323,7 +367,7 @@ class FSGLD:
                       else sched.n_chains),
             reassign=sched.reassign, collect_every=sched.thin,
             refresh_every=self.surrogate.refresh_every,
-            collect=self.execution.collect)
+            collect=self.execution.collect, federation=fed)
 
 
 # ---------------------------------------------------------------------------

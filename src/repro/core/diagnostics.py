@@ -13,14 +13,31 @@ import jax.numpy as jnp
 
 
 def _split_chains(x: jax.Array) -> jax.Array:
-    """(C, N, ...) -> (2C, N//2, ...) split-half chains."""
-    C, N = x.shape[:2]
+    """(C, N, ...) -> (2C, N//2, ...) split-half chains.
+
+    Odd N: the FIRST sample (the one closest to burn-in) is dropped so
+    both halves are contiguous equal-length blocks — documented
+    truncation instead of silently losing a sample from the middle of
+    the chain (the old ``x[:, n:2n]`` slice).
+    """
+    N = x.shape[1]
+    if N % 2:
+        x = x[:, 1:]
+        N -= 1
     n = N // 2
-    return jnp.concatenate([x[:, :n], x[:, n:2 * n]], axis=0)
+    return jnp.concatenate([x[:, :n], x[:, n:]], axis=0)
 
 
 def rhat(chains: jax.Array) -> jax.Array:
-    """Split-R-hat per dimension. chains: (C, N, ...) -> (...)."""
+    """Split-R-hat per dimension. chains: (C, N, ...) -> (...).
+
+    Needs N >= 4: split halves must hold >= 2 samples each for the
+    ddof=1 within-chain variance to exist (shorter traces would return
+    NaN silently — refuse loudly instead)."""
+    if chains.shape[1] < 4:
+        raise ValueError(
+            f"rhat needs >= 4 samples per chain (got N={chains.shape[1]}): "
+            "split halves must each hold >= 2 samples")
     x = _split_chains(chains.astype(jnp.float64)
                       if jax.config.read("jax_enable_x64")
                       else chains.astype(jnp.float32))
@@ -35,12 +52,18 @@ def rhat(chains: jax.Array) -> jax.Array:
 
 def ess(chains: jax.Array, max_lag: int = 200) -> jax.Array:
     """Bulk effective sample size per dimension via the initial-positive
-    autocorrelation-sum estimator. chains: (C, N, ...) -> (...)."""
+    autocorrelation-sum estimator. chains: (C, N, ...) -> (...).
+
+    ``max_lag`` is clamped to N//2 - 1 for short traces: the biased-FFT
+    autocovariance at lags beyond half the trace averages over fewer
+    than N/2 products and is pure noise — summing it would let a short
+    trace report an arbitrarily wrong tau (the old N-1 clamp did exactly
+    that). Floor of 1 keeps N <= 4 traces defined (tau from lag 1)."""
     x = chains.astype(jnp.float32)
     C, N = x.shape[:2]
     xc = x - x.mean(axis=1, keepdims=True)
     var = x.var(axis=1).mean(axis=0)             # (...)
-    max_lag = min(max_lag, N - 1)
+    max_lag = min(max_lag, max(N // 2 - 1, 1))
 
     # FFT autocovariance (dynamic-slice-free, vectorised over dims)
     nfft = 2 * N

@@ -40,11 +40,21 @@ falls back to the PR 1 per-leaf chain-batched entry
 per step).
 
 ``run`` itself is a single jitted ``lax.scan`` over communication rounds
-(per mode/shape, cached): reassignment (categorical + SPMD permutation),
-round key-splitting, and thinned trace collection all happen inside the
-scan, chain state is donated instead of copied, and the trace comes back
-preallocated as ``(C, R * T/collect_every, ...)`` — no host dispatch and
-no trailing concatenate in the hot loop.
+(per mode/shape, cached): reassignment (categorical + SPMD permutation;
+block-cyclic client visiting when n_chains > S), round key-splitting, and
+thinned trace collection all happen inside the scan, chain state is
+donated instead of copied, and the trace comes back preallocated as
+``(C, R * T/collect_every, ...)`` — no host dispatch and no trailing
+concatenate in the hot loop.
+
+Federation scenarios (``repro.fed``, PR 5): ``run(...,
+federation=spec)`` lowers the scenario's communication schedule (delayed
+rounds, partial participation, stragglers) and round-boundary payload
+compression (top-k / rand-k / qsgd with error feedback) INTO the scanned
+round body — the carry gains the resident client assignment and the
+compression's (server-view, error-feedback) state, still one scan and
+one dispatch. The engine-identity spec lowers to None and shares the
+oracle executor bit-for-bit.
 """
 from __future__ import annotations
 
@@ -274,13 +284,21 @@ def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
 
 
 def _perm_sids_slice(k_assign: jax.Array, num_shards: int, start,
-                     per: int) -> jax.Array:
+                     per: int, n_total: Optional[int] = None) -> jax.Array:
     """Collision-free reassignment, SPMD: every device derives the SAME
     permutation of [0, S) from the replicated round key and slices its own
     chain block. Equals the host-side ``permutation(k, S)[:C]`` bitwise.
-    Shared by the scanned round body and ``_permute_sids``."""
-    return jax.lax.dynamic_slice_in_dim(
-        jax.random.permutation(k_assign, num_shards), start, per)
+    Shared by the scanned round body and ``_permute_sids``.
+
+    ``n_total > num_shards`` switches to BLOCK-CYCLIC client visiting:
+    the round's permutation is tiled so chain c sits at client
+    ``perm[c % S]`` — every client hosts floor/ceil(C/S) chains and the
+    only collisions are the cyclic wrap (host-side equivalent:
+    ``tile(permutation(k, S), ceil(C/S))[:C]``)."""
+    perm = jax.random.permutation(k_assign, num_shards)
+    if n_total is not None and n_total > num_shards:
+        perm = jnp.concatenate([perm] * (-(-n_total // num_shards)))
+    return jax.lax.dynamic_slice_in_dim(perm, start, per)
 
 
 def pack_bank(layout: kops.PackedChains, bank: Optional[SurrogateBank]):
@@ -522,7 +540,7 @@ class MeshChainEngine:
     def _executor(self, *, num_rounds: int, n_chains: int,
                   n_total: Optional[int] = None, reassign: str,
                   collect: bool, collect_every: int,
-                  layout: Optional[kops.PackedChains]):
+                  layout: Optional[kops.PackedChains], federation=None):
         """jit(shard_map(scan-over-rounds)) executor: ONE dispatch runs
         ``num_rounds`` communication rounds — reassignment, round key
         splitting, local updates, and thinned trace collection all live
@@ -536,11 +554,22 @@ class MeshChainEngine:
         count actually resident on the mesh (a data-axis multiple). Pad
         chains get sid 0 (categorical; their permutation slot otherwise)
         and a zero key; their trajectories are computed and discarded by
-        ``run``'s output slice."""
+        ``run``'s output slice.
+
+        ``federation`` (a ``repro.fed.Federation``, or None) lowers the
+        scenario's communication schedule and payload compression INTO
+        the scanned round body: the carry gains the resident sids (kept
+        across delayed/non-participating rounds) and, with compression,
+        the per-chain (server-view, error-feedback) flat state — still
+        one scan, one dispatch, no retrace per scenario. An
+        engine-identity spec lowers to None and shares the oracle
+        executor bit-for-bit."""
         if n_total is None:
             n_total = n_chains
+        fed = (federation if federation is not None
+               and not federation.engine_identity else None)
         cache_key = (num_rounds, n_chains, n_total, reassign, collect,
-                     collect_every, layout)
+                     collect_every, layout, fed)
         if cache_key in self._executors:
             return self._executors[cache_key]
 
@@ -586,6 +615,36 @@ class MeshChainEngine:
 
         hmc = self.dynamics == "sghmc"
 
+        # federation lowering: the schedule/compression hooks operate on
+        # the canonical per-chain (theta, momentum) view of whatever state
+        # form the executor carries, and write back through set_view
+        # (repacking the packed buffers — lossless: the pallas update is
+        # elementwise, so buffer pad lanes never feed real lanes).
+        if layout is not None:
+            def get_view(st):
+                if hmc:
+                    return st[2], layout.unpack(st[1])
+                return st[1], None
+
+            def set_view(st, th, r):
+                if hmc:
+                    return (layout.pack(th), layout.pack(r), th)
+                return (layout.pack(th), th)
+        else:
+            def get_view(st):
+                return (st[0], st[1]) if hmc else (st, None)
+
+            def set_view(st, th, r):
+                return (th, r) if hmc else th
+
+        if fed is not None:
+            from repro.fed import schedule as fsched
+            from repro.fed.compress import make_compressor, make_flattener
+            sched, comp = fed.schedule, fed.compression
+            use_part = sched.participation < 1.0
+            use_strag = sched.straggler_prob > 0.0
+            use_comp = not comp.identity
+
         def block(key, chains, shard_data, bank_rt):
             if layout is not None:
                 rt_bank = pack_bank(
@@ -603,19 +662,25 @@ class MeshChainEngine:
                 state = chains
             blk = jax.lax.axis_index("data") * per
 
-            def round_body(carry, _):
-                key, state = carry
-                key, k_assign, k_run = jax.random.split(key, 3)
+            def propose_sids(k_assign):
+                """This round's chain->client draw — the same derivation
+                on the identity and scheduled paths (schedules only gate
+                whether a chain TAKES its draw)."""
                 if cfg.method == "sgld":
-                    sids = jnp.zeros((per,), jnp.int32)
-                elif reassign == "categorical":   # paper Algorithm 1
-                    sids = jax.lax.dynamic_slice_in_dim(
+                    return jnp.zeros((per,), jnp.int32)
+                if reassign == "categorical":     # paper Algorithm 1
+                    return jax.lax.dynamic_slice_in_dim(
                         pad_tail(jax.random.categorical(
                             k_assign,
                             jnp.log(probs)[None].repeat(n_chains, 0))),
                         blk, per)
-                else:                             # SPMD variant (DESIGN 4.1)
-                    sids = _perm_sids_slice(k_assign, S, blk, per)
+                # SPMD variant (DESIGN 4.1); block-cyclic when C > S
+                return _perm_sids_slice(k_assign, S, blk, per, n_total)
+
+            def round_body(carry, _):
+                key, state = carry
+                key, k_assign, k_run = jax.random.split(key, 3)
+                sids = propose_sids(k_assign)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
                 state, trace = round_fn(state, keys_blk, sids, shard_data,
@@ -624,8 +689,102 @@ class MeshChainEngine:
                      if collect else None)
                 return (key, state), y
 
-            (key, state), traces = jax.lax.scan(
-                round_body, (key, state), None, length=num_rounds)
+            def fed_round_body(carry, r):
+                key, state, sids, cst = carry
+                key, k_assign, k_run, k_fed = jax.random.split(key, 4)
+                new_sids = propose_sids(k_assign).astype(jnp.int32)
+                comm = fsched.comm_mask(sched, r)
+                if use_part:
+                    exch = comm & jax.lax.dynamic_slice_in_dim(
+                        pad_tail(fsched.participation_mask(
+                            sched, jax.random.fold_in(k_fed, 0), r,
+                            n_chains)), blk, per)
+                else:
+                    exch = jnp.broadcast_to(comm, (per,))
+                sids = jnp.where(exch, new_sids, sids)
+                if use_comp:
+                    # compressed exchange at the round boundary: the
+                    # exchanging chains' deltas (plus error feedback) are
+                    # compressed and the chain continues from the
+                    # server's view; everyone else's state is untouched —
+                    # bitwise: non-exchanging chains' leaves are never
+                    # written (no fp32 flatten round-trip), and the
+                    # whole pipeline (flatten, top_k/quantize, repack)
+                    # runs under a lax.cond so delayed schedules skip it
+                    # entirely on non-communication rounds (comm is a
+                    # replicated scalar of r, so the cond is SPMD-safe).
+                    def do_exchange(op):
+                        state, (ref, err) = op
+                        th, mom = get_view(state)
+                        flat = flatten(th)
+                        upd = flat - ref + err
+                        dhat = compress(upd, jax.random.fold_in(k_fed, 1))
+                        ref_new = ref + dhat
+                        err_new = (upd - dhat if comp.error_feedback
+                                   else jnp.zeros_like(upd))
+                        m = exch[:, None]
+                        ref = jnp.where(m, ref_new, ref)
+                        err = jnp.where(m, err_new, err)
+                        th_srv = unflatten(ref_new)  # the server's view
+                        th = jax.tree.map(
+                            lambda srv, old: jnp.where(
+                                exch.reshape((per,)
+                                             + (1,) * (old.ndim - 1)),
+                                srv, old),
+                            th_srv, th)
+                        return set_view(state, th, mom), (ref, err)
+
+                    state, cst = jax.lax.cond(
+                        comm, do_exchange, lambda op: op, (state, cst))
+                if use_strag:
+                    pre_th, pre_mom = get_view(state)
+                keys_blk = jax.lax.dynamic_slice_in_dim(
+                    pad_tail(jax.random.split(k_run, n_chains)), blk, per)
+                state, trace = round_fn(state, keys_blk, sids, shard_data,
+                                        rt_bank)
+                if use_strag:
+                    # dropped updates: straggler chains' state does not
+                    # advance and their trace repeats the frozen position
+                    strag = jax.lax.dynamic_slice_in_dim(
+                        pad_tail(fsched.straggler_mask(
+                            sched, jax.random.fold_in(k_fed, 2),
+                            n_chains)), blk, per)
+
+                    def keep(new, old):
+                        mm = strag.reshape((per,) + (1,) * (new.ndim - 1))
+                        return jnp.where(mm, old, new)
+
+                    th, mom = get_view(state)
+                    th = jax.tree.map(keep, th, pre_th)
+                    mom = (jax.tree.map(keep, mom, pre_mom) if hmc
+                           else None)
+                    state = set_view(state, th, mom)
+                    if collect:
+                        trace = jax.tree.map(
+                            lambda t, p: jnp.where(
+                                strag.reshape((per,) + (1,) * (t.ndim - 1)),
+                                p[:, None], t),
+                            trace, pre_th)
+                y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
+                     if collect else None)
+                return (key, state, sids, cst), y
+
+            if fed is None:
+                (key, state), traces = jax.lax.scan(
+                    round_body, (key, state), None, length=num_rounds)
+            else:
+                th0, _ = get_view(state)
+                flatten, unflatten, dim = make_flattener(th0)
+                if use_comp:
+                    compress = make_compressor(comp, dim)
+                    ref0 = flatten(th0)
+                    cst0 = (ref0, jnp.zeros_like(ref0))
+                else:
+                    cst0 = None
+                (key, state, _, _), traces = jax.lax.scan(
+                    fed_round_body,
+                    (key, state, jnp.zeros((per,), jnp.int32), cst0),
+                    jnp.arange(num_rounds))
             if layout is not None:
                 chains_out = ((state[2], layout.unpack(state[1])) if hmc
                               else state[1])
@@ -654,14 +813,15 @@ class MeshChainEngine:
     def _permute_sids(self, k_assign: jax.Array, n_chains: int):
         """Host-callable wrapper around ``_perm_sids_slice`` (the same
         helper the scanned round body uses) for one whole reassignment:
-        returns the (n_chains,) collision-free sids for this round."""
+        returns the (n_chains,) collision-free sids for this round
+        (block-cyclic when n_chains > S)."""
         S = self.cfg.num_shards
-        assert n_chains <= S, (n_chains, S)
         per = n_chains // self.mesh.shape["data"]
 
         def block(k):
             return _perm_sids_slice(
-                k[0], S, jax.lax.axis_index("data") * per, per)
+                k[0], S, jax.lax.axis_index("data") * per, per,
+                n_total=n_chains)
 
         return shard_map(
             block, mesh=self.mesh, in_specs=(P(),),
@@ -672,7 +832,8 @@ class MeshChainEngine:
     def run(self, key: jax.Array, theta0: PyTree, num_rounds: int, *,
             n_chains: int = 1, reassign: str = "categorical",
             collect_every: int = 1, refresh_every: Optional[int] = None,
-            collect: bool = True, stacked: bool = False):
+            collect: bool = True, stacked: bool = False,
+            federation=None):
         """Same contract (and same RNG stream) as the legacy
         ``FederatedSampler.run``: returns stacked samples with leading axes
         (n_chains, num_rounds * T_local / collect_every, ...), or the final
@@ -692,18 +853,32 @@ class MeshChainEngine:
         and pair it with zero momenta internally (the momenta are part of
         the mailed chain state); ``collect=False`` returns the
         (theta, momentum) pairs.
+
+        ``federation`` (a ``repro.fed.Federation`` spec, or None) applies
+        the scenario's communication schedule and round-boundary payload
+        compression inside the scanned round body. Partitioning is NOT
+        the engine's job — ``shard_data`` must already be split (the
+        ``repro.api`` facade applies ``Federation.partition``). An
+        engine-identity spec is bit-identical to ``federation=None``.
+
+        ``reassign='permutation'`` supports n_chains > num_shards via
+        BLOCK-CYCLIC client visiting: the round's permutation is tiled so
+        chain c sits at client perm[c % S] — every client hosts
+        floor/ceil(C/S) chains.
         """
         d_size = self.mesh.shape["data"]
         n_total = n_chains + (-n_chains) % d_size
         if self.cfg.method != "sgld" and reassign not in ("categorical",
                                                           "permutation"):
             raise ValueError(reassign)
-        if self.cfg.method != "sgld" and reassign == "permutation":
-            if n_total > self.cfg.num_shards:
-                raise ValueError(
-                    f"permutation reassignment needs n_chains (padded to "
-                    f"the data axis: {n_total}) <= num_shards "
-                    f"({self.cfg.num_shards}); use reassign='categorical'")
+        fed = (federation if federation is not None
+               and not federation.engine_identity else None)
+        if fed is not None and refresh_every and self.cfg.method == "fsgld":
+            raise NotImplementedError(
+                "adaptive refresh does not compose with a non-identity "
+                "communication schedule/compression yet: the carried "
+                "sids / error-feedback state would reset at every "
+                "refresh segment boundary")
         if self.dynamics == "sghmc":
             if refresh_every:
                 raise NotImplementedError(
@@ -760,7 +935,8 @@ class MeshChainEngine:
             execute = self._executor(
                 num_rounds=seg, n_chains=n_chains, n_total=n_total,
                 reassign=reassign, collect=collect,
-                collect_every=collect_every, layout=layout)
+                collect_every=collect_every, layout=layout,
+                federation=fed)
             chains, trace, key = execute(key, chains, self.shard_data,
                                          bank_rt)
             if collect:

@@ -172,8 +172,13 @@ class FederatedSampler:
                 sids = jax.random.categorical(
                     k_assign, jnp.log(probs)[None].repeat(n_chains, 0))
             elif reassign == "permutation":   # SPMD variant (DESIGN 4.1)
-                assert n_chains <= S
-                sids = jax.random.permutation(k_assign, S)[:n_chains]
+                perm = jax.random.permutation(k_assign, S)
+                if n_chains > S:
+                    # block-cyclic client visiting: chain c sits at
+                    # client perm[c % S] (matches the engine's tiled
+                    # slice bitwise)
+                    perm = jnp.tile(perm, -(-n_chains // S))
+                sids = perm[:n_chains]
             else:
                 raise ValueError(reassign)
             if (refresh_every and self.cfg.method == "fsgld" and r > 0

@@ -1,0 +1,31 @@
+"""Federation scenario subsystem: declarative non-IID partitioners,
+communication schedules, and compressed rounds.
+
+Three composable axes, all surfaced as one :class:`Federation` spec on
+the ``repro.api`` facade (``FSGLD(..., federation=...)`` /
+``FSGLD.sample(..., federation=...)``) and executed by the chain engine
+*inside* its jitted scan:
+
+  * :mod:`repro.fed.partition` — pooled data -> padded client shards
+    (iid / Dirichlet label skew / quantity skew / covariate shift);
+  * :mod:`repro.fed.schedule`  — delayed rounds, partial participation,
+    straggler drops;
+  * :mod:`repro.fed.compress`  — top-k / rand-k / stochastic
+    quantization of round-boundary payloads with error feedback.
+
+``repro.fed.registry`` names the paper's configurations (``iid``,
+``dirichlet-0.1``, ``delayed-5x``, ``partial-50%``, ``topk-1%``, ...)
+so benchmarks, examples, and CI enumerate scenarios by string.
+"""
+from repro.fed.compress import (Compression, make_compressor,
+                                make_flattener)
+from repro.fed.partition import PartitionSpec, partition
+from repro.fed.registry import SCENARIOS, get_scenario, scenario_names
+from repro.fed.schedule import CommSchedule
+from repro.fed.spec import Federation
+
+__all__ = [
+    "Federation", "PartitionSpec", "CommSchedule", "Compression",
+    "partition", "make_compressor", "make_flattener",
+    "SCENARIOS", "get_scenario", "scenario_names",
+]

@@ -1,0 +1,163 @@
+"""Declarative non-IID partitioners: pooled data -> padded client shards.
+
+The paper's scenarios start from HOW the data lands on clients. These
+splitters take POOLED data (a dict/pytree of (N, ...) arrays, e.g. the
+``data/synthetic.py`` generators before sharding) and produce the
+engine's shard format — stacked (S, max_n, ...) leaves padded to the
+longest client via ``core.engine.pad_shards`` (NaN pad rows, provably
+dead) plus the true per-client ``sizes``:
+
+  * 'iid'       — uniform random equal split (the control scenario).
+  * 'dirichlet' — Dirichlet(alpha) LABEL skew (Hsu et al.): each class's
+    examples are divided among clients by a per-class Dirichlet draw;
+    low alpha => each client is dominated by few classes.
+  * 'quantity'  — Dirichlet(alpha) QUANTITY skew: clients hold the same
+    distribution but very different amounts of data (ragged shards).
+  * 'covariate' — covariate shift: examples sorted by their principal
+    feature direction and split contiguously, so clients see disjoint
+    regions of input space (feature skew without labels).
+
+Partitioning is host-side, once, before sampling — the schedules and
+compression operators in this package are the in-scan pieces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """How pooled data is split onto clients."""
+    kind: str = "iid"
+    num_shards: int = 10
+    alpha: float = 0.5          # Dirichlet concentration (dirichlet/quantity)
+    label_key: str = "y"        # dirichlet: which field carries the labels
+    feature_key: str = "x"      # covariate: which field carries the inputs
+    min_size: int = 2           # every client keeps at least this many rows
+    seed: int = 0               # partition RNG (independent of sampling)
+
+    def __post_init__(self):
+        assert self.kind in ("iid", "dirichlet", "quantity", "covariate"), \
+            self.kind
+        assert self.num_shards >= 1 and self.min_size >= 1
+
+
+def _take(data, idx):
+    return jax.tree.map(lambda a: np.asarray(a)[idx], data)
+
+
+def _rebalance(assign: list, min_size: int) -> list:
+    """Move rows from the largest clients until every client holds at
+    least ``min_size`` (tiny Dirichlet draws can empty a client; an empty
+    shard would break the S-axis stacking and the N_s/(f_s m) unbiasing)."""
+    assign = [list(a) for a in assign]
+    while True:
+        small = min(range(len(assign)), key=lambda s: len(assign[s]))
+        if len(assign[small]) >= min_size:
+            return [np.asarray(a, np.int64) for a in assign]
+        big = max(range(len(assign)), key=lambda s: len(assign[s]))
+        assert len(assign[big]) > min_size, "not enough rows to rebalance"
+        assign[small].append(assign[big].pop())
+
+
+def _pooled_n(data) -> int:
+    return int(jax.tree.leaves(data)[0].shape[0])
+
+
+def iid_partition(key, data, spec: PartitionSpec):
+    """Uniform random equal split (drops the < S remainder)."""
+    N, S = _pooled_n(data), spec.num_shards
+    perm = np.asarray(jax.random.permutation(key, N))
+    per = N // S
+    assert per >= spec.min_size, (N, S)
+    return [perm[s * per:(s + 1) * per] for s in range(S)]
+
+
+def dirichlet_label_skew(key, data, spec: PartitionSpec):
+    """Per-class Dirichlet(alpha) proportions over clients; each class's
+    (shuffled) examples are split by those proportions."""
+    S = spec.num_shards
+    labels = np.asarray(jax.tree.leaves(
+        {spec.label_key: data[spec.label_key]})[0]).reshape(-1)
+    classes = np.unique(labels)
+    k_perm, k_dir = jax.random.split(key)
+    # Dirichlet via normalized Gamma (the token_shards idiom)
+    g = np.asarray(jax.random.gamma(
+        k_dir, spec.alpha, (len(classes), S))) + 1e-12
+    props = g / g.sum(1, keepdims=True)
+    assign = [[] for _ in range(S)]
+    for ci, c in enumerate(classes):
+        idx = np.flatnonzero(labels == c)
+        idx = idx[np.asarray(jax.random.permutation(
+            jax.random.fold_in(k_perm, ci), len(idx)))]
+        cuts = (np.cumsum(props[ci])[:-1] * len(idx)).astype(np.int64)
+        for s, part in enumerate(np.split(idx, cuts)):
+            assign[s].extend(part.tolist())
+    return _rebalance(assign, spec.min_size)
+
+
+def quantity_skew(key, data, spec: PartitionSpec):
+    """Same distribution everywhere, Dirichlet(alpha)-skewed AMOUNTS."""
+    N, S = _pooled_n(data), spec.num_shards
+    assert N >= S * spec.min_size, (N, S, spec.min_size)
+    k_perm, k_dir = jax.random.split(key)
+    g = np.asarray(jax.random.gamma(k_dir, spec.alpha, (S,))) + 1e-12
+    w = g / g.sum()
+    sizes = np.maximum((w * N).astype(np.int64), spec.min_size)
+    # trim the largest STILL-above-min clients until the sizes fit back
+    # into N — the min_size floor holds for every client (feasible by
+    # the assert above)
+    while sizes.sum() > N:
+        big = int(np.argmax(np.where(sizes > spec.min_size, sizes, -1)))
+        assert sizes[big] > spec.min_size
+        sizes[big] -= 1
+    perm = np.asarray(jax.random.permutation(k_perm, N))
+    cuts = np.cumsum(sizes)[:-1]
+    return list(np.split(perm[:int(sizes.sum())], cuts))
+
+
+def covariate_shift(key, data, spec: PartitionSpec):
+    """Sort by the principal direction of the features and split
+    contiguously: client s sees the s-th slice of input space."""
+    N, S = _pooled_n(data), spec.num_shards
+    x = np.asarray(data[spec.feature_key], np.float64).reshape(N, -1)
+    xc = x - x.mean(0)
+    # one power-iteration pass is plenty for a split direction
+    v = np.asarray(jax.random.normal(key, (xc.shape[1],), jnp.float32),
+                   np.float64)
+    for _ in range(8):
+        v = xc.T @ (xc @ v)
+        v /= np.linalg.norm(v) + 1e-30
+    order = np.argsort(xc @ v, kind="stable")
+    per = N // S
+    assert per >= spec.min_size, (N, S)
+    return [order[s * per:(s + 1) * per] for s in range(S)]
+
+
+_KINDS = {
+    "iid": iid_partition,
+    "dirichlet": dirichlet_label_skew,
+    "quantity": quantity_skew,
+    "covariate": covariate_shift,
+}
+
+
+def partition(key: jax.Array, data, spec: PartitionSpec):
+    """Pooled pytree -> (padded shard_data, sizes) in the engine format.
+
+    ``key`` may be None: the spec's own ``seed`` then drives the split
+    (partition randomness is deliberately independent of the sampling
+    stream, so changing the scenario never perturbs the chains' RNG).
+    """
+    from repro.core.engine import pad_shards  # lazy: engine imports us not
+    if key is None:
+        key = jax.random.PRNGKey(spec.seed)
+    idx_per_client = _KINDS[spec.kind](key, data, spec)
+    shards = [_take(data, np.sort(np.asarray(idx, np.int64)))
+              for idx in idx_per_client]
+    stacked, sizes = pad_shards(shards)
+    return stacked, sizes

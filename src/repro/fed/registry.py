@@ -1,0 +1,57 @@
+"""Named federation scenarios: the paper's configurations as a registry.
+
+Benchmarks, examples, and the CI ``scenario-matrix`` lane enumerate
+scenarios BY NAME so "the delayed-communication regime where DSGLD
+diverges" is one string, not a hand-rolled loop. ``get_scenario``
+accepts a name or passes a :class:`Federation` through unchanged, so
+every facade entry point takes either.
+"""
+from __future__ import annotations
+
+from repro.fed.compress import Compression
+from repro.fed.partition import PartitionSpec
+from repro.fed.schedule import CommSchedule
+from repro.fed.spec import Federation
+
+SCENARIOS = {
+    # the control: no partition override, every-round exact communication
+    "identity": Federation(),
+    # partition axis (host-side; data passed to the facade must be POOLED)
+    "iid": Federation(partition=PartitionSpec(kind="iid")),
+    "dirichlet-0.1": Federation(
+        partition=PartitionSpec(kind="dirichlet", alpha=0.1)),
+    "dirichlet-100": Federation(
+        partition=PartitionSpec(kind="dirichlet", alpha=100.0)),
+    "quantity-0.5": Federation(
+        partition=PartitionSpec(kind="quantity", alpha=0.5)),
+    "covariate": Federation(partition=PartitionSpec(kind="covariate")),
+    # communication-schedule axis (in-scan)
+    "delayed-5x": Federation(schedule=CommSchedule(delay=5)),
+    "delayed-10x": Federation(schedule=CommSchedule(delay=10)),
+    "delayed-100x": Federation(schedule=CommSchedule(delay=100)),
+    "partial-50%": Federation(schedule=CommSchedule(participation=0.5)),
+    "straggler-10%": Federation(
+        schedule=CommSchedule(straggler_prob=0.1)),
+    # compressed-rounds axis (in-scan, error feedback on)
+    "topk-1%": Federation(compression=Compression(kind="topk", frac=0.01)),
+    "randk-10%": Federation(
+        compression=Compression(kind="randk", frac=0.10)),
+    "qsgd-8bit": Federation(compression=Compression(kind="qsgd", bits=8)),
+}
+
+
+def scenario_names() -> tuple:
+    """All registry names, stable order (the CI matrix iterates this)."""
+    return tuple(SCENARIOS)
+
+
+def get_scenario(name_or_spec) -> Federation:
+    """Resolve a registry name to its spec; pass Federation through."""
+    if isinstance(name_or_spec, Federation):
+        return name_or_spec
+    try:
+        return SCENARIOS[name_or_spec]
+    except KeyError:
+        raise KeyError(
+            f"unknown federation scenario {name_or_spec!r}; known: "
+            f"{', '.join(scenario_names())}") from None

@@ -1,0 +1,74 @@
+"""Communication schedules: WHEN chains exchange state with the server.
+
+The paper's delayed-communication experiments (Figs. 2-3) vary how many
+local updates a chain takes between reassignments; FA-LD and the partial-
+participation federated-Langevin literature add client sampling on top.
+:class:`CommSchedule` makes that axis declarative, and the chain engine
+lowers it to per-round boolean operands *inside* the jitted
+``lax.scan`` — no host round-trips, no retrace per scenario:
+
+  * ``delay``         — chains communicate (are reassigned, and exchange
+    compressed payloads) only every ``delay``-th round; in between they
+    stay resident on their client, so ``delay=k`` with ``local_steps=T``
+    behaves like ``k*T`` local updates per communication (the Fig. 2-3
+    x-axis, expressed as a schedule instead of a rewired loop).
+  * ``participation`` — at each communication round every chain
+    participates independently with this probability (partial
+    participation / client sampling); non-participating chains keep
+    their client and skip the payload exchange. Round 0 always has full
+    participation so every chain gets an initial assignment.
+  * ``straggler_prob`` — per round, each chain's update is DROPPED with
+    this probability (the client failed to return in time): its state
+    does not advance and its trace repeats the pre-round position.
+
+The identity schedule (``delay=1, participation=1, straggler_prob=0``)
+lowers to *nothing*: the engine elides every mask and stays bit-identical
+to the oracle round body.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """Declarative communication cadence for the chain engine."""
+    delay: int = 1
+    participation: float = 1.0
+    straggler_prob: float = 0.0
+
+    def __post_init__(self):
+        assert self.delay >= 1, self.delay
+        assert 0.0 < self.participation <= 1.0, self.participation
+        assert 0.0 <= self.straggler_prob < 1.0, self.straggler_prob
+
+    @property
+    def identity(self) -> bool:
+        """True iff lowering this schedule adds no ops to the round body."""
+        return (self.delay == 1 and self.participation >= 1.0
+                and self.straggler_prob <= 0.0)
+
+
+def comm_mask(sched: CommSchedule, r: jax.Array) -> jax.Array:
+    """Scalar bool: does communication happen at (traced) round ``r``?
+    Round 0 always communicates (r % delay == 0 holds at r=0)."""
+    return (r % sched.delay) == 0
+
+
+def participation_mask(sched: CommSchedule, key: jax.Array, r: jax.Array,
+                       n_chains: int) -> jax.Array:
+    """(n_chains,) bool participation draws for one round; forced all-True
+    at round 0 so every chain receives an initial assignment."""
+    if sched.participation >= 1.0:
+        return jnp.ones((n_chains,), bool)
+    draw = jax.random.bernoulli(key, sched.participation, (n_chains,))
+    return draw | (r == 0)
+
+
+def straggler_mask(sched: CommSchedule, key: jax.Array,
+                   n_chains: int) -> jax.Array:
+    """(n_chains,) bool — True where the chain's round update is dropped."""
+    return jax.random.bernoulli(key, sched.straggler_prob, (n_chains,))

@@ -1,0 +1,38 @@
+"""The composed federation scenario spec.
+
+One :class:`Federation` names a complete scenario along the three axes
+this package provides: WHERE the data lives (:class:`PartitionSpec` —
+applied host-side, once), WHEN chains communicate
+(:class:`CommSchedule`) and WHAT crosses the wire
+(:class:`Compression`) — the latter two lowered by the chain engine to
+operands inside its jitted ``lax.scan``. The identity spec lowers to
+nothing and is bit-identical to the oracle round body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.fed.compress import Compression
+from repro.fed.partition import PartitionSpec
+from repro.fed.schedule import CommSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class Federation:
+    """A complete federation scenario (hashable: engine executors cache
+    per spec)."""
+    partition: Optional[PartitionSpec] = None
+    schedule: CommSchedule = CommSchedule()
+    compression: Compression = Compression()
+
+    @property
+    def engine_identity(self) -> bool:
+        """True iff the ENGINE-side pieces (schedule + compression) add
+        no ops to the round body — the partition axis is host-side and
+        never touches the scan."""
+        return self.schedule.identity and self.compression.identity
+
+    @property
+    def identity(self) -> bool:
+        return self.partition is None and self.engine_identity

@@ -75,6 +75,15 @@ def main(argv=None):
                          "packed included)")
     ap.add_argument("--friction", type=float, default=0.1,
                     help="SGHMC friction alpha_f (with --kernel sghmc)")
+    ap.add_argument("--federation", default=None,
+                    help="named federation scenario from the "
+                         "repro.fed registry (e.g. 'delayed-5x', "
+                         "'partial-50%%', 'topk-1%%'): communication "
+                         "schedule + payload compression lowered into "
+                         "the engine's scan. Partition scenarios are for "
+                         "pooled-data drivers; token shards here are "
+                         "already per-client, so schedule/compression "
+                         "scenarios only")
     ap.add_argument("--local-updates", type=int, default=4)
     ap.add_argument("--num-shards", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
@@ -111,11 +120,16 @@ def main(argv=None):
         executor = "per_leaf"
     else:
         executor = "packed"
-    # the engine pads chains up to the data axis; permutation mode needs
-    # the PADDED count to fit in [0, S)
-    padded_chains = args.chains + (-args.chains) % mesh.shape["data"]
-    reassign = ("permutation" if padded_chains <= args.num_shards
-                else "categorical")
+    federation = None
+    if args.federation:
+        federation = api.get_scenario(args.federation)
+        if federation.partition is not None:
+            raise SystemExit(
+                f"--federation {args.federation}: partition scenarios "
+                "need pooled data; this driver builds per-client token "
+                "shards — pick a schedule/compression scenario")
+    # block-cyclic visiting supports any chain count in permutation mode
+    reassign = "permutation"
     fsgld = api.FSGLD(
         api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
                       prior_precision=1.0),
@@ -130,7 +144,8 @@ def main(argv=None):
             n_chains=args.chains, reassign=reassign),
         execution=api.Execution(
             mesh=mesh, executor=executor, collect=False,
-            dtype=jnp.dtype(cfg.surrogate_dtype)))
+            dtype=jnp.dtype(cfg.surrogate_dtype)),
+        federation=federation)
 
     # ---- phase 1: surrogates (once, before sampling) ----
     if args.method == "fsgld":
@@ -157,7 +172,8 @@ def main(argv=None):
     print(f"{args.chains} chain(s) x {args.rounds} rounds "
           f"({steps} chain-steps) in {dt:.1f}s "
           f"= {steps / dt:.1f} steps/s "
-          f"[reassign={reassign} executor={executor}]")
+          f"[reassign={reassign} executor={executor}"
+          f"{' federation=' + args.federation if args.federation else ''}]")
     if args.ckpt:
         checkpoint.save(args.ckpt,
                         jax.tree.map(lambda t: t[0], finals),

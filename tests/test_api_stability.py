@@ -32,7 +32,8 @@ def _params(obj):
 # The snapshot. Field ORDER is part of the contract (positional calls);
 # (name, has_default) pairs catch silently-added required arguments.
 EXPECTED_ALL = ("Posterior", "SurrogateSpec", "Schedule", "Execution",
-                "FSGLD", "fit_bank_local_sgld")
+                "Federation", "FSGLD", "fit_bank_local_sgld",
+                "get_scenario")
 
 EXPECTED_SIGNATURES = {
     "Posterior": (("log_lik", False), ("prior_precision", True),
@@ -44,14 +45,18 @@ EXPECTED_SIGNATURES = {
                  ("n_chains", True), ("reassign", True), ("thin", True)),
     "Execution": (("mesh", True), ("executor", True), ("dtype", True),
                   ("collect", True)),
+    "Federation": (("partition", True), ("schedule", True),
+                   ("compression", True)),
     "FSGLD": (("posterior", False), ("data", False), ("minibatch", False),
               ("step_size", True), ("method", True), ("kernel", True),
               ("alpha", True), ("friction", True), ("surrogate", True),
               ("schedule", True), ("execution", True),
-              ("shard_probs", True), ("sizes", True)),
+              ("shard_probs", True), ("sizes", True),
+              ("federation", True)),
     "FSGLD.sample": (("key", False), ("theta0", False), ("rounds", True),
-                     ("n_chains", True)),
+                     ("n_chains", True), ("federation", True)),
     "FSGLD.fit": (("key", False), ("theta0", False)),
+    "get_scenario": (("name_or_spec", False),),
     "fit_bank_local_sgld": (("log_lik_fn", False), ("shard_data", False),
                             ("theta0", False), ("key", False),
                             ("fit_steps", False), ("minibatch", False),

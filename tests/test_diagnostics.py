@@ -1,0 +1,116 @@
+"""Dedicated diagnostics tests (PR 5 satellite): golden AR(1) values,
+identical-chains R-hat property, and the short-trace / odd-N guards.
+
+The AR(1) process x_t = rho x_{t-1} + sqrt(1 - rho^2) eps_t has unit
+variance and integrated autocorrelation time tau = (1+rho)/(1-rho), so
+ESS over C chains of N samples should land near C*N*(1-rho)/(1+rho) —
+an analytic golden value, not a snapshot of the implementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.diagnostics import _split_chains, ess, rhat, summarize
+
+
+def _ar1(key, C, N, rho, d=1):
+    eps = jax.random.normal(key, (N, C, d))
+
+    def step(x, e):
+        x = rho * x + jnp.sqrt(1.0 - rho ** 2) * e
+        return x, x
+
+    _, xs = jax.lax.scan(step, jnp.zeros((C, d)), eps)
+    return xs.transpose(1, 0, 2)  # (C, N, d)
+
+
+# ---------------------------------------------------------------------------
+# golden AR(1) values
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rho,tol", [(0.0, 0.15), (0.5, 0.2), (0.9, 0.3)])
+def test_ess_matches_ar1_analytic_tau(rho, tol):
+    C, N = 4, 4000
+    chains = _ar1(jax.random.PRNGKey(0), C, N, rho)
+    golden = C * N * (1.0 - rho) / (1.0 + rho)
+    got = float(ess(chains)[0])
+    assert abs(got - golden) / golden < tol, (got, golden)
+
+
+def test_rhat_ar1_well_mixed_near_one():
+    chains = _ar1(jax.random.PRNGKey(1), 4, 2000, 0.5)
+    assert float(jnp.abs(rhat(chains) - 1.0).max()) < 0.02
+
+
+def test_rhat_detects_mean_shifted_ar1():
+    chains = _ar1(jax.random.PRNGKey(2), 4, 500, 0.5) \
+        + jnp.arange(4.0)[:, None, None]
+    assert float(rhat(chains).min()) > 1.5
+
+
+# ---------------------------------------------------------------------------
+# identical chains -> R-hat ~ 1 (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_chains=st.integers(2, 8),
+       n=st.integers(500, 3000))
+def test_identical_chains_rhat_is_one(seed, n_chains, n):
+    """C identical copies of one iid chain: between-CHAIN variance is
+    exactly zero, so only the split's between-HALF mean wobble (the
+    O(1/sqrt(N)) term split-R-hat exists to detect) remains — R-hat ~ 1
+    for any chain count and any seed."""
+    one = jax.random.normal(jax.random.PRNGKey(seed), (1, n, 2))
+    chains = jnp.tile(one, (n_chains, 1, 1))
+    r = rhat(chains)
+    assert float(jnp.abs(r - 1.0).max()) < 0.05
+    # duplicating identical chains never signals divergence
+    assert float(r.max()) < 1.1
+
+
+# ---------------------------------------------------------------------------
+# short traces and odd N (the PR 5 guards)
+# ---------------------------------------------------------------------------
+
+def test_split_chains_odd_n_drops_first_sample():
+    x = jnp.arange(2 * 7, dtype=jnp.float32).reshape(2, 7)[..., None]
+    split = _split_chains(x)
+    assert split.shape == (4, 3, 1)
+    # documented truncation: the FIRST (burn-in-side) sample goes, both
+    # halves stay contiguous
+    np.testing.assert_array_equal(np.asarray(split[0, :, 0]), [1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(split[2, :, 0]), [4, 5, 6])
+
+
+def test_rhat_odd_n_equals_truncated_even_n():
+    chains = jax.random.normal(jax.random.PRNGKey(3), (3, 101, 2))
+    np.testing.assert_array_equal(np.asarray(rhat(chains)),
+                                  np.asarray(rhat(chains[:, 1:])))
+
+
+def test_rhat_refuses_too_short_traces():
+    with pytest.raises(ValueError, match=">= 4 samples"):
+        rhat(jnp.zeros((2, 3, 1)))
+
+
+def test_ess_clamps_max_lag_for_short_traces():
+    chains = _ar1(jax.random.PRNGKey(4), 2, 20, 0.3)
+    # the default max_lag=200 must clamp to N//2 - 1 = 9, not N - 1
+    np.testing.assert_array_equal(np.asarray(ess(chains)),
+                                  np.asarray(ess(chains, max_lag=9)))
+    # finite and bounded on traces down to the clamp floor (N <= 4 uses
+    # lag 1 only)
+    for n in (4, 5, 6):
+        tiny = ess(chains[:, :n])
+        assert bool(jnp.all(jnp.isfinite(tiny)))
+        assert float(tiny.max()) <= 2 * n + 1e-6
+
+
+def test_summarize_headline_keys():
+    chains = _ar1(jax.random.PRNGKey(5), 2, 200, 0.2, d=3)
+    s = summarize(chains)
+    assert set(s) == {"max_rhat", "min_ess", "mean_ess"}
+    assert s["min_ess"] <= s["mean_ess"]

@@ -1,0 +1,334 @@
+"""Unit tests for the federation subsystem (repro.fed, PR 5).
+
+Partitioners: split correctness + skew direction + pad-row deadness.
+Schedules: mask lowering semantics + the delayed/participation
+equivalences on the real engine. Compression: operator contracts
+(top-k support, rand-k/qsgd unbiasedness, error-feedback identity,
+flattener round-trip) + the frac=1 == exact-exchange engine identity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import analytic_gaussian_likelihood_surrogate, make_bank
+from repro.fed import (CommSchedule, Compression, Federation,
+                       PartitionSpec, get_scenario, make_compressor,
+                       make_flattener, partition, scenario_names)
+from repro.fed import schedule as fsched
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem(key, S=5, n=40, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _facade(data, bank, **kw):
+    kw.setdefault("schedule", api.Schedule(rounds=4, local_steps=3,
+                                           n_chains=4))
+    return api.FSGLD(api.Posterior(log_lik, prior_precision=1.0), data,
+                     minibatch=8, step_size=1e-4,
+                     surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+                     **kw)
+
+
+def _pooled(key, N=400, d=4, classes=4):
+    """Pooled labeled data: Gaussian class clusters."""
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (N,), 0, classes)
+    x = jax.random.normal(k2, (N, d)) + 2.0 * y[:, None]
+    return {"x": x, "y": y}
+
+
+# ---------------------------------------------------------------------------
+# partitioners
+# ---------------------------------------------------------------------------
+
+def _sets(shard_data, sizes, field="x"):
+    got = []
+    for s, n_s in enumerate(sizes):
+        got.append(np.asarray(shard_data[field][s, :n_s]))
+    return got
+
+
+@pytest.mark.parametrize("kind", ["iid", "dirichlet", "quantity",
+                                  "covariate"])
+def test_partition_covers_without_duplicates(kind):
+    data = _pooled(jax.random.PRNGKey(0))
+    spec = PartitionSpec(kind=kind, num_shards=4, alpha=0.3)
+    shards, sizes = partition(jax.random.PRNGKey(1), data, spec)
+    assert len(sizes) == 4 and min(sizes) >= spec.min_size
+    live = np.concatenate([c[:, 0] for c in _sets(shards, sizes)])
+    pool = np.asarray(data["x"][:, 0])
+    # every live row is a real pooled row, each used at most once
+    assert len(np.unique(live)) == len(live)
+    assert np.isin(live, pool).all()
+    assert len(live) <= len(pool)
+    # pad rows are NaN (provably dead under the engine's masked sampling)
+    for s, n_s in enumerate(sizes):
+        pad = np.asarray(shards["x"][s, n_s:])
+        assert np.isnan(pad).all() if pad.size else True
+
+
+def test_dirichlet_low_alpha_skews_labels():
+    data = _pooled(jax.random.PRNGKey(2), N=800)
+    sk01, sizes01 = partition(jax.random.PRNGKey(3), data,
+                              PartitionSpec(kind="dirichlet", num_shards=4,
+                                            alpha=0.05, min_size=2))
+    sk100, sizes100 = partition(jax.random.PRNGKey(3), data,
+                                PartitionSpec(kind="dirichlet",
+                                              num_shards=4, alpha=100.0))
+
+    def max_frac(shards, sizes):
+        fr = []
+        for s, n_s in enumerate(sizes):
+            lab = np.asarray(shards["y"][s, :n_s])
+            _, cnt = np.unique(lab, return_counts=True)
+            fr.append(cnt.max() / n_s)
+        return np.mean(fr)
+
+    # low alpha: each client dominated by few classes; high alpha ~ IID
+    assert max_frac(sk01, sizes01) > max_frac(sk100, sizes100) + 0.15
+
+
+def test_quantity_skew_is_ragged_and_iid_is_uniform():
+    data = _pooled(jax.random.PRNGKey(4))
+    _, sizes_q = partition(jax.random.PRNGKey(5), data,
+                           PartitionSpec(kind="quantity", num_shards=4,
+                                         alpha=0.3))
+    assert max(sizes_q) > 2 * min(sizes_q), sizes_q
+    _, sizes_i = partition(jax.random.PRNGKey(5), data,
+                           PartitionSpec(kind="iid", num_shards=4))
+    assert len(set(sizes_i)) == 1
+
+
+def test_covariate_shift_separates_feature_space():
+    data = _pooled(jax.random.PRNGKey(6), N=400)
+    shards, sizes = partition(jax.random.PRNGKey(7), data,
+                              PartitionSpec(kind="covariate",
+                                            num_shards=4))
+    # client means along the principal direction are strictly ordered
+    means = [float(np.asarray(shards["x"][s, :n_s]).mean())
+             for s, n_s in enumerate(sizes)]
+    assert sorted(means) == means or sorted(means, reverse=True) == means
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def test_schedule_mask_lowering():
+    sched = CommSchedule(delay=3, participation=0.5, straggler_prob=0.2)
+    comms = [bool(fsched.comm_mask(sched, jnp.int32(r)))
+             for r in range(7)]
+    assert comms == [True, False, False, True, False, False, True]
+    # round 0 forces full participation; later rounds are Bernoulli(p)
+    m0 = fsched.participation_mask(sched, jax.random.PRNGKey(0),
+                                   jnp.int32(0), 64)
+    assert bool(m0.all())
+    m5 = fsched.participation_mask(sched, jax.random.PRNGKey(0),
+                                   jnp.int32(5), 2048)
+    assert 0.4 < float(m5.mean()) < 0.6
+    assert CommSchedule().identity and not sched.identity
+
+
+def test_participation_zero_equals_infinite_delay():
+    """participation -> only the forced round-0 exchange happens, which
+    is exactly what delay > num_rounds does — both runs share the fed
+    RNG stream, so the traces are bitwise equal."""
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = _facade(data, bank)
+    a = f.sample(jax.random.PRNGKey(9), jnp.zeros(3),
+                 federation=Federation(
+                     schedule=CommSchedule(participation=1e-9)))
+    b = f.sample(jax.random.PRNGKey(9), jnp.zeros(3),
+                 federation=Federation(schedule=CommSchedule(delay=100)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_freezes_state_and_trace():
+    """straggler_prob ~ 1-eps: no update ever lands — every chain stays
+    at theta0 (state AND trace)."""
+    data, bank = _problem(jax.random.PRNGKey(1))
+    f = _facade(data, bank)
+    tr = f.sample(jax.random.PRNGKey(3), jnp.ones(3),
+                  federation=Federation(
+                      schedule=CommSchedule(straggler_prob=0.999999)))
+    np.testing.assert_array_equal(np.asarray(tr),
+                                  np.ones_like(np.asarray(tr)))
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_topk_keeps_largest_and_frac1_is_identity():
+    spec = Compression(kind="topk", frac=0.25)
+    fn = make_compressor(spec, 8)
+    d = jnp.asarray([[1.0, -9.0, 2.0, 0.5, -3.0, 0.1, 0.2, 0.3]])
+    out = np.asarray(fn(d, jax.random.PRNGKey(0)))[0]
+    assert set(np.flatnonzero(out)) == {1, 4}
+    np.testing.assert_array_equal(out[[1, 4]], [-9.0, -3.0])
+    ident = make_compressor(Compression(kind="topk", frac=1.0), 8)
+    np.testing.assert_array_equal(np.asarray(ident(d, None)),
+                                  np.asarray(d))
+
+
+@pytest.mark.parametrize("kind", ["randk", "qsgd"])
+def test_stochastic_compressors_are_unbiased(kind):
+    spec = Compression(kind=kind, frac=0.25, bits=4)
+    fn = make_compressor(spec, 16)
+    d = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    outs = jax.vmap(lambda k: fn(d, k))(
+        jax.random.split(jax.random.PRNGKey(2), 4000))
+    err = float(jnp.abs(outs.mean(0) - d).max())
+    assert err < 0.1, err
+
+
+def test_qsgd_quantizes_to_levels():
+    spec = Compression(kind="qsgd", bits=2)   # 3 levels of |max|
+    fn = make_compressor(spec, 8)
+    d = jax.random.normal(jax.random.PRNGKey(3), (1, 8))
+    out = np.asarray(fn(d, jax.random.PRNGKey(4)))
+    scale = float(np.abs(np.asarray(d)).max())
+    lvls = np.abs(out) / scale * 3
+    np.testing.assert_allclose(lvls, np.round(lvls), atol=1e-5)
+
+
+def test_flattener_roundtrip_mixed_dtypes():
+    tree = {"a": jnp.ones((3, 2, 2), jnp.bfloat16),
+            "b": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    flatten, unflatten, dim = make_flattener(tree)
+    assert dim == 8
+    flat = flatten(tree)
+    assert flat.shape == (3, 8) and flat.dtype == jnp.float32
+    back = unflatten(flat)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k], jnp.float32),
+                                      np.asarray(tree[k], jnp.float32))
+
+
+def test_bytes_per_round_orders_compressors():
+    P = 10_000
+    exact = Compression().bytes_per_round(P)
+    topk = Compression(kind="topk", frac=0.01).bytes_per_round(P)
+    qsgd = Compression(kind="qsgd", bits=8).bytes_per_round(P)
+    assert topk < qsgd < exact
+
+
+def test_topk_frac1_matches_uncompressed_exchange_on_engine():
+    """With frac=1 the payload is exact, so a delayed schedule with and
+    without the compressor must produce bitwise-identical traces (the
+    error-feedback state stays zero, the server view tracks theta)."""
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = _facade(data, bank)
+    sched = CommSchedule(delay=2)
+    a = f.sample(jax.random.PRNGKey(9), jnp.zeros(3),
+                 federation=Federation(schedule=sched))
+    b = f.sample(jax.random.PRNGKey(9), jnp.zeros(3),
+                 federation=Federation(
+                     schedule=sched,
+                     compression=Compression(kind="topk", frac=1.0)))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compression_leaves_non_exchanging_chains_untouched_x64():
+    """Non-exchanging chains must never round-trip through the fp32
+    compression space: with float64 state, an active compressor, and a
+    schedule under which no chain ever exchanges a non-zero payload
+    (participation ~ 0 past the forced round-0 exchange of a zero
+    delta), the trace is BITWISE the no-compression run — state writes
+    happen only for chains that actually exchanged."""
+    import os
+    import subprocess
+    import sys
+    script = r"""
+import warnings
+warnings.simplefilter("ignore")
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np
+from repro import api
+from repro.fed import CommSchedule, Compression, Federation
+from repro.core import make_bank, analytic_gaussian_likelihood_surrogate
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (4, 24, 3), jnp.float64) \
+    + jnp.arange(4.0)[:, None, None]
+mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+bank = make_bank(mu_s, prec_s, "diag")
+f = api.FSGLD(api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+              minibatch=6, step_size=1e-4,
+              surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+              schedule=api.Schedule(rounds=4, local_steps=3, n_chains=2))
+sched = CommSchedule(delay=3, participation=1e-12)
+a = f.sample(jax.random.PRNGKey(5), jnp.zeros(3, jnp.float64),
+             federation=Federation(schedule=sched))
+b = f.sample(jax.random.PRNGKey(5), jnp.zeros(3, jnp.float64),
+             federation=Federation(
+                 schedule=sched,
+                 compression=Compression(kind="qsgd", bits=8)))
+assert a.dtype == jnp.float64, a.dtype
+np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("X64_UNTOUCHED_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "X64_UNTOUCHED_OK" in r.stdout, (r.stdout, r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# registry + facade plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_names_resolve_and_unknown_raises():
+    for name in scenario_names():
+        assert isinstance(get_scenario(name), Federation)
+    spec = Federation()
+    assert get_scenario(spec) is spec
+    with pytest.raises(KeyError, match="unknown federation scenario"):
+        get_scenario("no-such-scenario")
+    # the ISSUE's named configurations all exist
+    for name in ("iid", "dirichlet-0.1", "delayed-5x", "partial-50%",
+                 "topk-1%"):
+        assert name in scenario_names(), name
+
+
+def test_sample_time_repartition_refused():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = _facade(data, bank)
+    with pytest.raises(ValueError, match="cannot re-partition"):
+        f.sample(jax.random.PRNGKey(0), jnp.zeros(3), federation="iid")
+
+
+def test_partition_spec_num_shards_drives_cfg():
+    data = _pooled(jax.random.PRNGKey(8))
+    sc = dataclasses.replace(
+        get_scenario("dirichlet-0.1"),
+        partition=PartitionSpec(kind="dirichlet", alpha=0.1,
+                                num_shards=4))
+    f = api.FSGLD(api.Posterior(log_lik), data, minibatch=6,
+                  step_size=1e-4, method="dsgld",
+                  schedule=api.Schedule(rounds=2, local_steps=2,
+                                        n_chains=2),
+                  federation=sc)
+    assert f.cfg.num_shards == 4
+    tr = f.sample(jax.random.PRNGKey(1), jnp.zeros(4))
+    assert bool(jnp.all(jnp.isfinite(tr)))

@@ -1,0 +1,274 @@
+"""CI ``scenario-matrix`` lane: every registry scenario x executor.
+
+Contracts (the PR 5 acceptance criteria):
+
+  * the IDENTITY scenario is BIT-IDENTICAL to the ``run_vmap`` oracle on
+    every executor (vmap / per_leaf / packed) — the federation plumbing
+    adds nothing to the math when the scenario is trivial;
+  * every registry scenario produces finite traces on the vmap AND
+    packed executors (engine scenarios on standard shards; partition
+    scenarios on pooled labeled data);
+  * schedules and compression are applied IN-SCAN: the executor jaxpr
+    for a scheduled + compressed + partial scenario contains exactly ONE
+    rounds-scan (no per-round dispatch), the packed path still issues
+    exactly one ``pallas_call``, and no ``pad`` primitive sneaks into
+    any scan body;
+  * the README "## Federation scenarios" snippet runs verbatim.
+"""
+import dataclasses
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, MeshChainEngine, make_bank,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.fed import (CommSchedule, Compression, Federation,
+                       get_scenario, scenario_names)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EXECUTORS = ("vmap", "packed")
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem(key, S=5, n=40, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _pooled(key, N=240, d=3, classes=4):
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (N,), 0, classes)
+    x = jax.random.normal(k2, (N, d)) + 1.5 * y[:, None]
+    return {"x": x, "y": y}
+
+
+# ---------------------------------------------------------------------------
+# identity scenario == run_vmap oracle, bitwise, on every executor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["vmap", "per_leaf", "packed"])
+def test_identity_scenario_bitwise_vs_oracle(executor):
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=4, local_steps=5, n_chains=4),
+        execution=api.Execution(executor=executor),
+        federation="identity")
+    got = f.sample(jax.random.PRNGKey(7), jnp.zeros(3))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=5, prior_precision=1.0)
+    ref = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank,
+                           use_kernel=(executor != "vmap")).run_vmap(
+        jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
+    assert got.shape == ref.shape == (4, 20, 3)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# the matrix: every registry scenario x {vmap, packed} -> finite traces
+# ---------------------------------------------------------------------------
+
+def _run_scenario(name, executor):
+    sc = get_scenario(name)
+    if sc.partition is not None:
+        # pooled labeled data; shrink the client count to smoke scale
+        sc = dataclasses.replace(
+            sc, partition=dataclasses.replace(sc.partition, num_shards=4))
+        data = _pooled(jax.random.PRNGKey(0))
+        f = api.FSGLD(
+            api.Posterior(log_lik), data, minibatch=6, step_size=1e-4,
+            method="dsgld",
+            schedule=api.Schedule(rounds=2, local_steps=3, n_chains=2),
+            execution=api.Execution(executor=executor), federation=sc)
+        return f.sample(jax.random.PRNGKey(1), jnp.zeros(3))
+    data, bank = _problem(jax.random.PRNGKey(0))
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=3, local_steps=4, n_chains=4),
+        execution=api.Execution(executor=executor))
+    return f.sample(jax.random.PRNGKey(7), jnp.zeros(3), federation=sc)
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+@pytest.mark.parametrize("name", scenario_names())
+def test_scenario_matrix_finite(name, executor):
+    tr = _run_scenario(name, executor)
+    assert all(bool(jnp.all(jnp.isfinite(t)))
+               for t in jax.tree.leaves(tr)), (name, executor)
+
+
+# ---------------------------------------------------------------------------
+# in-scan lowering: one scan, one pallas_call, no pad, no per-round
+# dispatch (jaxpr-asserted — the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _all_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(v):
+    if hasattr(v, "jaxpr"):           # ClosedJaxpr
+        return [v.jaxpr]
+    if hasattr(v, "eqns"):            # raw Jaxpr
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def test_scheduled_compressed_rounds_lower_into_one_scan():
+    """Delayed + partial + straggler + top-k compression, packed
+    executor: the WHOLE R-round program is ONE rounds-scan (length R —
+    schedules never unroll or dispatch per round), still exactly one
+    pallas_call, and no pad primitive in any scan body."""
+    data, bank = _problem(jax.random.PRNGKey(2))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=4, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=6, bank=bank,
+                          use_kernel=True)
+    fed = Federation(
+        schedule=CommSchedule(delay=3, participation=0.5,
+                              straggler_prob=0.1),
+        compression=Compression(kind="topk", frac=0.1))
+    num_rounds = 6
+    layout = eng._layout_for(jnp.zeros(3))
+    execute = eng._executor(num_rounds=num_rounds, n_chains=4,
+                            reassign="categorical", collect=True,
+                            collect_every=2, layout=layout, federation=fed)
+    chains = jnp.zeros((4, 3))
+    jaxpr = jax.make_jaxpr(execute)(
+        jax.random.PRNGKey(0), chains, data, bank)
+
+    eqns = list(_all_eqns(jaxpr.jaxpr))
+    pallas = [e for e in eqns if "pallas" in e.primitive.name]
+    assert len(pallas) == 1, [e.primitive.name for e in pallas]
+    round_scans = [e for e in eqns if e.primitive.name == "scan"
+                   and e.params["length"] == num_rounds]
+    assert len(round_scans) == 1, "rounds loop not a single scan"
+    for s in (e for e in eqns if e.primitive.name == "scan"):
+        body = [e.primitive.name
+                for e in _all_eqns(s.params["jaxpr"].jaxpr)]
+        assert "pad" not in body, "pad op inside a scan body"
+        assert body.count("pallas_call") <= 1
+
+
+def test_scenarios_share_one_executor_cache_entry_per_spec():
+    """Same spec twice -> one cached executor (no retrace per run);
+    the identity spec shares the federation=None entry."""
+    data, bank = _problem(jax.random.PRNGKey(0))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=3, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=6, bank=bank)
+    fed = Federation(schedule=CommSchedule(delay=2))
+    for _ in range(2):
+        eng.run(jax.random.PRNGKey(0), jnp.zeros(3), 2, n_chains=2,
+                federation=fed)
+    assert len(eng._executors) == 1
+    eng.run(jax.random.PRNGKey(0), jnp.zeros(3), 2, n_chains=2)
+    eng.run(jax.random.PRNGKey(0), jnp.zeros(3), 2, n_chains=2,
+            federation=Federation())   # identity -> the same None entry
+    assert len(eng._executors) == 2
+
+
+# ---------------------------------------------------------------------------
+# real SPMD: scheduled/compressed rounds on a 2-way data axis
+# ---------------------------------------------------------------------------
+
+def test_federation_multidevice_subprocess():
+    """Delayed / partial / compressed / straggler scenarios under a real
+    2-device data mesh: the participation and straggler masks derive
+    from the replicated round key and slice per device block (like sids),
+    the carried assignment survives the odd-chain pad, and the identity
+    scenario still matches the oracle to compiler tolerance."""
+    script = r"""
+import warnings
+warnings.simplefilter("ignore")
+import jax, jax.numpy as jnp, numpy as np
+from repro import api
+from repro.configs.base import SamplerConfig
+from repro.core import (FederatedSampler, make_bank,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.launch.mesh import make_sim_mesh
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+key = jax.random.PRNGKey(0)
+S, n, d = 5, 24, 3
+x = jax.random.normal(key, (S, n, d)) + jnp.arange(S)[:, None, None]
+mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+bank = make_bank(mu_s, prec_s, "diag")
+mesh = make_sim_mesh(data=2, model=1)
+for ex in ("vmap", "packed"):
+    for name in ("delayed-5x", "partial-50%", "topk-1%", "straggler-10%"):
+        f = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+            minibatch=6, step_size=1e-4,
+            surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+            schedule=api.Schedule(rounds=3, local_steps=3, n_chains=3),
+            execution=api.Execution(mesh=mesh, executor=ex))
+        tr = f.sample(jax.random.PRNGKey(7), jnp.zeros(d), federation=name)
+        assert tr.shape == (3, 9, d), (ex, name, tr.shape)
+        assert bool(jnp.all(jnp.isfinite(tr))), (ex, name)
+cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                    local_updates=3, prior_precision=1.0)
+ref = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=6,
+                       bank=bank).run_vmap(
+    jax.random.PRNGKey(7), jnp.zeros(d), 3, n_chains=4)
+f = api.FSGLD(api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+              minibatch=6, step_size=1e-4,
+              surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+              schedule=api.Schedule(rounds=3, local_steps=3, n_chains=4),
+              execution=api.Execution(mesh=mesh), federation="identity")
+got = f.sample(jax.random.PRNGKey(7), jnp.zeros(d))
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                           rtol=1e-6, atol=1e-8)
+print("FED_MULTIDEVICE_OK")
+"""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "FED_MULTIDEVICE_OK" in r.stdout, (r.stdout, r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# README "## Federation scenarios" snippet runs verbatim
+# ---------------------------------------------------------------------------
+
+def _readme_fed_block() -> str:
+    text = open(os.path.join(REPO, "README.md")).read()
+    m = re.search(r"^## Federation scenarios$(.*?)^## ", text, re.M | re.S)
+    assert m, "README has no '## Federation scenarios' section"
+    code = re.search(r"```python\n(.*?)```", m.group(1), re.S)
+    assert code, "README federation section has no python snippet"
+    return code.group(1)
+
+
+def test_readme_federation_snippet_runs():
+    src = _readme_fed_block()
+    assert "federation=" in src
+    exec(compile(src, "README.md:<federation-snippet>", "exec"), {})

@@ -76,6 +76,39 @@ def test_mesh_engine_bitmatches_legacy_permutation_mode():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_block_cyclic_permutation_nchains_gt_shards(use_kernel):
+    """ROADMAP open item (closed in PR 5): permutation mode supports
+    n_chains > S via block-cyclic client visiting — chain c sits at
+    client perm[c % S], bit-identical to the run_vmap oracle's tiled
+    permutation."""
+    data, bank = _problem(jax.random.PRNGKey(1))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=3, prior_precision=1.0)
+    samp = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank,
+                            use_kernel=use_kernel)
+    a = samp.run_vmap(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=7,
+                      reassign="permutation")
+    b = samp.run(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=7,
+                 reassign="permutation")
+    assert a.shape == b.shape == (7, 9, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_block_cyclic_visiting_is_balanced():
+    """With C = 2S every client hosts exactly 2 chains each round."""
+    data, bank = _problem(jax.random.PRNGKey(2))
+    S, C = 5, 10
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=2, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=6, bank=bank)
+    sids = np.asarray(eng._permute_sids(jax.random.PRNGKey(4), C))
+    assert sids.shape == (C,)
+    np.testing.assert_array_equal(sids[:S], sids[S:])  # cyclic tiling
+    _, counts = np.unique(sids, return_counts=True)
+    np.testing.assert_array_equal(counts, np.full(S, 2))
+
+
 # ---------------------------------------------------------------------------
 # permutation reassignment: collision-free every round, ragged clients
 # ---------------------------------------------------------------------------
