@@ -12,6 +12,11 @@ Gate semantics:
     (derived >= X, no baseline needed): they are same-run executor
     ratios (packed / per-leaf steps/s), machine-independent by
     construction — see ``check_speedup_floors``;
+  * rows whose note carries ``calib-floor=X`` / ``calib-ceiling=Y`` are
+    gated ABSOLUTELY too (floor <= derived <= ceiling): calibration
+    metrics of fixed-seed problems (benchmarks/bench_calibration.py)
+    are statistical properties, not throughput — see
+    ``check_calibration_bounds``;
   * no baseline file            -> SKIP (exit 0) — the lane still runs
     and uploads its artifact, the gate just has nothing to compare to;
   * scale mismatch              -> SKIP (exit 0) — a SCALE=0.01 smoke run
@@ -49,6 +54,8 @@ THROUGHPUT_MARK = "chain-steps/s"
 CONTROL_PREFIX = "chains/vmap/"
 FLOOR_MARK = "speedup-floor="
 FED_PREFIX = "chains/fed/"
+CALIB_FLOOR_MARK = "calib-floor="
+CALIB_CEIL_MARK = "calib-ceiling="
 
 
 def _rows(env: dict) -> dict:
@@ -74,6 +81,40 @@ def check_speedup_floors(env: dict) -> list:
         ok = math.isfinite(got) and got >= floor
         print(f"{'ok  ' if ok else 'FAIL'} {r['name']}: speedup "
               f"{got:.2f}x (floor {floor:.2f}x)")
+        if not ok:
+            failed.append(r["name"])
+    return failed
+
+
+def _mark_value(note: str, mark: str):
+    if mark not in note:
+        return None
+    return float(note.split(mark, 1)[1].split(";")[0].split()[0])
+
+
+def check_calibration_bounds(env: dict) -> list:
+    """ABSOLUTE gate on calibration rows: a row whose note carries
+    ``calib-floor=X`` and/or ``calib-ceiling=Y`` fails when derived
+    falls outside [X, Y]. Like the speedup floors this needs no baseline
+    — the bounds are committed statistical properties of fixed-seed
+    problems (ensemble NLL/ECE ceilings, coverage bracketed from both
+    sides), portable across machines. Returns failing row names."""
+    failed = []
+    for r in env.get("rows", []):
+        note = r.get("note", "")
+        lo = _mark_value(note, CALIB_FLOOR_MARK)
+        hi = _mark_value(note, CALIB_CEIL_MARK)
+        if lo is None and hi is None:
+            continue
+        got = r.get("derived", float("nan"))
+        ok = (math.isfinite(got)
+              and (lo is None or got >= lo)
+              and (hi is None or got <= hi))
+        bounds = ", ".join(
+            ([f"floor {lo:g}"] if lo is not None else [])
+            + ([f"ceiling {hi:g}"] if hi is not None else []))
+        print(f"{'ok  ' if ok else 'FAIL'} {r['name']}: "
+              f"{got:.6g} ({bounds})")
         if not ok:
             failed.append(r["name"])
     return failed
@@ -121,8 +162,9 @@ def main(argv=None) -> int:
     # two executors inside the SAME run, not a run against history)
     floor_failed = check_speedup_floors(cur)
     floor_failed += check_fed_bytes(cur)
+    floor_failed += check_calibration_bounds(cur)
     if floor_failed:
-        print(f"speedup floor(s) violated: {floor_failed}",
+        print(f"absolute gate(s) violated: {floor_failed}",
               file=sys.stderr)
         return 1
 

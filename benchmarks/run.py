@@ -11,6 +11,9 @@
   remark1 — alpha exploration knob sweep
   kernel — fused FSGLD Pallas update micro-bench
   chains — mesh chain-runtime scaling (chains x shards)
+  calib — K-draw ensemble calibration gates (NLL/ECE/coverage with
+          absolute calib-floor=/calib-ceiling= bounds in the notes,
+          enforced by check_regression.py; fixed sizes, SCALE ignored)
 
 REPRO_BENCH_SCALE=10 approaches paper-scale chain lengths;
 REPRO_BENCH_SCALE=0.01 is the CI bench-smoke setting.
@@ -29,10 +32,10 @@ import traceback
 
 
 def main(argv=None) -> int:
-    from benchmarks import (bench_chains, bench_kernel, f1_linreg,
-                            fig1_variance, fig2_3_gaussian, fig4_epsilon,
-                            fig5_metric_learning, remark1_alpha,
-                            table1_bnn)
+    from benchmarks import (bench_calibration, bench_chains, bench_kernel,
+                            f1_linreg, fig1_variance, fig2_3_gaussian,
+                            fig4_epsilon, fig5_metric_learning,
+                            remark1_alpha, table1_bnn)
     from benchmarks.common import write_json
 
     modules = [
@@ -40,7 +43,7 @@ def main(argv=None) -> int:
         ("fig4", fig4_epsilon), ("fig5", fig5_metric_learning),
         ("table1", table1_bnn), ("f1", f1_linreg),
         ("remark1", remark1_alpha), ("kernel", bench_kernel),
-        ("chains", bench_chains),
+        ("chains", bench_chains), ("calib", bench_calibration),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,

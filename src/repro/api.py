@@ -58,8 +58,10 @@ LogLikFn = Callable[[PyTree, PyTree], jax.Array]
 
 __all__ = [
     "Posterior", "SurrogateSpec", "Schedule", "Execution", "Federation",
-    "FSGLD", "fit_bank_local_sgld", "get_scenario",
+    "Serving", "FSGLD", "fit_bank_local_sgld", "get_scenario",
 ]
+
+_COLLECT_SIGNALS = ("mean", "entropy", "mutual_info", "variance")
 
 _EXECUTORS = ("auto", "vmap", "per_leaf", "packed")
 
@@ -166,6 +168,47 @@ class Execution:
 
     def __post_init__(self):
         assert self.executor in _EXECUTORS, self.executor
+
+
+@dataclasses.dataclass(frozen=True)
+class Serving:
+    """How the posterior is SERVED: K draws as one Bayesian ensemble.
+
+    The sampler's product is a posterior, not a point estimate;
+    :meth:`FSGLD.serve` turns this spec plus a draw source into a running
+    :class:`repro.serve.EnsembleServer` — one shared prefill per request,
+    per-token decode fan-out over the ``draws`` axis, next token from the
+    predictive mean. ``draws=1`` is bit-identical to the legacy
+    single-draw path (tests/test_serving.py pins this).
+
+    arch / smoke: which transformer config the draws parameterize
+    (``repro.configs``); draw banks record their arch and the server
+    REFUSES a mismatched bank instead of shape-erroring.
+    batch / prompt_len / gen: the request shape drivers default to.
+    mesh: optional ('data', 'model') mesh — the draw axis rides 'data'
+    (``repro.sharding.rules.ensemble_shardings``) when K divides it.
+    collect: which per-token uncertainty signals drivers report —
+    subset of ('mean', 'entropy', 'mutual_info', 'variance'). Every
+    signal is always computed (they share one softmax); ``collect`` is
+    the declared output contract, mirroring ``Execution.collect``.
+    """
+    draws: int = 1
+    arch: str = "qwen3-1.7b"
+    smoke: bool = True
+    batch: int = 4
+    prompt_len: int = 32
+    gen: int = 16
+    mesh: Any = None
+    collect: tuple = ("mean", "entropy", "mutual_info", "variance")
+
+    def __post_init__(self):
+        if self.draws < 1:
+            raise ValueError(f"draws must be >= 1, got {self.draws}")
+        bad = [c for c in self.collect if c not in _COLLECT_SIGNALS]
+        if bad:
+            raise ValueError(
+                f"unknown collect signals {bad}; pick from "
+                f"{_COLLECT_SIGNALS}")
 
 
 class FSGLD:
@@ -368,6 +411,41 @@ class FSGLD:
             reassign=sched.reassign, collect_every=sched.thin,
             refresh_every=self.surrogate.refresh_every,
             collect=self.execution.collect, federation=fed)
+
+    # -- phase 3: serving the posterior ------------------------------------
+
+    @staticmethod
+    def serve(spec: Serving, *, bank: Optional[str] = None,
+              draws: Any = None, seed: int = 0):
+        """Stand up an ensemble server for this posterior (phase 3).
+
+        Exactly one draw source: ``bank=`` a draw-bank directory written
+        by ``repro.launch.train --draw-bank`` (a legacy single-checkpoint
+        dir also works, served as one draw) — the server keeps tracking
+        it and ``refresh()`` hot-swaps fresh draws in between requests;
+        ``draws=`` an already-stacked (K, ...) params pytree (e.g. from
+        :meth:`load_bank`); neither — ``spec.draws`` fresh inits (shape
+        smoke, no posterior). Static: serving needs draws, not the
+        sampler's data, so no FSGLD instance is required."""
+        from repro.configs import get_config, get_smoke_config
+        from repro.serve import EnsembleServer
+        cfg = (get_smoke_config(spec.arch) if spec.smoke
+               else get_config(spec.arch))
+        n = None if (bank is None and draws is not None) else spec.draws
+        return EnsembleServer(cfg, bank=bank, draws=draws, n_draws=n,
+                              mesh=spec.mesh, seed=seed)
+
+    @staticmethod
+    def load_bank(path: str, like: PyTree, *, k: Optional[int] = None,
+                  expect_arch: Optional[str] = None):
+        """Load the freshest ``k`` draws from a draw bank as one stacked
+        (K, ...) pytree plus their :class:`repro.checkpoint.DrawMeta`
+        provenance. Fingerprint-checks every draw against ``like`` (and
+        ``expect_arch`` when given) — a mismatched bank is refused with
+        a ValueError, never a shape error."""
+        from repro import checkpoint
+        return checkpoint.load_bank(path, like, k=k,
+                                    expect_arch=expect_arch)
 
 
 # ---------------------------------------------------------------------------

@@ -1,1 +1,12 @@
-from repro.checkpoint.np_checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.np_checkpoint import (  # noqa: F401
+    DrawMeta,
+    read_meta,
+    restore,
+    save,
+    tree_fingerprint,
+)
+from repro.checkpoint.draw_bank import (  # noqa: F401
+    list_draws,
+    load_bank,
+    save_draw,
+)

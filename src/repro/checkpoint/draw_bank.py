@@ -1,0 +1,124 @@
+"""Versioned draw-bank directories: the chain→server streaming format.
+
+A draw bank is a directory of numbered single-draw checkpoints::
+
+    bank/
+      draw-000000/ {arrays.npz, manifest.json}   # repro-ckpt-v2 + DrawMeta
+      draw-000001/ ...
+
+Writers (``repro.launch.train --draw-bank``, or anything calling
+:func:`save_draw`) append draws ATOMICALLY — the draw is staged under a
+dot-prefixed temp name and renamed into place — so a server polling the
+directory between requests (``repro.serve.EnsembleServer.refresh``)
+never observes a half-written draw. Readers take the FRESHEST K draws;
+every draw is fingerprint-checked against the serving skeleton and a
+bank whose arch/config hash mismatches is REFUSED with a real error
+instead of shape-erroring mid-prefill.
+
+A legacy single-checkpoint directory (one ``manifest.json`` at the top
+level, as written by older ``repro.launch.train --ckpt``) reads as a
+one-draw bank — the K=1 fallback that keeps old checkpoints servable.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.np_checkpoint import (DrawMeta, read_meta, restore,
+                                            save, tree_fingerprint)
+
+PyTree = Any
+
+_DRAW_RE = re.compile(r"^draw-(\d{6})$")
+
+
+def _draw_dirname(i: int) -> str:
+    return f"draw-{i:06d}"
+
+
+def list_draws(bank_dir: str) -> List[str]:
+    """Complete draw paths, oldest first. A draw is complete once its
+    manifest exists (the rename in save_draw makes manifest visibility
+    atomic with the arrays)."""
+    if not os.path.isdir(bank_dir):
+        return []
+    out = []
+    for name in sorted(os.listdir(bank_dir)):
+        m = _DRAW_RE.match(name)
+        path = os.path.join(bank_dir, name)
+        if m and os.path.exists(os.path.join(path, "manifest.json")):
+            out.append(path)
+    return out
+
+
+def save_draw(bank_dir: str, tree: PyTree, meta: DrawMeta, *,
+              step: int = 0) -> str:
+    """Append one draw to the bank (atomic: staged + renamed). Returns
+    the draw's final path."""
+    os.makedirs(bank_dir, exist_ok=True)
+    existing = [int(_DRAW_RE.match(n).group(1))
+                for n in os.listdir(bank_dir) if _DRAW_RE.match(n)]
+    idx = max(existing) + 1 if existing else 0
+    final = os.path.join(bank_dir, _draw_dirname(idx))
+    tmp = os.path.join(bank_dir, f".tmp-{_draw_dirname(idx)}")
+    save(tmp, tree, step=step, meta=meta)
+    os.rename(tmp, final)
+    return final
+
+
+def load_bank(bank_dir: str, like: PyTree, *, k: Optional[int] = None,
+              expect_arch: Optional[str] = None
+              ) -> Tuple[PyTree, List[Optional[DrawMeta]]]:
+    """Load the freshest ``k`` draws (all when None) STACKED along a new
+    leading draw axis — the ensemble the server fans decode out over.
+
+    Refusal contract: every draw's structural fingerprint must match
+    ``like`` (the serving skeleton from ``init_params``), and when
+    ``expect_arch`` is given every DrawMeta.arch must agree — a
+    mismatched bank raises ValueError up front instead of shape-erroring
+    halfway through a prefill. Returns (stacked tree with (K, ...)
+    leaves, per-draw metas oldest→freshest; metas are None for legacy
+    draws)."""
+    paths = list_draws(bank_dir)
+    if not paths:
+        # legacy fallback: the directory IS a single old-style checkpoint
+        if os.path.exists(os.path.join(bank_dir, "manifest.json")):
+            paths = [bank_dir]
+        else:
+            raise ValueError(f"no draws in bank {bank_dir!r}")
+    if k is not None:
+        if k > len(paths):
+            raise ValueError(
+                f"bank {bank_dir!r} holds {len(paths)} draw(s), "
+                f"{k} requested")
+        paths = paths[-k:]
+
+    want = tree_fingerprint(like)
+    draws, metas = [], []
+    for p in paths:
+        meta = read_meta(p)
+        if meta is not None and meta.config_hash is not None \
+                and meta.config_hash != want:
+            raise ValueError(
+                f"draw bank refused: {p} was drawn from a different "
+                f"arch/config (hash {meta.config_hash} != serving "
+                f"skeleton {want}" +
+                (f"; bank arch={meta.arch!r}" if meta.arch else "") + ")")
+        if expect_arch is not None and meta is not None \
+                and meta.arch is not None and meta.arch != expect_arch:
+            raise ValueError(
+                f"draw bank refused: {p} is arch {meta.arch!r}, "
+                f"server expects {expect_arch!r}")
+        try:
+            tree, _, _ = restore(p, like)
+        except ValueError as e:
+            raise ValueError(f"draw bank refused: {e}") from e
+        draws.append(tree)
+        metas.append(meta)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(
+        [jnp.asarray(l) for l in ls]), *draws)
+    return stacked, metas

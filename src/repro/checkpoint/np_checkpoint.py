@@ -2,17 +2,49 @@
 
 Posterior SAMPLING means checkpoints carry (params == current chain state,
 sampler step, PRNG key) — resuming a chain mid-trajectory is exact.
+
+Since the draw-bank redesign every checkpoint is a versioned envelope
+(``schema: repro-ckpt-v2``) carrying a :class:`DrawMeta` — which sampler
+produced the draw (method), how far along the chain it was taken (round),
+under which federation scenario, from which seed, and at what storage
+dtype — plus a structural ``config_hash`` of the parameter tree
+(key-paths, shapes, dtypes). The hash is what lets a SERVER refuse a
+draw bank whose architecture/config does not match the model it is about
+to serve, instead of shape-erroring halfway through a prefill. Legacy
+(pre-envelope) checkpoints restore fine: ``meta`` comes back None.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+SCHEMA = "repro-ckpt-v2"
+
+
+@dataclasses.dataclass(frozen=True)
+class DrawMeta:
+    """Provenance envelope of one posterior draw.
+
+    ``config_hash`` is filled automatically at save time when left None
+    (it is a pure function of the parameter tree's structure); pass
+    ``scenario`` as the federation registry name ('identity' when the
+    sampler ran without one)."""
+    method: str = "fsgld"
+    round: int = 0
+    scenario: str = "identity"
+    seed: int = 0
+    dtype: str = "float32"
+    arch: Optional[str] = None
+    chain: int = 0
+    config_hash: Optional[str] = None
 
 
 def _flatten_with_names(tree: PyTree):
@@ -23,24 +55,66 @@ def _flatten_with_names(tree: PyTree):
     return names, leaves, treedef
 
 
-def save(path: str, tree: PyTree, *, step: int = 0, extra: dict = None):
+def tree_fingerprint(tree: PyTree) -> str:
+    """Structural hash of a parameter tree: key paths + shapes + dtypes
+    (values excluded — two draws of the same model share it, two archs
+    never do). This is the ``DrawMeta.config_hash``."""
+    names, leaves, _ = _flatten_with_names(tree)
+    desc = [[n, list(np.shape(l)), str(np.asarray(l).dtype
+                                       if not hasattr(l, "dtype")
+                                       else l.dtype)]
+            for n, l in zip(names, leaves)]
+    blob = json.dumps(desc, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def save(path: str, tree: PyTree, *, step: int = 0, extra: dict = None,
+         meta: Optional[DrawMeta] = None):
+    """Write the tree + v2 envelope. ``meta`` (a DrawMeta) records draw
+    provenance; its config_hash is computed here when unset."""
     os.makedirs(path, exist_ok=True)
     names, leaves, _ = _flatten_with_names(tree)
     arrays = {f"a{i}": np.asarray(jax.device_get(l))
               for i, l in enumerate(leaves)}
     np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    manifest = {"names": names, "step": step, "extra": extra or {}}
+    if meta is not None and meta.config_hash is None:
+        meta = dataclasses.replace(meta, config_hash=tree_fingerprint(tree))
+    manifest = {"schema": SCHEMA, "names": names, "step": step,
+                "extra": extra or {},
+                "fingerprint": tree_fingerprint(tree),
+                "meta": dataclasses.asdict(meta) if meta is not None
+                else None}
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f)
 
 
-def restore(path: str, like: PyTree):
-    """Restore into the structure of ``like`` (names must match)."""
+def _read_manifest(path: str) -> dict:
     with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+        return json.load(f)
+
+
+def read_meta(path: str) -> Optional[DrawMeta]:
+    """The checkpoint's DrawMeta, or None for legacy (v1) checkpoints."""
+    manifest = _read_manifest(path)
+    m = manifest.get("meta")
+    if m is None:
+        return None
+    known = {f.name for f in dataclasses.fields(DrawMeta)}
+    return DrawMeta(**{k: v for k, v in m.items() if k in known})
+
+
+def restore(path: str, like: PyTree):
+    """Restore into the structure of ``like`` (names must match). Reads
+    both the v2 envelope and legacy manifests (no schema/meta keys).
+    Returns (tree, step, extra) — use :func:`read_meta` for the
+    provenance envelope."""
+    manifest = _read_manifest(path)
     data = np.load(os.path.join(path, "arrays.npz"))
     names, leaves, treedef = _flatten_with_names(like)
-    assert names == manifest["names"], "checkpoint/skeleton mismatch"
+    if names != manifest["names"]:
+        raise ValueError(
+            f"checkpoint/skeleton mismatch at {path}: the stored tree "
+            "has different key paths than the restore target")
     new = [data[f"a{i}"] for i in range(len(leaves))]
     tree = jax.tree_util.tree_unflatten(treedef, new)
     return tree, manifest["step"], manifest["extra"]

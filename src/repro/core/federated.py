@@ -10,7 +10,6 @@ variant (DESIGN.md Sec 4.1).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -23,23 +22,6 @@ from repro.core.surrogate import (Gaussian, SurrogateBank, fit_gaussian,
 
 PyTree = Any
 
-_deprecation_warned = False
-
-
-def _warn_deprecated():
-    """One DeprecationWarning per process: FederatedSampler survives as a
-    thin shim over the chain engine (``run`` already delegates) plus the
-    ``run_vmap`` bit-exactness oracle; new code goes through the
-    ``repro.api`` facade."""
-    global _deprecation_warned
-    if not _deprecation_warned:
-        warnings.warn(
-            "FederatedSampler is deprecated: construct the sampler "
-            "through repro.api.FSGLD (same engine, same bit-exact "
-            "results; FederatedSampler.run_vmap remains the regression "
-            "oracle)", DeprecationWarning, stacklevel=3)
-        _deprecation_warned = True
-
 
 def _minibatch(key, shard_data: PyTree, shard_id, n_s: int, m: int) -> PyTree:
     """Sample m indices with replacement from shard ``shard_id`` (matching
@@ -51,10 +33,13 @@ def _minibatch(key, shard_data: PyTree, shard_id, n_s: int, m: int) -> PyTree:
 
 @dataclasses.dataclass
 class FederatedSampler:
-    """DEPRECATED paper-scale runtime for SGLD / DSGLD / FSGLD — use
-    ``repro.api.FSGLD``. Kept as a thin shim (``run`` delegates to the
-    chain engine and is bit-identical to the facade) and as the home of
-    the ``run_vmap`` regression oracle.
+    """The ``run_vmap`` bit-exactness ORACLE: the legacy single-host vmap
+    executor the mesh chain engine is regression-tested against
+    (tests/test_mesh_engine.py, tests/test_parity_matrix.py). This is an
+    internal testing fixture — production code constructs the sampler
+    through ``repro.api.FSGLD``, which routes every workload through the
+    engine. (The old ``run``-delegation shim and its DeprecationWarning
+    were removed after two majors; see the README migration table.)
 
     shard_data: pytree with leaves (S, N_s, ...) — equally-sized shards.
     ``dynamics='sghmc'`` swaps the Langevin step for the federated SGHMC
@@ -73,7 +58,6 @@ class FederatedSampler:
     sghmc: Any = None  # Optional[SGHMCConfig]; None -> defaults
 
     def __post_init__(self):
-        _warn_deprecated()
         leaf = jax.tree.leaves(self.shard_data)[0]
         s, n = leaf.shape[0], leaf.shape[1]
         assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
@@ -122,28 +106,6 @@ class FederatedSampler:
         return state, trace
 
     # -- server-side loop ---------------------------------------------------
-    def run(self, key: jax.Array, theta0: PyTree, num_rounds: int,
-            *, n_chains: int = 1, reassign: str = "categorical",
-            collect_every: int = 1, refresh_every: Optional[int] = None):
-        """Returns stacked samples with leading axes
-        (n_chains, num_rounds * T_local / collect_every, ...).
-
-        Execution is delegated to the mesh-parallel chain engine
-        (core/engine.py) on the 1x1 host mesh — bit-identical to the
-        legacy vmap loop kept as ``run_vmap`` (the regression oracle),
-        but the same code path scales to multi-device data/model meshes.
-        SGLD ignores sharding: shard_id is fixed to 0 and the estimator
-        scales by N/m over the pooled data (the centralized baseline)."""
-        from repro.core.engine import MeshChainEngine
-        if not hasattr(self, "_engine"):
-            self._engine = MeshChainEngine(
-                self.log_lik_fn, self.cfg, self.shard_data, self.minibatch,
-                bank=self.bank, use_kernel=self.use_kernel,
-                dynamics=self.dynamics, sghmc=self.sghmc)
-        return self._engine.run(
-            key, theta0, num_rounds, n_chains=n_chains, reassign=reassign,
-            collect_every=collect_every, refresh_every=refresh_every)
-
     def run_vmap(self, key: jax.Array, theta0: PyTree, num_rounds: int,
                  *, n_chains: int = 1, reassign: str = "categorical",
                  collect_every: int = 1,

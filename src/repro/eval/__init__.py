@@ -1,0 +1,8 @@
+"""Posterior-quality evaluation: calibration of the served ensemble."""
+from repro.eval.calibration import (  # noqa: F401
+    ece_binary,
+    ece_from_probs,
+    interval_coverage,
+    nll_categorical,
+    nll_gaussian_mixture,
+)

@@ -1,0 +1,99 @@
+"""Calibration metrics for the served posterior (NLL / ECE / coverage).
+
+The point of serving K draws instead of one (``repro.serve``) is BETTER
+predictive distributions — these metrics are how that claim is scored,
+and the bench lane gates on them (``benchmarks/bench_calibration.py``
+rows, floors enforced by ``benchmarks/check_regression.py``): the
+K-draw ensemble must beat the single-draw baseline on NLL/ECE and its
+predictive intervals must actually cover.
+
+Conventions: everything takes plain arrays (no model objects), computes
+in float64 on the host, and returns python floats — the metrics are host-side scoring
+code, not jit targets. Classification metrics take per-draw
+probabilities ``probs_k`` of shape (K, N, C) (K=1 for a point model);
+the predictive distribution is the draw mean. Analytic goldens for each
+metric live in tests/test_calibration.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["nll_categorical", "nll_gaussian_mixture", "ece_from_probs",
+           "ece_binary", "interval_coverage"]
+
+
+def _predictive(probs_k) -> np.ndarray:
+    p = np.asarray(probs_k, np.float64)
+    assert p.ndim == 3, f"probs_k must be (K, N, C), got {p.shape}"
+    return p.mean(0)  # (N, C) Bayesian model average
+
+
+def nll_categorical(probs_k, labels, *, eps: float = 1e-12) -> float:
+    """Mean negative log-likelihood of ``labels`` (N,) under the
+    ensemble predictive mean — THE proper score posterior averaging is
+    supposed to improve (log p̄ >= mean_k log p_k by Jensen)."""
+    pred = _predictive(probs_k)
+    labels = np.asarray(labels).astype(np.int64)
+    p_true = pred[np.arange(pred.shape[0]), labels]
+    return float(-np.mean(np.log(np.clip(p_true, eps, None))))
+
+
+def ece_from_probs(probs_k, labels, *, n_bins: int = 15) -> float:
+    """Expected calibration error of the predictive mean: confidence =
+    max-prob, equal-width bins on [0, 1], weighted mean |acc − conf|
+    (the standard Guo et al. estimator). 0 = perfectly calibrated."""
+    pred = _predictive(probs_k)
+    labels = np.asarray(labels).astype(np.int64)
+    conf = pred.max(-1)
+    correct = (pred.argmax(-1) == labels).astype(np.float64)
+    # right-closed bins; conf==0 lands in bin 0
+    idx = np.clip(np.ceil(conf * n_bins).astype(np.int64) - 1, 0,
+                  n_bins - 1)
+    ece, n = 0.0, conf.shape[0]
+    for b in range(n_bins):
+        m = idx == b
+        if not m.any():
+            continue
+        ece += (m.sum() / n) * abs(correct[m].mean() - conf[m].mean())
+    return float(ece)
+
+
+def ece_binary(p1_k, labels, *, n_bins: int = 15) -> float:
+    """Binary convenience wrapper: ``p1_k`` (K, N) per-draw P(y=1) ->
+    two-column ``ece_from_probs``."""
+    p1 = np.asarray(p1_k, np.float64)
+    assert p1.ndim == 2, f"p1_k must be (K, N), got {p1.shape}"
+    probs = np.stack([1.0 - p1, p1], -1)
+    return ece_from_probs(probs, labels, n_bins=n_bins)
+
+
+def nll_gaussian_mixture(means_k, scales_k, targets) -> float:
+    """Regression NLL under the K-component predictive mixture
+    (1/K) Σ_k N(y | mu_k, sigma_k²) — the ensemble's predictive
+    distribution for a Gaussian likelihood head. ``means_k``/``scales_k``
+    are (K, N); K=1 is the plain Gaussian NLL."""
+    mu = np.asarray(means_k, np.float64)
+    sig = np.asarray(scales_k, np.float64)
+    y = np.asarray(targets, np.float64)[None]
+    assert mu.ndim == 2 and mu.shape == sig.shape, (mu.shape, sig.shape)
+    logp_k = (-0.5 * ((y - mu) / sig) ** 2 - np.log(sig)
+              - 0.5 * np.log(2 * np.pi))  # (K, N)
+    # logsumexp over draws, stable
+    m = logp_k.max(0)
+    logp = m + np.log(np.exp(logp_k - m).mean(0))
+    return float(-logp.mean())
+
+
+def interval_coverage(samples, targets, *, level: float = 0.9) -> float:
+    """Fraction of ``targets`` (N,) inside the central ``level``
+    predictive interval of ``samples`` (K, N) — K posterior-predictive
+    draws per example. A calibrated posterior covers ≈ ``level``; the
+    bench gate brackets it from both sides (under- AND over-confidence
+    fail)."""
+    s = np.asarray(samples, np.float64)
+    assert s.ndim == 2, f"samples must be (K, N), got {s.shape}"
+    alpha = (1.0 - level) / 2
+    lo = np.quantile(s, alpha, axis=0)
+    hi = np.quantile(s, 1.0 - alpha, axis=0)
+    y = np.asarray(targets, np.float64)
+    return float(np.mean((y >= lo) & (y <= hi)))

@@ -1,94 +1,96 @@
-"""Batched serving driver: prefill (runs the full forward) + decode loop
-against the KV cache / recurrent state, serving a posterior sample.
+"""Thin CLI over the serving facade: K posterior draws, one ensemble.
 
-The sample comes from the ``repro.api`` facade: point ``--ckpt`` at a
-checkpoint written by ``repro.launch.train`` (one draw from the FSGLD
-weight posterior) and this driver serves it; without ``--ckpt`` it serves
-freshly initialised weights (shape smoke).
+All the mechanics live behind ``repro.api.Serving`` + ``FSGLD.serve``
+(shared prefill, per-token decode fan-out, predictive-mean tokens,
+per-token uncertainty, hot-swappable draw banks); this driver just turns
+flags into a spec and prints the served stream.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
-        --batch 4 --prompt-len 32 --gen 16 [--ckpt /path/from/train]
+        --batch 4 --prompt-len 32 --gen 16 --draws 4 \
+        [--bank /bank/from/train]
+
+``--bank`` points at a draw-bank directory written by
+``repro.launch.train --draw-bank``; ``--watch N`` re-polls it N extra
+times, hot-swapping fresh draws in between requests (the streaming
+chain->server path). The legacy ``--ckpt`` flag still works (warns once)
+and serves the single checkpoint as a one-draw bank.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.api import FSGLD, Serving
 
-from repro import checkpoint
-from repro.configs import get_config, get_smoke_config
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import make_serve_step
-from repro.models import (decode_step, encoder_forward, init_cache,
-                          init_params, prefill_with_cache)
-from repro.models.model import ACT_DTYPE
+_ckpt_warned = False
 
 
 def main(argv=None):
+    global _ckpt_warned
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--draws", type=int, default=1,
+                    help="ensemble size K (freshest K draws of the bank)")
+    ap.add_argument("--bank", default=None,
+                    help="draw-bank directory from "
+                         "repro.launch.train --draw-bank")
+    ap.add_argument("--watch", type=int, default=0,
+                    help="extra bank polls: serve, refresh(), repeat")
     ap.add_argument("--ckpt", default=None,
-                    help="posterior-sample checkpoint from "
-                         "repro.launch.train (repro.api.FSGLD output); "
-                         "omitted -> fresh init_params")
+                    help="DEPRECATED: single checkpoint; use --bank "
+                         "(served as a one-draw legacy bank)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
+    bank = args.bank
     if args.ckpt:
-        params, step, extra = checkpoint.restore(args.ckpt, params)
-        # np_checkpoint restores host numpy arrays; device-put them so
-        # tracer-indexed gathers (embed lookup) stay jittable
-        params = jax.tree.map(jnp.asarray, params)
-        print(f"serving posterior sample from {args.ckpt} "
-              f"(round {step}, method={extra.get('method')})")
-    B = args.batch
-    total = args.prompt_len + args.gen
+        if bank is not None:
+            raise SystemExit("pass --bank or --ckpt, not both")
+        if not _ckpt_warned:
+            warnings.warn(
+                "--ckpt is deprecated; point --bank at a draw-bank "
+                "directory (repro.launch.train --draw-bank). Serving "
+                "the checkpoint as a one-draw legacy bank.",
+                DeprecationWarning, stacklevel=2)
+            _ckpt_warned = True
+        bank = args.ckpt
 
-    enc_out = None
-    if cfg.family == "vlm":
-        enc_out = jax.random.normal(
-            key, (B, cfg.num_patches, cfg.d_model), ACT_DTYPE)
-    elif cfg.family == "audio":
-        enc_in = jax.random.normal(
-            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
-        enc_out = encoder_forward(params, cfg, enc_in)
+    spec = Serving(draws=args.draws, arch=args.arch, smoke=args.smoke,
+                   batch=args.batch, prompt_len=args.prompt_len,
+                   gen=args.gen)
+    server = FSGLD.serve(spec, bank=bank, seed=args.seed)
+    if bank is not None:
+        meta = server.metas[0]
+        prov = (f"round {meta.round}, method={meta.method}, "
+                f"scenario={meta.scenario}" if meta is not None
+                else "legacy checkpoint, no DrawMeta")
+        print(f"serving {server.n_draws} draw(s) from {bank} ({prov})")
 
-    prompt = jax.random.randint(key, (B, args.prompt_len), 0,
-                                cfg.vocab_size, jnp.int32)
-
-    if enc_out is not None:
-        step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p,
-                                                   enc_out=enc_out))
-        kw = {"enc_embeds": (enc_out if cfg.family == "vlm" else enc_in)}
-    else:
-        step = jax.jit(lambda c, t, p: decode_step(params, cfg, c, t, p))
-        kw = {}
-
-    # prefill: ONE forward pass fills the decode cache (models.
-    # prefill_with_cache) — the production path the dry-run lowers.
-    t0 = time.time()
-    logits, cache = prefill_with_cache(params, cfg, prompt, total, **kw)
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    for t in range(args.prompt_len, total - 1):
-        pos = jnp.full((B,), t, jnp.int32)
-        logits, cache = step(cache, tok, pos)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        print(f"step {t}: tokens {tok[:, 0].tolist()}", flush=True)
-    dt = time.time() - t0
-    print(f"prefilled {B}x{args.prompt_len} in {t_prefill:.2f}s; served "
-          f"{B} seqs x {args.gen} new tokens in {dt:.2f}s "
-          f"({B*args.gen/max(dt,1e-9):.1f} tok/s on CPU)")
+    for req in range(1 + max(0, args.watch)):
+        if req > 0 and server.refresh():
+            print(f"hot-swapped bank: now {server.n_draws} draw(s)")
+        res = server.generate(gen=args.gen, batch=args.batch,
+                              prompt_len=args.prompt_len)
+        for t in range(res.tokens.shape[1]):
+            line = f"step {t}: tokens {res.tokens[:, t].tolist()}"
+            if "mean" in spec.collect:
+                line += f" logp {res.mean_logprob[:, t].tolist()}"
+            if "entropy" in spec.collect:
+                line += f" H {res.entropy[:, t].tolist()}"
+            if "mutual_info" in spec.collect:
+                line += f" MI {res.mutual_info[:, t].tolist()}"
+            if "variance" in spec.collect:
+                line += f" var {res.token_var[:, t].tolist()}"
+            print(line, flush=True)
+        B, G = args.batch, args.gen
+        print(f"prefilled {B}x{args.prompt_len} once for "
+              f"{res.n_draws} draw(s) in {res.prefill_s:.2f}s; served "
+              f"{B} seqs x {G} new tokens in {res.decode_s:.2f}s "
+              f"({B*G/max(res.decode_s,1e-9):.1f} tok/s)")
     return 0
 
 

@@ -4,8 +4,10 @@ LARGE-MODEL mode (DESIGN.md Sec 4): the FSGLD update for the full
 transformer posterior with per-tensor scalar-precision surrogates.
 ``train_step`` is what the multi-pod dry-run lowers for every
 architecture; the actual sampling loop (single- and multi-chain) runs on
-the chain engine via ``repro.api.FSGLD`` — the ppermute federated round
-that used to live here is retired (see ``make_federated_round``).
+the chain engine via ``repro.api.FSGLD``. (The ppermute federated
+round that used to live here — and the ``make_federated_round``
+deprecation shim that replaced it — are gone; see the README
+migration table.)
 
 Surrogates everywhere are ``repro.core.surrogate.SurrogateBank`` (with a
 bf16 storage option); the flat ``{mu_g, mu_s, lam_g, lam_s}`` dict these
@@ -134,83 +136,3 @@ def make_serve_step(cfg: ArchConfig, *, with_enc: Optional[bool] = None):
             logits, cache = decode_step(params, cfg, cache, token, pos)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
     return serve_step
-
-
-# ---------------------------------------------------------------------------
-# FEDERATED mode: the large-model communication round now RUNS ON THE CHAIN
-# ENGINE (core/engine.py) — chains shard over the mesh 'data' axis with the
-# engine's SPMD permutation reassignment and scanned round bodies, the same
-# reassignment/collective path the small-model configs use. The private
-# ppermute ring loop that used to live here is retired; only a deprecation
-# shim remains.
-# ---------------------------------------------------------------------------
-
-_federated_round_warned = False
-
-
-def make_federated_round(cfg: ArchConfig, sampler: SamplerConfig, mesh, *,
-                         scale: float = None, n_chains: int,
-                         minibatch: int = 8):
-    """DEPRECATED shim: the large-model federated round runs on
-    ``repro.core.engine.MeshChainEngine`` (drive it through
-    ``repro.api.FSGLD``). This wrapper keeps the old constructor shape
-    but the returned callable now has the engine contract
-
-        round(chains, bank, shard_data, key) -> chains
-
-    with ``chains`` a (C, ...)-stacked params pytree sharded over 'data',
-    ``bank`` a repro.core.surrogate.SurrogateBank (or None), and
-    ``shard_data`` the resident client shards with leaves (S, n, ...) —
-    the round draws its own minibatches (size ``minibatch``) instead of
-    consuming pre-drawn batches, and reassignment is the engine's
-    collision-free SPMD permutation instead of the static ppermute ring.
-    ``scale`` is accepted for signature compatibility and ignored: the
-    engine derives the exact N_s/(f_s m) factor from the shard scheme.
-    Output is bit-identical to ``repro.api.FSGLD`` driving the same
-    engine configuration (the shim IS the facade's engine)."""
-    global _federated_round_warned
-    import warnings
-    if not _federated_round_warned:
-        warnings.warn(
-            "make_federated_round is deprecated: the large-model round "
-            "runs on MeshChainEngine — drive it via repro.api.FSGLD",
-            DeprecationWarning, stacklevel=2)
-        _federated_round_warned = True
-
-    from repro import api
-
-    cell = {}
-
-    def round_fn(chains, bank, shard_data, key):
-        # the facade (and its engine executor caches) are rebuilt whenever
-        # the caller hands in a different bank or shard set — a stale
-        # cache would silently sample with round-1 surrogates forever
-        cache_key = (id(bank), id(shard_data))
-        if cell.get("key") != cache_key:
-            if bank is not None:
-                method, spec = sampler.method, api.SurrogateSpec(
-                    kind=bank.kind, bank=bank)
-            else:
-                # no communicated bank: the old round ran the identity
-                # surrogate, whose conducive term is exactly zero — the
-                # DSGLD estimator
-                method = "dsgld" if sampler.method == "fsgld" \
-                    else sampler.method
-                spec = api.SurrogateSpec(kind="none")
-            cell["key"] = cache_key
-            cell["fsgld"] = api.FSGLD(
-                api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
-                              prior_precision=sampler.prior_precision,
-                              temperature=sampler.temperature),
-                shard_data, minibatch=minibatch,
-                step_size=sampler.step_size, method=method,
-                surrogate=spec,
-                schedule=api.Schedule(
-                    rounds=1, local_steps=sampler.local_updates,
-                    n_chains=n_chains, reassign="permutation"),
-                execution=api.Execution(mesh=mesh, collect=False))
-        return cell["fsgld"].engine.run(
-            key, chains, 1, n_chains=n_chains, reassign="permutation",
-            collect=False, stacked=True)
-
-    return round_fn

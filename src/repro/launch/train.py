@@ -43,6 +43,45 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_params, log_lik_fn
 
 
+def _sample_into_bank(fsgld, key, params, cfg, args, federation):
+    """Streaming chain→server sampling: run the schedule in SEGMENTS of
+    ``--bank-every`` rounds, carrying the stacked per-chain states across
+    segments (``engine.run(stacked=True)``), and append chain 0's
+    parameters to the versioned draw bank after every segment — one
+    thinned posterior draw per segment, served hot by any
+    ``repro.launch.serve --bank`` process watching the directory.
+
+    Each segment is its own engine dispatch with a folded sub-key, so
+    the total stream is NOT bit-identical to one monolithic run (the
+    reassignment permutation and, for sghmc, the momenta restart per
+    segment) — the price of draws becoming visible while sampling runs.
+    Returns the final stacked (C, ...) parameter states."""
+    seg = max(1, args.bank_every)
+    state, stacked = params, False
+    done, i = 0, 0
+    while done < args.rounds:
+        r = min(seg, args.rounds - done)
+        finals = fsgld.engine.run(
+            jax.random.fold_in(key, i), state, r, n_chains=args.chains,
+            reassign="permutation", collect=False, stacked=stacked,
+            federation=federation)
+        # sghmc returns (theta, momentum) chain-state pairs; the bank
+        # stores parameters only (a draw is a draw, not a chain state)
+        theta = finals[0] if args.kernel == "sghmc" else finals
+        done += r
+        i += 1
+        state, stacked = theta, True
+        draw = jax.tree.map(lambda t: t[0], theta)
+        meta = checkpoint.DrawMeta(
+            method=args.method, round=done,
+            scenario=(args.federation or "identity"), seed=args.seed,
+            dtype=str(jax.tree.leaves(draw)[0].dtype), arch=cfg.name,
+            chain=0)
+        path = checkpoint.save_draw(args.draw_bank, draw, meta, step=done)
+        print(f"draw {i - 1} (round {done}) -> {path}", flush=True)
+    return theta
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -93,6 +132,17 @@ def main(argv=None):
     ap.add_argument("--fit-steps", type=int, default=20)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--draw-bank", default=None,
+                    help="versioned draw-bank DIRECTORY: sampling runs in "
+                         "segments of --bank-every rounds, writing chain "
+                         "0's parameters as one DrawMeta-enveloped draw "
+                         "per segment — a server pointed at the same "
+                         "directory (repro.launch.serve --bank) hot-swaps "
+                         "the fresh draws in between requests, while "
+                         "sampling is still running")
+    ap.add_argument("--bank-every", type=int, default=1,
+                    help="rounds per draw-bank segment (thinning: one "
+                         "draw every this many rounds)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -157,12 +207,16 @@ def main(argv=None):
 
     # ---- phase 2: FSGLD rounds on the chain engine ----
     t0 = time.time()
-    finals = fsgld.sample(k_run, params)
+    if args.draw_bank:
+        finals = _sample_into_bank(fsgld, k_run, params, cfg, args,
+                                   federation)
+    else:
+        finals = fsgld.sample(k_run, params)
+        if args.kernel == "sghmc":
+            # collect=False sghmc returns (theta, momentum) chain-state
+            # pairs; the ll probe (and the checkpoint) wants parameters
+            finals = finals[0]
     dt = time.time() - t0
-    if args.kernel == "sghmc":
-        # collect=False sghmc returns (theta, momentum) chain-state pairs;
-        # the ll probe (and the checkpoint) wants the parameters
-        finals = finals[0]
     probe = jax.tree.map(lambda d: d[0][:args.batch], shards)
     lls = jax.vmap(lambda p: log_lik_fn(p, cfg, probe))(finals)
     lls = np.asarray(lls) / probe["tokens"].size

@@ -1,7 +1,9 @@
 from repro.models.model import (  # noqa: F401
     ACT_DTYPE,
+    broadcast_cache,
     decode_step,
     encoder_forward,
+    ensemble_decode_step,
     forward,
     init_cache,
     init_params,

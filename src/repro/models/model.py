@@ -622,6 +622,34 @@ def _decode_layer(kind: str, p, x, cfg: ArchConfig, cache, pos, enc_out):
     return x, cache
 
 
+def broadcast_cache(cache: dict, k: int) -> dict:
+    """Fan a single prefilled decode cache out to K posterior draws:
+    every leaf gains a leading draw axis (K, ...). This is the
+    cache-sharing half of ensemble serving — prefill runs ONCE (anchor
+    draw), the prompt region of the KV cache / recurrent state is shared
+    by construction, and only the decode fan-out diverges per draw
+    (each draw's decode writes its own k/v rows for generated tokens)."""
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (k,) + l.shape), cache)
+
+
+def ensemble_decode_step(draws: dict, cfg: ArchConfig, caches: dict,
+                         token: jax.Array, pos: jax.Array, *,
+                         enc_out: Optional[jax.Array] = None):
+    """One serving step across K posterior draws sharing ONE token
+    stream: ``draws``/``caches`` carry a leading (K, ...) draw axis,
+    ``token`` (B,1) and ``pos`` (B,) are shared — the served sequence is
+    a single stream whose next token comes from the ensemble predictive
+    mean, not K diverging streams. Returns (logits (K,B,V), caches).
+
+    The draw axis is a plain vmapped batch axis, so under a mesh it
+    rides a mesh axis exactly like chains do during sampling
+    (``repro.sharding.rules.ensemble_specs``)."""
+    fn = lambda p, c: decode_step(p, cfg, c, token, pos,  # noqa: E731
+                                  enc_out=enc_out)
+    return jax.vmap(fn)(draws, caches)
+
+
 def decode_step(params: dict, cfg: ArchConfig, cache: dict,
                 token: jax.Array, pos: jax.Array, *,
                 enc_out: Optional[jax.Array] = None):

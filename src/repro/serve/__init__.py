@@ -1,0 +1,7 @@
+"""Ensemble posterior serving (Bayesian model averaging over K draws)."""
+from repro.serve.ensemble import (  # noqa: F401
+    StepStats,
+    ensemble_prefill,
+    predictive_stats,
+)
+from repro.serve.server import EnsembleServer, ServeResult  # noqa: F401

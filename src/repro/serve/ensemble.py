@@ -1,0 +1,95 @@
+"""Bayesian-model-averaging ensemble math for posterior serving.
+
+The sampler's product is the POSTERIOR, not a point estimate; serving it
+means serving K draws theta_1..theta_K as one model::
+
+    p(y | x) ≈ (1/K) Σ_k p(y | x, theta_k)
+
+Layout contract (one request):
+
+  * prefill runs ONCE, on the anchor draw (k=0) — one forward pass fills
+    one decode cache, which :func:`repro.models.broadcast_cache` fans
+    out to a (K, ...) cache stack whose prompt region is shared across
+    draws by construction;
+  * decode fans out per token: ``ensemble_decode_step`` vmaps the
+    single-token step over the draw axis with a SHARED token stream, and
+    :func:`predictive_stats` folds the (K, B, V) logits into the
+    predictive mean plus per-token uncertainty;
+  * the next token is argmax of the predictive MEAN — the served
+    sequence is one stream, ensemble-averaged per token.
+
+With K=1 every aggregate is the identity (mean over one draw) and the
+argmax is taken over a per-row monotone shift of the raw logits, so
+single-draw ensemble serving is bit-identical to the plain
+prefill+decode path (tests/test_serving.py pins this).
+
+Uncertainty signals per generated token (all (B,) per step, fp32):
+
+  * ``mean_logprob`` — log predictive-mean probability of the emitted
+    token (the BMA confidence; feeds the NLL calibration gate);
+  * ``entropy``      — predictive entropy H[p̄] (total uncertainty);
+  * ``mutual_info``  — H[p̄] − mean_k H[p_k] (BALD): the epistemic part,
+    i.e. the draws DISAGREEING. Exactly 0 at K=1 — uncertainty the
+    single-draw path cannot see;
+  * ``token_var``    — Var_k p_k(token): per-token draw variance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import broadcast_cache, prefill_with_cache
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class StepStats:
+    """Predictive aggregate of one decode step (leaves (B,))."""
+    token: jax.Array
+    mean_logprob: jax.Array
+    entropy: jax.Array
+    mutual_info: jax.Array
+    token_var: jax.Array
+
+
+def predictive_stats(logits_k: jax.Array) -> StepStats:
+    """(K, B, V) per-draw logits -> next token from the predictive mean
+    plus per-token uncertainty. All math in fp32; the mean over draws is
+    computed in log space (logsumexp − log K) so huge vocabularies do
+    not underflow."""
+    K = logits_k.shape[0]
+    logp = jax.nn.log_softmax(logits_k.astype(jnp.float32), axis=-1)
+    mean_logp = jax.nn.logsumexp(logp, axis=0) - jnp.log(float(K))
+    token = jnp.argmax(mean_logp, axis=-1).astype(jnp.int32)     # (B,)
+    probs = jnp.exp(logp)                                        # (K,B,V)
+    mean_probs = jnp.exp(mean_logp)                              # (B,V)
+    h_pred = -jnp.sum(mean_probs * mean_logp, axis=-1)
+    h_each = -jnp.sum(probs * logp, axis=-1)                     # (K,B)
+    idx = jnp.broadcast_to(token[None, :, None], (K,) + token.shape + (1,))
+    p_tok = jnp.take_along_axis(probs, idx, axis=-1)[..., 0]     # (K,B)
+    conf = jnp.take_along_axis(mean_logp, token[:, None], axis=-1)[:, 0]
+    return StepStats(token=token, mean_logprob=conf, entropy=h_pred,
+                     mutual_info=h_pred - h_each.mean(0),
+                     token_var=p_tok.var(0))
+
+
+def ensemble_prefill(draws: PyTree, cfg, prompt: jax.Array,
+                     cache_len: int, *,
+                     enc_embeds: Optional[jax.Array] = None):
+    """ONE prefill for the whole ensemble: the anchor draw (k=0) runs the
+    full prompt forward and its decode cache is broadcast to all K draws
+    (the prompt region is shared; decode writes diverge per draw).
+    Returns (anchor last-token logits (B, V), caches with (K, ...)
+    leaves). The first generated token therefore comes from the anchor —
+    the price of prefilling once — and ensemble uncertainty starts at
+    the second token; K=1 is exactly the legacy single-draw path."""
+    k = jax.tree.leaves(draws)[0].shape[0]
+    anchor = jax.tree.map(lambda l: l[0], draws)
+    kw = {} if enc_embeds is None else {"enc_embeds": enc_embeds}
+    logits, cache = prefill_with_cache(anchor, cfg, prompt, cache_len,
+                                       **kw)
+    return logits, broadcast_cache(cache, k)

@@ -1,0 +1,196 @@
+"""The ensemble posterior server: K draws, one prefill, hot-swap banks.
+
+``EnsembleServer`` is the long-running object behind
+``repro.api.FSGLD.serve`` / ``repro.launch.serve``: it holds the stacked
+(K, ...) posterior draws, answers requests with one shared prefill plus
+a per-token decode fan-out (``repro.serve.ensemble``), and between
+requests polls its draw-bank directory for fresh draws written by a
+still-running sampler (``repro.launch.train --draw-bank``) — the
+streaming chain→server path. ``refresh()`` hot-swaps the newest K draws
+in WITHOUT restarting the server or touching an in-flight request.
+
+Draw placement: the stacked draw axis rides the mesh 'data' axis
+(``repro.sharding.rules.ensemble_shardings``) whenever a mesh is given
+and K divides it; otherwise draws replicate (never crash on an uneven
+ensemble).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint
+from repro.models import (encoder_forward, ensemble_decode_step,
+                          init_params)
+from repro.models.model import ACT_DTYPE
+from repro.serve.ensemble import ensemble_prefill, predictive_stats
+from repro.sharding import rules
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """One served request: the greedy BMA token stream plus per-token
+    uncertainty (all (B, gen); see repro.serve.ensemble for the signal
+    definitions). ``n_draws`` records the ensemble size that answered —
+    after a hot-swap it may differ from the previous request's."""
+    tokens: jax.Array
+    mean_logprob: jax.Array
+    entropy: jax.Array
+    mutual_info: jax.Array
+    token_var: jax.Array
+    n_draws: int
+    prefill_s: float
+    decode_s: float
+
+
+class EnsembleServer:
+    """Serve K posterior draws as one Bayesian-model-averaged model.
+
+    Exactly one draw source:
+      * ``bank=`` a draw-bank directory (or legacy single-checkpoint
+        dir) — the freshest ``n_draws`` are loaded, fingerprint-checked
+        against this arch's parameter skeleton, and ``refresh()`` keeps
+        tracking the directory;
+      * ``draws=`` an already-stacked (K, ...) params pytree;
+      * neither — ``n_draws`` fresh inits (shape smoke, no posterior).
+    """
+
+    def __init__(self, cfg, *, bank: Optional[str] = None,
+                 draws: Optional[PyTree] = None,
+                 n_draws: Optional[int] = None, mesh: Any = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.bank = bank
+        self.metas: List[Optional[checkpoint.DrawMeta]] = []
+        self._like = init_params(cfg, jax.random.PRNGKey(seed))
+        self._seen_draws = 0
+        if bank is not None:
+            if draws is not None:
+                raise ValueError("pass bank= or draws=, not both")
+            self._want = n_draws
+            self.draws = None
+            if not self.refresh():
+                raise ValueError(f"no draws in bank {bank!r}")
+        elif draws is not None:
+            self.draws = self._place(draws)
+            self.metas = [None] * self.n_draws
+        else:
+            k = n_draws or 1
+            keys = jax.random.split(jax.random.PRNGKey(seed), k)
+            self.draws = self._place(jax.tree.map(
+                lambda *ls: jnp.stack(ls),
+                *[init_params(cfg, kk) for kk in keys]))
+            self.metas = [None] * k
+
+    # -- draw management ---------------------------------------------------
+
+    @property
+    def n_draws(self) -> int:
+        return int(jax.tree.leaves(self.draws)[0].shape[0])
+
+    def _place(self, draws: PyTree) -> PyTree:
+        draws = jax.tree.map(jnp.asarray, draws)
+        k = int(jax.tree.leaves(draws)[0].shape[0])
+        if self.mesh is not None and k % self.mesh.shape[
+                rules.ENSEMBLE_AXIS] == 0:
+            shardings = rules.ensemble_shardings(draws, self.mesh)
+            draws = jax.device_put(draws, shardings)
+        return draws
+
+    def refresh(self) -> bool:
+        """Poll the draw bank; when new complete draws appeared since the
+        last load, hot-swap the freshest ``n_draws`` in. Returns True when
+        the ensemble changed. No-op (False) for non-bank servers."""
+        if self.bank is None:
+            return False
+        avail = len(checkpoint.list_draws(self.bank))
+        if avail == 0 and os.path.exists(
+                os.path.join(self.bank, "manifest.json")):
+            avail = 1  # legacy single-checkpoint fallback: one draw
+        if avail == 0 or (avail == self._seen_draws
+                          and self.draws is not None):
+            return False
+        k = self._want
+        if k is not None and avail < k:
+            k = avail  # sampler still filling the bank: serve what exists
+        stacked, metas = checkpoint.load_bank(
+            self.bank, self._like, k=k, expect_arch=self.cfg.name)
+        self.draws = self._place(stacked)
+        self.metas = metas
+        self._seen_draws = avail
+        return True
+
+    # -- serving -----------------------------------------------------------
+
+    def _encoder_inputs(self, key, batch):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            enc = jax.random.normal(
+                key, (batch, cfg.num_patches, cfg.d_model), ACT_DTYPE)
+            return enc, enc
+        if cfg.family == "audio":
+            enc_in = jax.random.normal(
+                key, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            anchor = jax.tree.map(lambda l: l[0], self.draws)
+            return enc_in, encoder_forward(anchor, cfg, enc_in)
+        return None, None
+
+    def generate(self, prompt: Optional[jax.Array] = None, *,
+                 key: Optional[jax.Array] = None, gen: int = 16,
+                 batch: int = 4, prompt_len: int = 32) -> ServeResult:
+        """Serve one request: greedy decode ``gen`` tokens from the
+        ensemble predictive mean. ``prompt`` (B, S) int32, or None to
+        draw a random prompt from ``key`` (shape smoke, matching the
+        legacy driver). Token 0 comes from the shared anchor prefill;
+        ensemble fan-out statistics start at token 1."""
+        cfg = self.cfg
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if prompt is None:
+            prompt = jax.random.randint(
+                key, (batch, prompt_len), 0, cfg.vocab_size, jnp.int32)
+        B, S = prompt.shape
+        total = S + gen
+        enc_embeds, enc_out = self._encoder_inputs(key, B)
+
+        t0 = time.time()
+        logits0, caches = ensemble_prefill(
+            self.draws, cfg, prompt, total, enc_embeds=enc_embeds)
+        # token 0: the anchor's logits as a one-draw ensemble (the shared
+        # prefill means there is no fan-out to aggregate yet)
+        stats = [predictive_stats(logits0[None])]
+        prefill_s = time.time() - t0
+
+        if enc_out is not None:
+            step = jax.jit(lambda d, c, t, p: ensemble_decode_step(
+                d, cfg, c, t, p, enc_out=enc_out))
+        else:
+            step = jax.jit(lambda d, c, t, p: ensemble_decode_step(
+                d, cfg, c, t, p))
+        t0 = time.time()
+        tok = stats[0].token[:, None]
+        for t in range(S, total - 1):
+            pos = jnp.full((B,), t, jnp.int32)
+            logits_k, caches = step(self.draws, caches, tok, pos)
+            stats.append(predictive_stats(logits_k))
+            tok = stats[-1].token[:, None]
+        decode_s = time.time() - t0
+
+        col = lambda f: jnp.stack(  # noqa: E731
+            [f(s) for s in stats], axis=1)
+        return ServeResult(
+            tokens=col(lambda s: s.token),
+            mean_logprob=col(lambda s: s.mean_logprob),
+            entropy=col(lambda s: s.entropy),
+            mutual_info=col(lambda s: s.mutual_info),
+            token_var=col(lambda s: s.token_var),
+            n_draws=self.n_draws, prefill_s=prefill_s,
+            decode_s=decode_s)

@@ -216,3 +216,34 @@ def chain_specs(tree: PyTree) -> PyTree:
 
 def chain_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree.map(lambda _: NamedSharding(mesh, P(CHAIN_AXIS)), tree)
+
+
+# ---------------------------------------------------------------------------
+# ensemble-serving layout: K posterior draws served as a batched ensemble.
+# The draw axis rides the SAME mesh axis the chains sampled on ('data') —
+# a K-draw serving fleet is placed exactly like a K-chain sampling run, so
+# the streaming chain→server path hands draws across without relayout.
+# Params, decode caches, and recurrent states all lead with (K, ...);
+# within a draw the serving layout (param_specs(serve=True)) still
+# applies on 'model'.
+# ---------------------------------------------------------------------------
+
+ENSEMBLE_AXIS = CHAIN_AXIS
+
+
+def ensemble_spec() -> P:
+    """PartitionSpec prefix placing a leading draw axis on 'data'."""
+    return P(ENSEMBLE_AXIS)
+
+
+def ensemble_specs(tree: PyTree) -> PyTree:
+    """Per-leaf draw-axis specs for (K, ...) stacked draws / caches."""
+    return jax.tree.map(lambda _: P(ENSEMBLE_AXIS), tree)
+
+
+def ensemble_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
+    """NamedShardings for a stacked-draw tree; requires
+    K % mesh.shape['data'] == 0 (callers fall back to replication
+    otherwise — an uneven ensemble never crashes the server)."""
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, P(ENSEMBLE_AXIS)), tree)

@@ -5,8 +5,6 @@ Contracts under test:
   * ``FSGLD.sample`` is BIT-IDENTICAL to the ``run_vmap`` oracle for all
     three methods across all three executors (the facade routes every
     workload through the chain engine and adds nothing to the math);
-  * the deprecation shims (``FederatedSampler``, ``make_federated_round``)
-    warn exactly once and produce bit-identical samples to the facade;
   * odd chain counts run on multi-device data axes (pad + mask) with the
     REAL chains' RNG streams equal to the oracle's;
   * ``kernel='sghmc'`` routes federated SGHMC through the same engine;
@@ -16,7 +14,6 @@ Contracts under test:
 import os
 import subprocess
 import sys
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -109,99 +106,6 @@ def test_facade_ragged_client_list_input():
     tr = f.sample(jax.random.PRNGKey(3), jnp.zeros(3))
     assert tr.shape == (2, 6, 3)
     assert bool(jnp.all(jnp.isfinite(tr)))
-
-
-# ---------------------------------------------------------------------------
-# deprecation shims: warn once, bit-identical to the facade
-# ---------------------------------------------------------------------------
-
-def test_federated_sampler_shim_warns_once_and_matches_facade():
-    import repro.core.federated as fed
-    data, bank = _problem(jax.random.PRNGKey(0))
-    fed._deprecation_warned = False
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        old = _legacy("fsgld", data, bank)
-        _legacy("dsgld", data, bank)  # second construction: no new warning
-        dep = [x for x in w if issubclass(x.category, DeprecationWarning)
-               and "FederatedSampler" in str(x.message)]
-    assert len(dep) == 1, [str(x.message) for x in w]
-    a = old.run(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
-    b = _facade("fsgld", data, bank).sample(jax.random.PRNGKey(7),
-                                            jnp.zeros(3))
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-
-def test_make_federated_round_shim_warns_once_and_matches_facade():
-    """The retired large-model round: the shim delegates to the chain
-    engine, so one shim round == one facade round, bitwise — on real
-    token shards with a real (tiny) transformer posterior."""
-    import repro.launch.steps as steps
-    from repro.configs import get_smoke_config
-    from repro.data import token_shards
-    from repro.launch.mesh import make_host_mesh
-    from repro.models import init_params, log_lik_fn
-
-    cfg = get_smoke_config("qwen3-1.7b")
-    sampler = SamplerConfig(method="dsgld", step_size=1e-6, num_shards=4,
-                            local_updates=2)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    shards = token_shards(jax.random.PRNGKey(1), num_shards=4,
-                          shard_size=16, seq_len=16,
-                          vocab_size=cfg.vocab_size)
-    C = 2
-    chains = jax.tree.map(
-        lambda t: jnp.broadcast_to(t[None], (C,) + t.shape), params)
-
-    steps._federated_round_warned = False
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        rnd = steps.make_federated_round(cfg, sampler, make_host_mesh(),
-                                         n_chains=C, minibatch=4)
-        steps.make_federated_round(cfg, sampler, make_host_mesh(),
-                                   n_chains=C, minibatch=4)
-        dep = [x for x in w if issubclass(x.category, DeprecationWarning)
-               and "make_federated_round" in str(x.message)]
-    assert len(dep) == 1, [str(x.message) for x in w]
-
-    got = rnd(chains, None, shards, jax.random.PRNGKey(7))
-    f = api.FSGLD(
-        api.Posterior(lambda p, b: log_lik_fn(p, cfg, b),
-                      prior_precision=sampler.prior_precision),
-        shards, minibatch=4, step_size=1e-6, method="dsgld",
-        schedule=api.Schedule(rounds=1, local_steps=2, n_chains=C,
-                              reassign="permutation"),
-        execution=api.Execution(collect=False))
-    ref = f.sample(jax.random.PRNGKey(7), params)
-    jax.tree.map(
-        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
-                                                   np.asarray(b)),
-        got, ref)
-
-    # handing the round a DIFFERENT bank must rebuild the engine (a stale
-    # cache would silently keep sampling with the old surrogates)
-    from repro.core.surrogate import make_bank as mk
-    # per-shard means OFFSET from the chain state: at theta == mu the
-    # conducive term is exactly zero and fsgld degenerates to dsgld
-    means = jax.tree.map(
-        lambda p: (jnp.broadcast_to(p[None], (4,) + p.shape)
-                   + jnp.arange(1.0, 5.0).reshape((4,) + (1,) * p.ndim)),
-        params)
-    precs = jax.tree.map(lambda p: jnp.full((4,), 0.5), params)
-    bank = mk(means, precs, "scalar")
-    sampler_f = SamplerConfig(method="fsgld", step_size=1e-6,
-                              num_shards=4, local_updates=2)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        rnd2 = steps.make_federated_round(cfg, sampler_f, make_host_mesh(),
-                                          n_chains=C, minibatch=4)
-    out_nobank = rnd2(chains, None, shards, jax.random.PRNGKey(9))
-    out_bank = rnd2(chains, bank, shards, jax.random.PRNGKey(9))
-    # same key, different surrogate state -> different samples
-    assert any(
-        not np.array_equal(np.asarray(a), np.asarray(b))
-        for a, b in zip(jax.tree.leaves(out_nobank),
-                        jax.tree.leaves(out_bank)))
 
 
 # ---------------------------------------------------------------------------

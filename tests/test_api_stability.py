@@ -32,7 +32,7 @@ def _params(obj):
 # The snapshot. Field ORDER is part of the contract (positional calls);
 # (name, has_default) pairs catch silently-added required arguments.
 EXPECTED_ALL = ("Posterior", "SurrogateSpec", "Schedule", "Execution",
-                "Federation", "FSGLD", "fit_bank_local_sgld",
+                "Federation", "Serving", "FSGLD", "fit_bank_local_sgld",
                 "get_scenario")
 
 EXPECTED_SIGNATURES = {
@@ -53,9 +53,16 @@ EXPECTED_SIGNATURES = {
               ("schedule", True), ("execution", True),
               ("shard_probs", True), ("sizes", True),
               ("federation", True)),
+    "Serving": (("draws", True), ("arch", True), ("smoke", True),
+                ("batch", True), ("prompt_len", True), ("gen", True),
+                ("mesh", True), ("collect", True)),
     "FSGLD.sample": (("key", False), ("theta0", False), ("rounds", True),
                      ("n_chains", True), ("federation", True)),
     "FSGLD.fit": (("key", False), ("theta0", False)),
+    "FSGLD.serve": (("spec", False), ("bank", True), ("draws", True),
+                    ("seed", True)),
+    "FSGLD.load_bank": (("path", False), ("like", False), ("k", True),
+                        ("expect_arch", True)),
     "get_scenario": (("name_or_spec", False),),
     "fit_bank_local_sgld": (("log_lik_fn", False), ("shard_data", False),
                             ("theta0", False), ("key", False),
@@ -89,17 +96,26 @@ def test_signature_snapshot(name):
 # README quickstart doctest
 # ---------------------------------------------------------------------------
 
-def _readme_api_block() -> str:
+def _readme_block(section: str) -> str:
     text = open(os.path.join(REPO, "README.md")).read()
-    m = re.search(r"^## API$(.*?)^## ", text, re.M | re.S)
-    assert m, "README has no '## API' section"
+    m = re.search(rf"^## {section}$(.*?)^## ", text, re.M | re.S)
+    assert m, f"README has no '## {section}' section"
     code = re.search(r"```python\n(.*?)```", m.group(1), re.S)
-    assert code, "README '## API' section has no python quickstart block"
+    assert code, f"README '## {section}' has no python quickstart block"
     return code.group(1)
 
 
 def test_readme_quickstart_runs():
     """Exec the README quickstart verbatim: its asserts are the test."""
-    src = _readme_api_block()
+    src = _readme_block("API")
     assert "api.FSGLD(" in src and "sample(" in src
     exec(compile(src, "README.md:<api-quickstart>", "exec"), {})
+
+
+def test_readme_serving_quickstart_runs():
+    """Exec the README '## Serving' quickstart verbatim: draw bank with
+    provenance envelopes -> K-draw ensemble server -> uncertainty-bearing
+    generate -> hot-swap no-op. Its asserts are the test."""
+    src = _readme_block("Serving")
+    assert "FSGLD.serve(" in src and "save_draw(" in src
+    exec(compile(src, "README.md:<serving-quickstart>", "exec"), {})

@@ -1,0 +1,159 @@
+"""Calibration metrics (repro/eval/calibration.py) against ANALYTIC
+goldens: every metric is checked on inputs whose value is known in
+closed form, plus the structural facts the bench gates rely on (ensemble
+NLL beats the mean single-draw NLL by Jensen; coverage brackets the
+nominal level for a correct posterior)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.eval import (ece_binary, ece_from_probs, interval_coverage,
+                        nll_categorical, nll_gaussian_mixture)
+
+
+# ---------------------------------------------------------------------------
+# NLL
+# ---------------------------------------------------------------------------
+
+def test_nll_categorical_analytic():
+    # predictive puts 0.8 on the true class for every example:
+    # NLL == -log 0.8 exactly
+    probs = np.array([[[0.8, 0.2]] * 5])  # (K=1, N=5, C=2)
+    labels = np.zeros(5, np.int64)
+    assert nll_categorical(probs, labels) == pytest.approx(
+        -np.log(0.8), rel=1e-12)
+
+
+def test_nll_categorical_is_bma_not_mean_of_nlls():
+    # two draws, p_true 0.9 and 0.1: BMA NLL = -log 0.5, NOT
+    # mean(-log .9, -log .1)
+    probs = np.array([[[0.9, 0.1]], [[0.1, 0.9]]])  # (2, 1, 2)
+    labels = np.zeros(1, np.int64)
+    assert nll_categorical(probs, labels) == pytest.approx(
+        -np.log(0.5), rel=1e-12)
+
+
+def test_ensemble_nll_beats_mean_single_draw_nll():
+    """Jensen: -log p̄ <= mean_k(-log p_k) — the inequality the whole
+    K-draw serving stack banks on, on random simplex points."""
+    key = jax.random.PRNGKey(0)
+    K, N, C = 8, 64, 10
+    logits = jax.random.normal(key, (K, N, C)) * 3
+    probs = jax.nn.softmax(logits, -1)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, C)
+    ens = nll_categorical(probs, labels)
+    singles = [nll_categorical(probs[k:k + 1], labels) for k in range(K)]
+    assert ens <= np.mean(singles) + 1e-12
+
+
+def test_nll_gaussian_mixture_k1_analytic():
+    # K=1, y == mu, sigma=1: NLL = 0.5*log(2*pi)
+    mu = np.zeros((1, 7))
+    sig = np.ones((1, 7))
+    y = np.zeros(7)
+    assert nll_gaussian_mixture(mu, sig, y) == pytest.approx(
+        0.5 * np.log(2 * np.pi), rel=1e-12)
+
+
+def test_nll_gaussian_mixture_two_components_analytic():
+    # mixture of N(-1,1) and N(+1,1) scored at y=0:
+    # p = exp(-0.5)/sqrt(2*pi) for both components -> same as K=1 at
+    # distance 1
+    mu = np.array([[-1.0], [1.0]])
+    sig = np.ones((2, 1))
+    want = 0.5 + 0.5 * np.log(2 * np.pi)
+    assert nll_gaussian_mixture(mu, sig, np.zeros(1)) == pytest.approx(
+        want, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# ECE
+# ---------------------------------------------------------------------------
+
+def test_ece_perfectly_calibrated_is_zero():
+    # conf 0.75 everywhere, exactly 75% correct -> ECE 0
+    probs = np.array([[[0.75, 0.25]] * 4])
+    labels = np.array([0, 0, 0, 1])
+    assert ece_from_probs(probs, labels) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_ece_fully_overconfident_analytic():
+    # conf 1.0 everywhere, 50% correct -> ECE = |0.5 - 1.0| = 0.5
+    probs = np.array([[[1.0, 0.0]] * 4])
+    labels = np.array([0, 0, 1, 1])
+    assert ece_from_probs(probs, labels) == pytest.approx(0.5, rel=1e-12)
+
+
+def test_ece_two_bin_weighted_mix_analytic():
+    # bin A: 2 examples at conf .95, both correct -> |1 - .95| = .05
+    # bin B: 2 examples at conf .55, none correct -> |0 - .55| = .55
+    # ECE = .5*.05 + .5*.55 = 0.30
+    probs = np.array([[[0.95, 0.05], [0.95, 0.05],
+                       [0.55, 0.45], [0.55, 0.45]]])
+    labels = np.array([0, 0, 1, 1])
+    assert ece_from_probs(probs, labels) == pytest.approx(0.30, rel=1e-12)
+
+
+def test_ece_binary_matches_two_column():
+    key = jax.random.PRNGKey(2)
+    p1 = jax.nn.sigmoid(jax.random.normal(key, (3, 50)))
+    labels = jax.random.randint(jax.random.PRNGKey(3), (50,), 0, 2)
+    p1_64 = np.asarray(p1, np.float64)
+    two_col = np.stack([1.0 - p1_64, p1_64], -1)
+    assert ece_binary(p1, labels) == pytest.approx(
+        ece_from_probs(two_col, labels), rel=1e-12)
+
+
+def test_ece_averaging_disagreeing_draws_calibrates():
+    """Two overconfident draws that disagree average to a calibrated
+    predictive: ensemble ECE < each draw's ECE (the mechanism by which
+    BMA fixes calibration)."""
+    # draw 1 says class 0 w.p. .99, draw 2 says class 1 w.p. .99;
+    # truth is 50/50
+    N = 40
+    d1 = np.tile([[0.99, 0.01]], (N, 1))
+    d2 = np.tile([[0.01, 0.99]], (N, 1))
+    probs = np.stack([d1, d2])  # (2, N, 2)
+    labels = np.array([0, 1] * (N // 2))
+    ens = ece_from_probs(probs, labels)
+    singles = [ece_from_probs(probs[k:k + 1], labels) for k in range(2)]
+    assert ens < min(singles) - 0.2
+
+
+# ---------------------------------------------------------------------------
+# predictive-interval coverage
+# ---------------------------------------------------------------------------
+
+def test_coverage_exact_posterior_near_nominal():
+    # targets drawn from the same distribution as the samples: central
+    # 90% interval must cover ~90%
+    key = jax.random.PRNGKey(4)
+    s = jax.random.normal(key, (4000, 500))
+    y = jax.random.normal(jax.random.PRNGKey(5), (500,))
+    cov = interval_coverage(s, y, level=0.9)
+    assert 0.85 < cov < 0.95, cov
+
+
+def test_coverage_degenerate_interval_analytic():
+    # all samples equal 0: the interval is the point {0} -> covers
+    # exactly the targets equal to 0
+    s = np.zeros((10, 4))
+    y = np.array([0.0, 0.0, 1.0, -1.0])
+    assert interval_coverage(s, y, level=0.9) == pytest.approx(0.5)
+
+
+def test_coverage_overconfident_posterior_undercovers():
+    # posterior 10x too narrow: coverage collapses far below nominal
+    key = jax.random.PRNGKey(6)
+    s = 0.1 * jax.random.normal(key, (2000, 400))
+    y = jax.random.normal(jax.random.PRNGKey(7), (400,))
+    assert interval_coverage(s, y, level=0.9) < 0.3
+
+
+def test_nll_and_ece_accept_jax_arrays():
+    probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(8),
+                                             (2, 30, 5)), -1)
+    labels = jnp.zeros((30,), jnp.int32)
+    assert np.isfinite(nll_categorical(probs, labels))
+    assert np.isfinite(ece_from_probs(probs, labels))

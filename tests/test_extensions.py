@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, FederatedSGHMC, Gaussian,
+from repro.core import (FederatedSGHMC, Gaussian,
                         analytic_gaussian_likelihood_surrogate,
                         conducive_gradient, ess, fit_bank_linear, make_bank,
                         refresh_bank, rhat, summarize)
@@ -74,11 +75,14 @@ def test_refresh_bank_gradient_matching(problem):
 
 def test_adaptive_refresh_run(problem):
     data, bank, post_mean = problem
-    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=10,
-                        local_updates=100, prior_precision=1.0)
-    samp = FederatedSampler(log_lik, cfg, data, minibatch=10, bank=bank)
-    tr = samp.run(jax.random.PRNGKey(2), jnp.zeros(2), 100, n_chains=1,
-                  collect_every=10, refresh_every=25)[0]
+    samp = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=10,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank,
+                                    refresh_every=25),
+        schedule=api.Schedule(rounds=100, local_steps=100, n_chains=1,
+                              thin=10))
+    tr = samp.sample(jax.random.PRNGKey(2), jnp.zeros(2))[0]
     tr = tr[tr.shape[0] // 2:]
     mse = float(jnp.sum((tr.mean(0) - post_mean) ** 2))
     assert mse < 1e-3, mse
@@ -92,11 +96,13 @@ def test_linear_surrogates_zero_mean_and_stable(problem):
                                        bank.shard(s), f)
                 for s in range(10))
     np.testing.assert_allclose(np.asarray(total), 0.0, atol=1e-2)
-    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=10,
-                        local_updates=100, prior_precision=1.0)
-    samp = FederatedSampler(log_lik, cfg, data, minibatch=10, bank=bank)
-    tr = samp.run(jax.random.PRNGKey(3), jnp.zeros(2), 100, n_chains=1,
-                  collect_every=10)[0]
+    samp = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=10,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind=bank.kind, bank=bank),
+        schedule=api.Schedule(rounds=100, local_steps=100, n_chains=1,
+                              thin=10))
+    tr = samp.sample(jax.random.PRNGKey(3), jnp.zeros(2))[0]
     assert bool(jnp.all(jnp.isfinite(tr)))
     mse = float(jnp.sum((tr[tr.shape[0] // 2:].mean(0) - post_mean) ** 2))
     assert mse < 5e-3, mse

@@ -56,10 +56,11 @@ def test_mesh_engine_bitmatches_legacy_vmap(method):
     data, bank = _problem(jax.random.PRNGKey(0))
     cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=5,
                         local_updates=5, prior_precision=1.0)
-    samp = FederatedSampler(log_lik, cfg, data, minibatch=8,
-                            bank=bank if method == "fsgld" else None)
+    use_bank = bank if method == "fsgld" else None
+    samp = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=use_bank)
     a = samp.run_vmap(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
-    b = samp.run(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=8, bank=use_bank)
+    b = eng.run(jax.random.PRNGKey(7), jnp.zeros(3), 4, n_chains=4)
     assert a.shape == b.shape == (4, 20, 3)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -71,8 +72,9 @@ def test_mesh_engine_bitmatches_legacy_permutation_mode():
     samp = FederatedSampler(log_lik, cfg, data, minibatch=8, bank=bank)
     a = samp.run_vmap(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=4,
                       reassign="permutation")
-    b = samp.run(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=4,
-                 reassign="permutation")
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=8, bank=bank)
+    b = eng.run(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=4,
+                reassign="permutation")
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -89,8 +91,10 @@ def test_block_cyclic_permutation_nchains_gt_shards(use_kernel):
                             use_kernel=use_kernel)
     a = samp.run_vmap(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=7,
                       reassign="permutation")
-    b = samp.run(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=7,
-                 reassign="permutation")
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=8, bank=bank,
+                          use_kernel=use_kernel)
+    b = eng.run(jax.random.PRNGKey(3), jnp.zeros(3), 3, n_chains=7,
+                reassign="permutation")
     assert a.shape == b.shape == (7, 9, 3)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 

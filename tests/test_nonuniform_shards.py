@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, ShardScheme,
+from repro.core import (ShardScheme,
                         analytic_gaussian_likelihood_surrogate,
                         make_bank, make_drift_fn)
 
@@ -51,12 +52,13 @@ def test_fsgld_converges_nonuniform_fs():
     post_mean = x.reshape(-1, d).sum(0) / (1 + S * n)
     mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
     bank = make_bank(mu_s, prec_s, "diag")
-    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
-                        shard_probs=probs, local_updates=50,
-                        prior_precision=1.0)
-    samp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=10, bank=bank)
-    tr = samp.run(jax.random.PRNGKey(2), jnp.zeros(d), 400, n_chains=1,
-                  collect_every=10)[0]
+    samp = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+        minibatch=10, step_size=1e-4, shard_probs=probs,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=400, local_steps=50, n_chains=1,
+                              thin=10))
+    tr = samp.sample(jax.random.PRNGKey(2), jnp.zeros(d))[0]
     tr = tr[tr.shape[0] // 2:]
     mse = float(jnp.sum((tr.mean(0) - post_mean) ** 2))
     assert mse < 1e-3, mse

@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import api
 from repro.configs.base import SamplerConfig
-from repro.core import (FederatedSampler, Gaussian, ShardScheme,
+from repro.core import (Gaussian, ShardScheme,
                         analytic_gaussian_likelihood_surrogate,
                         conducive_gradient, fit_gaussian, make_bank,
                         make_drift_fn)
@@ -150,13 +151,15 @@ def gaussian_mean_runs():
     post_mean = x.reshape(-1, d).sum(0) / (1 + N)
     out = {}
     for method, local in [("sgld", 1), ("dsgld", 100), ("fsgld", 100)]:
-        cfg = SamplerConfig(method=method, step_size=1e-4, num_shards=S,
-                            local_updates=local, prior_precision=1.0)
-        samp = FederatedSampler(log_lik, cfg, {"x": x}, minibatch=10,
-                                bank=bank)
         rounds = 30000 // local
-        trace = samp.run(jax.random.PRNGKey(2), jnp.zeros(d), rounds,
-                         n_chains=1, collect_every=10)[0]
+        samp = api.FSGLD(
+            api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+            minibatch=10, step_size=1e-4, method=method,
+            surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                       if method == "fsgld" else None),
+            schedule=api.Schedule(rounds=rounds, local_steps=local,
+                                  n_chains=1, thin=10))
+        trace = samp.sample(jax.random.PRNGKey(2), jnp.zeros(d))[0]
         trace = trace[trace.shape[0] // 2:]
         out[method] = float(jnp.sum((trace.mean(0) - post_mean) ** 2))
     return out

@@ -1,0 +1,311 @@
+"""Bayesian ensemble serving (repro/serve) + draw banks (repro/checkpoint).
+
+Contracts under test:
+
+  * K=1 ensemble serving is BITWISE identical to the plain
+    prefill+decode loop — same tokens, same per-step logits (the
+    monotone-shift argument in repro/serve/ensemble.py, pinned);
+  * predictive_stats analytic facts: identical draws -> MI == 0 and
+    var == 0; K-fold aggregation in log space matches a direct fp32
+    computation;
+  * draw banks: versioned DrawMeta round-trip, freshest-K selection,
+    atomic completeness (a half-written draw is invisible), arch /
+    fingerprint mismatch REFUSED with a ValueError (never a shape
+    error), legacy single-checkpoint fallback;
+  * hot-swap: a server polling a bank picks up new draws between
+    requests, and refresh() is a no-op when nothing changed;
+  * the facade: api.Serving validation + FSGLD.serve / load_bank.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, checkpoint
+from repro.configs import get_smoke_config
+from repro.models import (broadcast_cache, decode_step, ensemble_decode_step,
+                          init_params, prefill_with_cache)
+from repro.serve import EnsembleServer, ensemble_prefill, predictive_stats
+
+ARCH = "h2o-danube-1.8b"  # smallest smoke config
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, B=2, S=4):
+    return jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# K=1 bitwise parity with the single-draw path
+# ---------------------------------------------------------------------------
+
+def test_k1_serving_bitwise_matches_legacy_loop(cfg, params):
+    B, S, G = 2, 4, 4
+    prompt = _prompt(cfg, B, S)
+    total = S + G
+
+    # legacy path: plain prefill + decode_step greedy loop
+    logits, cache = prefill_with_cache(params, cfg, prompt, total)
+    legacy_tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    legacy_logits = []
+    tok = legacy_tokens[0][:, None]
+    for t in range(S, total - 1):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, cache = decode_step(params, cfg, cache, tok, pos)
+        legacy_logits.append(logits)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        legacy_tokens.append(tok[:, 0])
+
+    # ensemble path with K=1
+    draws = jax.tree.map(lambda l: l[None], params)
+    logits0, caches = ensemble_prefill(draws, cfg, prompt, total)
+    stats = [predictive_stats(logits0[None])]
+    tok = stats[0].token[:, None]
+    for t in range(S, total - 1):
+        pos = jnp.full((B,), t, jnp.int32)
+        lk, caches = ensemble_decode_step(draws, cfg, caches, tok, pos)
+        np.testing.assert_array_equal(  # per-step logits, bitwise
+            np.asarray(lk[0]), np.asarray(legacy_logits[t - S]))
+        stats.append(predictive_stats(lk))
+        tok = stats[-1].token[:, None]
+
+    for s, ref in zip(stats, legacy_tokens):
+        np.testing.assert_array_equal(np.asarray(s.token),
+                                      np.asarray(ref))
+
+
+def test_k1_server_matches_legacy_loop_end_to_end(cfg, params):
+    B, S, G = 2, 4, 4
+    prompt = _prompt(cfg, B, S)
+    total = S + G
+    logits, cache = prefill_with_cache(params, cfg, prompt, total)
+    want = [jnp.argmax(logits, -1).astype(jnp.int32)]
+    tok = want[0][:, None]
+    for t in range(S, total - 1):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, cache = decode_step(params, cfg, cache, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        want.append(tok[:, 0])
+    srv = EnsembleServer(cfg, draws=jax.tree.map(lambda l: l[None], params))
+    res = srv.generate(prompt, gen=G)
+    np.testing.assert_array_equal(np.asarray(res.tokens),
+                                  np.stack([np.asarray(w) for w in want], 1))
+    # single draw: zero epistemic uncertainty, exactly
+    assert np.all(np.asarray(res.mutual_info) == 0.0)
+    assert np.all(np.asarray(res.token_var) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# predictive_stats analytic facts
+# ---------------------------------------------------------------------------
+
+def test_identical_draws_have_zero_epistemic_uncertainty():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, 3, 17))
+    stacked = jnp.concatenate([logits] * 4, 0)  # 4 identical draws
+    s = predictive_stats(stacked)
+    np.testing.assert_allclose(np.asarray(s.mutual_info), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s.token_var), 0.0, atol=1e-12)
+    # and the aggregate equals the single draw's
+    s1 = predictive_stats(logits)
+    np.testing.assert_array_equal(np.asarray(s.token), np.asarray(s1.token))
+    np.testing.assert_allclose(np.asarray(s.entropy),
+                               np.asarray(s1.entropy), rtol=1e-6)
+
+
+def test_predictive_stats_matches_direct_fp32_mean():
+    K, B, V = 5, 2, 11
+    logits = jax.random.normal(jax.random.PRNGKey(1), (K, B, V)) * 2
+    s = predictive_stats(logits)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    mean_probs = probs.mean(0)
+    np.testing.assert_array_equal(
+        np.asarray(s.token), np.asarray(jnp.argmax(mean_probs, -1)))
+    want_h = -jnp.sum(mean_probs * jnp.log(mean_probs), -1)
+    np.testing.assert_allclose(np.asarray(s.entropy), np.asarray(want_h),
+                               rtol=1e-5)
+    assert np.all(np.asarray(s.mutual_info) > -1e-6)  # BALD is >= 0
+
+
+def test_disagreeing_draws_have_positive_mutual_info():
+    # draw 0 is certain of class 0, draw 1 certain of class 1
+    logits = jnp.stack([jnp.array([[10.0, -10.0, 0.0]]),
+                        jnp.array([[-10.0, 10.0, 0.0]])])
+    s = predictive_stats(logits)
+    assert float(s.mutual_info[0]) > 0.5  # ~log 2 of pure disagreement
+    assert float(s.token_var[0]) > 0.2
+
+
+# ---------------------------------------------------------------------------
+# draw banks
+# ---------------------------------------------------------------------------
+
+def _meta(cfg, r=0):
+    return checkpoint.DrawMeta(method="fsgld", round=r,
+                               scenario="identity", seed=0,
+                               dtype="float32", arch=cfg.name)
+
+
+def test_draw_bank_roundtrip_with_meta(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    for r in range(3):
+        tree = jax.tree.map(lambda l, rr=r: l + rr, params)
+        checkpoint.save_draw(bank, tree, _meta(cfg, r), step=r)
+    assert len(checkpoint.list_draws(bank)) == 3
+    stacked, metas = checkpoint.load_bank(bank, params, k=2)
+    assert [m.round for m in metas] == [1, 2]  # freshest k, oldest first
+    leaf0 = jax.tree.leaves(params)[0]
+    got = jax.tree.leaves(stacked)[0]
+    np.testing.assert_array_equal(np.asarray(got[0]),
+                                  np.asarray(leaf0 + 1))
+    np.testing.assert_array_equal(np.asarray(got[1]),
+                                  np.asarray(leaf0 + 2))
+
+
+def test_draw_bank_refuses_arch_mismatch(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg))
+    with pytest.raises(ValueError, match="refused"):
+        checkpoint.load_bank(bank, params, expect_arch="other-arch")
+
+
+def test_draw_bank_refuses_fingerprint_mismatch(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg))
+    other = init_params(get_smoke_config("gemma-7b"), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="refused|names"):
+        checkpoint.load_bank(bank, other)
+
+
+def test_draw_bank_asks_too_many_draws(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg))
+    with pytest.raises(ValueError, match="requested"):
+        checkpoint.load_bank(bank, params, k=5)
+
+
+def test_half_written_draw_is_invisible(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg))
+    # simulate a crashed writer: a draw dir without a manifest
+    os.makedirs(os.path.join(bank, "draw-000001"))
+    assert len(checkpoint.list_draws(bank)) == 1
+    stacked, metas = checkpoint.load_bank(bank, params)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 1
+
+
+def test_legacy_checkpoint_reads_as_one_draw_bank(tmp_path, cfg, params):
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, params, step=7, extra={"method": "fsgld"})
+    stacked, metas = checkpoint.load_bank(path, params)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 1
+    assert metas == [None] or metas[0] is not None  # meta optional
+    srv = EnsembleServer(cfg, bank=path)
+    assert srv.n_draws == 1
+    assert srv.refresh() is False  # nothing new to pick up
+
+
+def test_checkpoint_v2_meta_roundtrip(tmp_path, cfg, params):
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, params, step=3, meta=_meta(cfg, r=3))
+    meta = checkpoint.read_meta(path)
+    assert meta.arch == cfg.name and meta.round == 3
+    assert meta.config_hash == checkpoint.tree_fingerprint(params)
+    tree, step, extra = checkpoint.restore(path, params)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_name_mismatch_is_value_error(tmp_path, cfg, params):
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, params, step=0)
+    other = init_params(get_smoke_config("rwkv6-7b"), jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, other)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap
+# ---------------------------------------------------------------------------
+
+def test_server_hot_swaps_fresh_draws(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg, 0))
+    srv = EnsembleServer(cfg, bank=bank)
+    assert srv.n_draws == 1
+    assert srv.refresh() is False  # nothing new
+    checkpoint.save_draw(bank, jax.tree.map(lambda l: l + 1, params),
+                         _meta(cfg, 1))
+    assert srv.refresh() is True  # picked up without restart
+    assert srv.n_draws == 2
+    assert [m.round for m in srv.metas] == [0, 1]
+    assert srv.refresh() is False
+
+
+def test_server_bank_want_k_serves_freshest(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg, 0))
+    # n_draws=2 wanted but only 1 available: serve what exists
+    srv = EnsembleServer(cfg, bank=bank, n_draws=2)
+    assert srv.n_draws == 1
+    for r in (1, 2):
+        checkpoint.save_draw(bank, jax.tree.map(lambda l, rr=r: l + rr,
+                                                params), _meta(cfg, r))
+    assert srv.refresh() is True
+    assert srv.n_draws == 2
+    assert [m.round for m in srv.metas] == [1, 2]  # freshest two
+
+
+def test_server_refuses_mismatched_bank(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    checkpoint.save_draw(bank, params, _meta(cfg))
+    other_cfg = get_smoke_config("gemma-7b")
+    with pytest.raises(ValueError, match="refused|names"):
+        EnsembleServer(other_cfg, bank=bank)
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+def test_serving_spec_validation():
+    with pytest.raises(ValueError, match="draws"):
+        api.Serving(draws=0)
+    with pytest.raises(ValueError, match="collect"):
+        api.Serving(collect=("mean", "nope"))
+    s = api.Serving(draws=2, collect=("entropy",))
+    assert s.draws == 2
+
+
+def test_fsgld_serve_and_load_bank(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    for r in range(2):
+        checkpoint.save_draw(bank, jax.tree.map(lambda l, rr=r: l + rr,
+                                                params), _meta(cfg, r))
+    spec = api.Serving(draws=2, arch=ARCH, batch=2, prompt_len=4, gen=3)
+    srv = api.FSGLD.serve(spec, bank=bank)
+    assert srv.n_draws == 2
+    res = srv.generate(gen=3, batch=2, prompt_len=4)
+    assert res.tokens.shape == (2, 3)
+    assert np.all(np.isfinite(np.asarray(res.entropy)))
+    assert np.all(np.isfinite(np.asarray(res.mean_logprob)))
+
+    stacked, metas = api.FSGLD.load_bank(bank, params, k=1,
+                                         expect_arch=cfg.name)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 1
+    assert metas[0].round == 1
+
+    srv2 = api.FSGLD.serve(spec, draws=stacked)
+    assert srv2.n_draws == 1

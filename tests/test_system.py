@@ -41,6 +41,28 @@ def test_serve_driver_runs():
                  "--prompt-len", "4", "--gen", "3"]) == 0
 
 
+def test_train_draw_bank_then_ensemble_serve(tmp_path):
+    """The streaming chain→server path end to end: train writes
+    DrawMeta-enveloped draws into a versioned bank, serve answers with
+    the K-draw ensemble from the same directory."""
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train import main as train_main
+    bank = str(tmp_path / "bank")
+    rc = train_main(["--arch", "h2o-danube-1.8b", "--smoke", "--method",
+                     "dsgld", "--rounds", "2", "--local-updates", "1",
+                     "--seq", "16", "--shard-size", "8", "--batch", "2",
+                     "--draw-bank", bank, "--bank-every", "1"])
+    assert rc == 0
+    draws = checkpoint.list_draws(bank)
+    assert len(draws) == 2
+    meta = checkpoint.read_meta(draws[-1])
+    assert meta.method == "dsgld" and meta.round == 2
+    assert meta.arch == "h2o-danube-1.8b"
+    assert serve_main(["--arch", "h2o-danube-1.8b", "--smoke", "--batch",
+                       "2", "--prompt-len", "4", "--gen", "3",
+                       "--draws", "2", "--bank", bank]) == 0
+
+
 def test_checkpoint_roundtrip(tmp_path):
     cfg = get_smoke_config("gemma-7b")
     params = init_params(cfg, jax.random.PRNGKey(0))
