@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from repro.configs.base import SamplerConfig
 from repro.core.engine import MeshChainEngine, pad_shards
 from repro.core.federated import fit_bank_fisher, refresh_bank
+from repro.core.health import Recovery, RunHealth
 from repro.core.surrogate import SurrogateBank, fit_scalar_tree, make_bank
 from repro.fed import Federation, get_scenario
 from repro.fed.partition import partition as partition_clients
@@ -58,7 +59,8 @@ LogLikFn = Callable[[PyTree, PyTree], jax.Array]
 
 __all__ = [
     "Posterior", "SurrogateSpec", "Schedule", "Execution", "Federation",
-    "Serving", "FSGLD", "fit_bank_local_sgld", "get_scenario",
+    "Recovery", "RunHealth", "Serving", "FSGLD", "fit_bank_local_sgld",
+    "get_scenario",
 ]
 
 _COLLECT_SIGNALS = ("mean", "entropy", "mutual_info", "variance")
@@ -160,14 +162,31 @@ class Execution:
       means are stored at this dtype — the large-model memory format.
     collect: False returns final chain states instead of a trace (the
       trace of a billion-parameter posterior does not fit anywhere).
+    recovery: a :class:`Recovery` policy (``repro.core.health``) — turns
+      on the in-scan chain health check; ``sample`` then returns
+      ``(result, RunHealth)``. None = no health tracking (bit-identical
+      to before).
+    snapshot_every / snapshot_path: atomically checkpoint the full scan
+      carry every that many rounds into the directory (preemption-safe;
+      resumable). resume: continue from the newest valid snapshot in
+      ``snapshot_path`` — traces are bitwise identical to an
+      uninterrupted run.
     """
     mesh: Any = None
     executor: str = "auto"
     dtype: Any = None
     collect: bool = True
+    recovery: Optional[Recovery] = None
+    snapshot_every: Optional[int] = None
+    snapshot_path: Optional[str] = None
+    resume: bool = False
 
     def __post_init__(self):
         assert self.executor in _EXECUTORS, self.executor
+        if (self.snapshot_every or self.resume) \
+                and not self.snapshot_path:
+            raise ValueError(
+                "Execution.snapshot_every/resume need snapshot_path")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -404,13 +423,16 @@ class FSGLD:
                     "data was split at construction; pass the partition "
                     "scenario to the FSGLD constructor instead")
         sched = self.schedule
+        exe = self.execution
         return self.engine.run(
             key, theta0, rounds if rounds is not None else sched.rounds,
             n_chains=(n_chains if n_chains is not None
                       else sched.n_chains),
             reassign=sched.reassign, collect_every=sched.thin,
             refresh_every=self.surrogate.refresh_every,
-            collect=self.execution.collect, federation=fed)
+            collect=exe.collect, federation=fed,
+            recovery=exe.recovery, snapshot_every=exe.snapshot_every,
+            snapshot_path=exe.snapshot_path, resume=exe.resume)
 
     # -- phase 3: serving the posterior ------------------------------------
 

@@ -1,4 +1,5 @@
 from repro.checkpoint.np_checkpoint import (  # noqa: F401
+    CorruptCheckpointError,
     DrawMeta,
     read_meta,
     restore,
@@ -9,4 +10,9 @@ from repro.checkpoint.draw_bank import (  # noqa: F401
     list_draws,
     load_bank,
     save_draw,
+)
+from repro.checkpoint.snapshot import (  # noqa: F401
+    latest_snapshot,
+    list_snapshots,
+    save_snapshot,
 )

@@ -23,12 +23,14 @@ from __future__ import annotations
 
 import os
 import re
+import warnings
 from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.np_checkpoint import (DrawMeta, read_meta, restore,
+from repro.checkpoint.np_checkpoint import (CorruptCheckpointError,
+                                            DrawMeta, read_meta, restore,
                                             save, tree_fingerprint)
 
 PyTree = Any
@@ -80,27 +82,52 @@ def load_bank(bank_dir: str, like: PyTree, *, k: Optional[int] = None,
     ``like`` (the serving skeleton from ``init_params``), and when
     ``expect_arch`` is given every DrawMeta.arch must agree — a
     mismatched bank raises ValueError up front instead of shape-erroring
-    halfway through a prefill. Returns (stacked tree with (K, ...)
-    leaves, per-draw metas oldest→freshest; metas are None for legacy
-    draws)."""
+    halfway through a prefill.
+
+    Degradation contract: a CORRUPT draw (torn write, truncated/garbled
+    arrays, content-hash mismatch — :class:`CorruptCheckpointError`) is
+    skipped with a warning and an OLDER healthy draw backfills the
+    ensemble when available, so one bad write degrades the bank to the
+    healthy K-j draws instead of taking serving down. Only when the
+    directory holds no servable draw at all does this raise — naming the
+    directory and every per-draw refusal reason.
+
+    Returns (stacked tree with (K, ...) leaves, per-draw metas
+    oldest→freshest; metas are None for legacy draws)."""
     paths = list_draws(bank_dir)
     if not paths:
         # legacy fallback: the directory IS a single old-style checkpoint
         if os.path.exists(os.path.join(bank_dir, "manifest.json")):
             paths = [bank_dir]
-        else:
-            raise ValueError(f"no draws in bank {bank_dir!r}")
-    if k is not None:
-        if k > len(paths):
+        elif not os.path.isdir(bank_dir):
             raise ValueError(
-                f"bank {bank_dir!r} holds {len(paths)} draw(s), "
-                f"{k} requested")
-        paths = paths[-k:]
+                f"no draws in bank {bank_dir!r}: the directory does not "
+                "exist (pass a draw-bank dir written by repro.launch.train "
+                "--draw-bank, or a legacy single-checkpoint dir)")
+        else:
+            raise ValueError(
+                f"no draws in bank {bank_dir!r}: the directory exists but "
+                "holds no complete draw-NNNNNN checkpoint and no legacy "
+                "top-level manifest.json — the writer may not have "
+                "finished its first draw yet")
+    if k is not None and k > len(paths):
+        raise ValueError(
+            f"bank {bank_dir!r} holds {len(paths)} draw(s), "
+            f"{k} requested")
 
+    want_k = k if k is not None else len(paths)
     want = tree_fingerprint(like)
-    draws, metas = [], []
-    for p in paths:
-        meta = read_meta(p)
+    draws, metas, bad = [], [], []
+    # walk freshest -> oldest, backfilling past corrupt draws until the
+    # requested ensemble size is met (or the bank is exhausted)
+    for p in reversed(paths):
+        if len(draws) == want_k:
+            break
+        try:
+            meta = read_meta(p)
+        except CorruptCheckpointError as e:
+            bad.append((p, str(e)))
+            continue
         if meta is not None and meta.config_hash is not None \
                 and meta.config_hash != want:
             raise ValueError(
@@ -115,10 +142,25 @@ def load_bank(bank_dir: str, like: PyTree, *, k: Optional[int] = None,
                 f"server expects {expect_arch!r}")
         try:
             tree, _, _ = restore(p, like)
+        except CorruptCheckpointError as e:
+            bad.append((p, str(e)))
+            continue
         except ValueError as e:
             raise ValueError(f"draw bank refused: {e}") from e
         draws.append(tree)
         metas.append(meta)
+    if not draws:
+        reasons = "; ".join(f"{p}: {r}" for p, r in bad)
+        raise ValueError(
+            f"no servable draws in bank {bank_dir!r}: all "
+            f"{len(paths)} present draw(s) are corrupt ({reasons})")
+    if bad:
+        warnings.warn(
+            f"bank {bank_dir!r}: skipped {len(bad)} corrupt draw(s) "
+            f"({'; '.join(p for p, _ in bad)}); serving {len(draws)} of "
+            f"{want_k} requested draw(s)")
+    draws.reverse()            # oldest -> freshest, the documented order
+    metas.reverse()
     stacked = jax.tree.map(lambda *ls: jnp.stack(
         [jnp.asarray(l) for l in ls]), *draws)
     return stacked, metas

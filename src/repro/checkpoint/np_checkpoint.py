@@ -12,11 +12,22 @@ dtype — plus a structural ``config_hash`` of the parameter tree
 draw bank whose architecture/config does not match the model it is about
 to serve, instead of shape-erroring halfway through a prefill. Legacy
 (pre-envelope) checkpoints restore fine: ``meta`` comes back None.
+
+Every write is ATOMIC: the checkpoint is staged under a dot-prefixed
+temp directory and renamed into place (fresh target), or its files are
+``os.replace``d one by one (existing target) — and the manifest carries
+a content hash of the array payload (``arrays_sha256``), so a write
+preempted between the two replaces surfaces at restore time as a
+:class:`CorruptCheckpointError` instead of silently resuming from a
+torn state. Readers distinguish *corruption* (torn/garbled bytes —
+retryable, skippable in a bank) from *refusal* (wrong arch/config — a
+configuration error that must stop the caller).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import io
 import json
 import os
 from typing import Any, Optional
@@ -27,6 +38,14 @@ import numpy as np
 PyTree = Any
 
 SCHEMA = "repro-ckpt-v2"
+
+
+class CorruptCheckpointError(ValueError):
+    """The checkpoint's bytes are unreadable or torn (preempted write,
+    truncated file, content-hash mismatch) — as opposed to a REFUSAL
+    (wrong arch/config), which stays a plain ValueError. Bank readers
+    skip corrupt draws and degrade; resume loaders fall back to the
+    previous snapshot."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,29 +87,66 @@ def tree_fingerprint(tree: PyTree) -> str:
     return hashlib.sha256(blob).hexdigest()[:16]
 
 
+def _write_file(path: str, blob: bytes):
+    with open(path, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+
+
 def save(path: str, tree: PyTree, *, step: int = 0, extra: dict = None,
          meta: Optional[DrawMeta] = None):
-    """Write the tree + v2 envelope. ``meta`` (a DrawMeta) records draw
-    provenance; its config_hash is computed here when unset."""
-    os.makedirs(path, exist_ok=True)
+    """Write the tree + v2 envelope ATOMICALLY (staged under a
+    dot-prefixed temp dir, then renamed/replaced into place — a
+    preemption mid-save never leaves a half-written checkpoint where a
+    reader, or ``--resume``, expects a whole one). ``meta`` (a DrawMeta)
+    records draw provenance; its config_hash is computed here when
+    unset."""
     names, leaves, _ = _flatten_with_names(tree)
     arrays = {f"a{i}": np.asarray(jax.device_get(l))
               for i, l in enumerate(leaves)}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    blob = buf.getvalue()
     if meta is not None and meta.config_hash is None:
         meta = dataclasses.replace(meta, config_hash=tree_fingerprint(tree))
     manifest = {"schema": SCHEMA, "names": names, "step": step,
                 "extra": extra or {},
                 "fingerprint": tree_fingerprint(tree),
+                "arrays_sha256": hashlib.sha256(blob).hexdigest(),
                 "meta": dataclasses.asdict(meta) if meta is not None
                 else None}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    mblob = json.dumps(manifest).encode()
+
+    abspath = os.path.abspath(path)
+    parent, base = os.path.split(abspath)
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, f".tmp-{base}-{os.getpid()}")
+    os.makedirs(tmp, exist_ok=True)
+    _write_file(os.path.join(tmp, "arrays.npz"), blob)
+    _write_file(os.path.join(tmp, "manifest.json"), mblob)
+    if not os.path.exists(abspath):
+        # fresh target: publishing is ONE rename — fully atomic
+        os.rename(tmp, abspath)
+    else:
+        # in-place overwrite: replace file by file (arrays first). A
+        # preemption between the two replaces leaves a mixed pair, which
+        # restore() detects via arrays_sha256 and refuses as corrupt.
+        os.replace(os.path.join(tmp, "arrays.npz"),
+                   os.path.join(abspath, "arrays.npz"))
+        os.replace(os.path.join(tmp, "manifest.json"),
+                   os.path.join(abspath, "manifest.json"))
+        os.rmdir(tmp)
 
 
 def _read_manifest(path: str) -> dict:
-    with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)
+    except json.JSONDecodeError as e:
+        raise CorruptCheckpointError(
+            f"checkpoint manifest at {path!r} is not valid JSON "
+            f"(torn write?): {e}") from e
 
 
 def read_meta(path: str) -> Optional[DrawMeta]:
@@ -107,14 +163,41 @@ def restore(path: str, like: PyTree):
     """Restore into the structure of ``like`` (names must match). Reads
     both the v2 envelope and legacy manifests (no schema/meta keys).
     Returns (tree, step, extra) — use :func:`read_meta` for the
-    provenance envelope."""
+    provenance envelope.
+
+    Unreadable or torn bytes (missing/garbled arrays.npz, an
+    ``arrays_sha256`` that no longer matches — i.e. a save preempted
+    between its two file replaces) raise :class:`CorruptCheckpointError`;
+    a key-path mismatch (wrong model) stays a plain ValueError refusal.
+    """
     manifest = _read_manifest(path)
-    data = np.load(os.path.join(path, "arrays.npz"))
-    names, leaves, treedef = _flatten_with_names(like)
-    if names != manifest["names"]:
-        raise ValueError(
-            f"checkpoint/skeleton mismatch at {path}: the stored tree "
-            "has different key paths than the restore target")
-    new = [data[f"a{i}"] for i in range(len(leaves))]
+    apath = os.path.join(path, "arrays.npz")
+    try:
+        with open(apath, "rb") as f:
+            blob = f.read()
+    except OSError as e:
+        raise CorruptCheckpointError(
+            f"checkpoint at {path!r} has no readable arrays.npz: "
+            f"{e}") from e
+    want_sha = manifest.get("arrays_sha256")
+    if want_sha is not None and \
+            hashlib.sha256(blob).hexdigest() != want_sha:
+        raise CorruptCheckpointError(
+            f"checkpoint at {path!r} is torn: arrays.npz content hash "
+            "does not match its manifest (write preempted mid-replace?)")
+    try:
+        data = np.load(io.BytesIO(blob), allow_pickle=False)
+        names, leaves, treedef = _flatten_with_names(like)
+        if names != manifest["names"]:
+            raise ValueError(
+                f"checkpoint/skeleton mismatch at {path}: the stored tree "
+                "has different key paths than the restore target")
+        new = [data[f"a{i}"] for i in range(len(leaves))]
+    except ValueError:
+        raise
+    except Exception as e:  # truncated/garbled archive, missing entries
+        raise CorruptCheckpointError(
+            f"checkpoint arrays at {path!r} are unreadable "
+            f"({type(e).__name__}: {e})") from e
     tree = jax.tree_util.tree_unflatten(treedef, new)
     return tree, manifest["step"], manifest["extra"]

@@ -1,0 +1,84 @@
+"""Preemption-safe run snapshots: the full scan carry, atomically.
+
+A snapshot directory holds numbered checkpoints of EVERYTHING the
+sampler's scan carries across rounds — chain state, PRNG key, the
+federation carry (shard ids, compression reference/error), chain-health
+words, and the trace collected so far::
+
+    snaps/
+      snap-000004/ {arrays.npz, manifest.json}   # after round 4
+      snap-000008/ ...
+
+Each snapshot is written through the v2 checkpoint layer into a FRESH
+``snap-{round:06d}`` directory, so publishing is one rename — a
+preemption mid-save never leaves a torn snapshot where ``--resume``
+expects a whole one. Readers walk newest→oldest, skipping corrupt
+snapshots with a warning, so losing the latest write costs at most one
+snapshot interval, never the run.
+
+The payload is a flat dict of named arrays (``repro.core.engine``
+decides the keys); this module only guarantees atomicity, pruning, and
+newest-valid selection.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import warnings
+from typing import Any, Dict, Optional, Tuple
+
+from repro.checkpoint.np_checkpoint import (CorruptCheckpointError, restore,
+                                            save)
+
+PyTree = Any
+
+_SNAP_RE = re.compile(r"^snap-(\d{6})$")
+
+
+def _snap_dirname(r: int) -> str:
+    return f"snap-{r:06d}"
+
+
+def list_snapshots(snap_dir: str):
+    """(rounds_done, path) pairs of complete snapshots, oldest first."""
+    if not os.path.isdir(snap_dir):
+        return []
+    out = []
+    for name in sorted(os.listdir(snap_dir)):
+        m = _SNAP_RE.match(name)
+        path = os.path.join(snap_dir, name)
+        if m and os.path.exists(os.path.join(path, "manifest.json")):
+            out.append((int(m.group(1)), path))
+    return out
+
+
+def save_snapshot(snap_dir: str, payload: Dict[str, Any], *,
+                  rounds_done: int, keep: int = 2) -> str:
+    """Atomically publish the scan carry after ``rounds_done`` rounds,
+    then prune to the newest ``keep`` snapshots. Returns the snapshot
+    path."""
+    os.makedirs(snap_dir, exist_ok=True)
+    final = os.path.join(snap_dir, _snap_dirname(rounds_done))
+    if os.path.exists(final):          # re-running the same segment
+        shutil.rmtree(final)
+    save(final, payload, step=rounds_done)
+    for r, path in list_snapshots(snap_dir)[:-keep]:
+        shutil.rmtree(path, ignore_errors=True)
+    return final
+
+
+def latest_snapshot(snap_dir: str, like: Dict[str, Any]
+                    ) -> Tuple[Optional[Dict[str, Any]], int]:
+    """The newest VALID snapshot restored into ``like``'s structure, as
+    (payload, rounds_done) — or (None, 0) when the directory holds none.
+    Corrupt snapshots (torn writes) are skipped with a warning; a
+    structural mismatch (wrong run config) raises."""
+    for rounds_done, path in reversed(list_snapshots(snap_dir)):
+        try:
+            payload, step, _ = restore(path, like)
+        except CorruptCheckpointError as e:
+            warnings.warn(f"skipping corrupt snapshot {path!r}: {e}")
+            continue
+        return payload, int(step)
+    return None, 0

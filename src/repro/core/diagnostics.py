@@ -5,11 +5,42 @@ report chain quality and by tests to assert mixing. Conventions follow
 Gelman et al. (BDA3) / Vehtari et al. (2021): chains (C, N, ...) with
 C >= 1; statistics are computed per scalar dimension and reduced with max
 (R-hat) / min (ESS) for the headline number.
+
+Fault discipline: a non-finite trace makes every moment here NaN, and a
+NaN R-hat reads exactly like a converged one in a `< 1.01` assertion —
+so ``rhat``/``ess``/``summarize`` REFUSE non-finite traces loudly.
+Runs with quarantined chains pass ``mask`` (``RunHealth.healthy`` from
+the engine) to exclude them before the check; the statistics are then
+computed over the healthy chains only.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def _select(chains: jax.Array, mask, who: str) -> jax.Array:
+    """Apply the per-chain health mask, then refuse non-finite traces."""
+    if mask is not None:
+        mask = np.asarray(mask, bool)
+        if mask.shape != (chains.shape[0],):
+            raise ValueError(
+                f"health mask shape {mask.shape} != (n_chains,) = "
+                f"({chains.shape[0]},)")
+        if not mask.any():
+            raise ValueError(
+                f"{who}: health mask excludes every chain — no healthy "
+                "chains to diagnose")
+        chains = chains[np.flatnonzero(mask)]
+    if not bool(jnp.all(jnp.isfinite(chains))):
+        raise ValueError(
+            f"{who}: trace contains non-finite values — a NaN here would "
+            "silently poison the statistic. Run with a recovery policy "
+            "and pass mask=RunHealth.healthy to exclude diverged chains.")
+    return chains
 
 
 def _split_chains(x: jax.Array) -> jax.Array:
@@ -28,12 +59,16 @@ def _split_chains(x: jax.Array) -> jax.Array:
     return jnp.concatenate([x[:, :n], x[:, n:]], axis=0)
 
 
-def rhat(chains: jax.Array) -> jax.Array:
+def rhat(chains: jax.Array, *, mask: Optional[jax.Array] = None
+         ) -> jax.Array:
     """Split-R-hat per dimension. chains: (C, N, ...) -> (...).
 
     Needs N >= 4: split halves must hold >= 2 samples each for the
     ddof=1 within-chain variance to exist (shorter traces would return
-    NaN silently — refuse loudly instead)."""
+    NaN silently — refuse loudly instead). Non-finite traces are refused
+    too; ``mask`` (per-chain bool, ``RunHealth.healthy``) excludes
+    quarantined chains first."""
+    chains = _select(chains, mask, "rhat")
     if chains.shape[1] < 4:
         raise ValueError(
             f"rhat needs >= 4 samples per chain (got N={chains.shape[1]}): "
@@ -50,7 +85,8 @@ def rhat(chains: jax.Array) -> jax.Array:
     return jnp.sqrt(var_hat / jnp.maximum(W, 1e-30))
 
 
-def ess(chains: jax.Array, max_lag: int = 200) -> jax.Array:
+def ess(chains: jax.Array, max_lag: int = 200, *,
+        mask: Optional[jax.Array] = None) -> jax.Array:
     """Bulk effective sample size per dimension via the initial-positive
     autocorrelation-sum estimator. chains: (C, N, ...) -> (...).
 
@@ -58,7 +94,9 @@ def ess(chains: jax.Array, max_lag: int = 200) -> jax.Array:
     autocovariance at lags beyond half the trace averages over fewer
     than N/2 products and is pure noise — summing it would let a short
     trace report an arbitrarily wrong tau (the old N-1 clamp did exactly
-    that). Floor of 1 keeps N <= 4 traces defined (tau from lag 1)."""
+    that). Floor of 1 keeps N <= 4 traces defined (tau from lag 1).
+    Non-finite traces are refused; ``mask`` excludes unhealthy chains."""
+    chains = _select(chains, mask, "ess")
     x = chains.astype(jnp.float32)
     C, N = x.shape[:2]
     xc = x - x.mean(axis=1, keepdims=True)
@@ -78,9 +116,17 @@ def ess(chains: jax.Array, max_lag: int = 200) -> jax.Array:
     return C * N / jnp.maximum(tau, 1.0)
 
 
-def summarize(chains: jax.Array) -> dict:
-    """Headline diagnostics for a (C, N, D) trace."""
-    r = rhat(chains)
-    e = ess(chains)
-    return {"max_rhat": float(jnp.max(r)), "min_ess": float(jnp.min(e)),
-            "mean_ess": float(jnp.mean(e))}
+def summarize(chains: jax.Array, *,
+              mask: Optional[jax.Array] = None) -> dict:
+    """Headline diagnostics for a (C, N, D) trace. ``mask`` (per-chain
+    bool, e.g. ``RunHealth.healthy``) restricts the statistics to the
+    healthy chains and reports how many were excluded."""
+    r = rhat(chains, mask=mask)
+    e = ess(chains, mask=mask)
+    out = {"max_rhat": float(jnp.max(r)), "min_ess": float(jnp.min(e)),
+           "mean_ess": float(jnp.mean(e))}
+    if mask is not None:
+        m = np.asarray(mask, bool)
+        out["n_healthy"] = int(m.sum())
+        out["n_excluded"] = int((~m).sum())
+    return out

@@ -55,6 +55,25 @@ round body — the carry gains the resident client assignment and the
 compression's (server-view, error-feedback) state, still one scan and
 one dispatch. The engine-identity spec lowers to None and shares the
 oracle executor bit-for-bit.
+
+Fault tolerance (PR 7): ``run(..., recovery=Recovery(...))`` lowers an
+in-scan per-chain HEALTH word into the same round bodies — a finite-state
+check on theta (and SGHMC momentum) plus an optional log-posterior
+divergence detector probed with a ``fold_in``-derived key, so enabling
+health never perturbs the sampling stream. Diverged chains are
+quarantined (frozen, masked out of federation exchange and traces) or
+respawned from the block's first healthy chain — both per-chain
+``where`` masks, so the surviving chains' trajectories stay bitwise
+identical to a fault-free run. ``chaos=`` accepts a static fault plan
+(``repro.testing.ChaosSpec``, duck-typed — the engine never imports the
+test harness) that NaN-poisons chosen chains' post-round state or their
+compressed payloads at chosen absolute rounds. ``snapshot_every=``
+atomically checkpoints the FULL scan carry (chain state, RNG key,
+federation carry, health words, trace-so-far) between segments through
+``repro.checkpoint.snapshot``; ``resume=True`` continues from the newest
+valid snapshot with traces bitwise identical to an uninterrupted run —
+the executor takes the absolute starting round and the federation carry
+as inputs, so segmentation never resets in-scan state.
 """
 from __future__ import annotations
 
@@ -67,6 +86,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SamplerConfig
+from repro.core.health import HEALTH_PROBE_SALT, RunHealth
 from repro.core.sampler import (LogLikFn, ShardScheme, chain_scales,
                                 make_step_fn)
 from repro.core.surrogate import SurrogateBank, make_bank
@@ -540,14 +560,26 @@ class MeshChainEngine:
     def _executor(self, *, num_rounds: int, n_chains: int,
                   n_total: Optional[int] = None, reassign: str,
                   collect: bool, collect_every: int,
-                  layout: Optional[kops.PackedChains], federation=None):
+                  layout: Optional[kops.PackedChains], federation=None,
+                  recovery=None, chaos=None):
         """jit(shard_map(scan-over-rounds)) executor: ONE dispatch runs
         ``num_rounds`` communication rounds — reassignment, round key
         splitting, local updates, and thinned trace collection all live
         inside the scan. Chain state is donated, the trace comes back as
         a preallocated (C, num_rounds * ceil(T/collect_every), ...) block,
         and the final round key is returned so chunked callers (adaptive
-        refresh) continue the same stream. Cached per configuration.
+        refresh, snapshot segments) continue the same stream. Cached per
+        configuration.
+
+        Signature: ``execute(key, chains, shard_data, bank_rt, r0,
+        fed_carry, health) -> (chains, traces, key, fed_carry, health)``.
+        ``r0`` is the absolute index of the first round this dispatch
+        runs (traced — resegmenting a run never retraces); ``fed_carry``
+        is ``(sids, (ref, err) | None)`` for a lowered federation
+        scenario and None otherwise; ``health`` is ``(word, lp_ref)``
+        when a recovery policy is active and None otherwise. Threading
+        both through the executor I/O is what makes segment boundaries
+        (snapshots, resume) invisible to the scanned state.
 
         ``n_chains`` is the REAL chain count (the RNG fan-out width — it
         must match the oracle's); ``n_total`` >= n_chains is the padded
@@ -563,13 +595,22 @@ class MeshChainEngine:
         the per-chain (server-view, error-feedback) flat state — still
         one scan, one dispatch, no retrace per scenario. An
         engine-identity spec lowers to None and shares the oracle
-        executor bit-for-bit."""
+        executor bit-for-bit.
+
+        ``recovery`` (``repro.core.health.Recovery``, or None) lowers the
+        per-chain health check + quarantine/respawn masking into the
+        round bodies; ``chaos`` (duck-typed ``repro.testing.ChaosSpec``)
+        lowers the static fault plan. Both are per-chain ``where`` masks:
+        a fault-free run with them enabled is bitwise identical to one
+        without, and a faulted chain never touches its neighbours."""
         if n_total is None:
             n_total = n_chains
         fed = (federation if federation is not None
                and not federation.engine_identity else None)
+        chaos = chaos if chaos is not None and chaos.active else None
+        rec = recovery
         cache_key = (num_rounds, n_chains, n_total, reassign, collect,
-                     collect_every, layout, fed)
+                     collect_every, layout, fed, rec, chaos)
         if cache_key in self._executors:
             return self._executors[cache_key]
 
@@ -645,7 +686,16 @@ class MeshChainEngine:
             use_strag = sched.straggler_prob > 0.0
             use_comp = not comp.identity
 
-        def block(key, chains, shard_data, bank_rt):
+        # the identity fast path keeps its round-index-free scan (xs=None)
+        # — same jaxpr as ever; any of these features needs the absolute
+        # round index threaded through the scan instead.
+        use_r = fed is not None or chaos is not None or rec is not None
+        if rec is not None and rec.use_detector:
+            probe_sample = _make_batch_sampler(cfg, self.scheme,
+                                               self.minibatch)
+        log_lik = self.log_lik_fn
+
+        def block(key, chains, shard_data, bank_rt, r0, fedc, hw0):
             if layout is not None:
                 rt_bank = pack_bank(
                     layout, bank_rt if cfg.method == "fsgld" else None)
@@ -677,20 +727,134 @@ class MeshChainEngine:
                 # SPMD variant (DESIGN 4.1); block-cyclic when C > S
                 return _perm_sids_slice(k_assign, S, blk, per, n_total)
 
-            def round_body(carry, _):
-                key, state = carry
+            # ---- fault lowering (chaos + health) -----------------------
+            gid = blk + jnp.arange(per)          # global chain ids
+            is_real = gid < n_chains
+
+            def poison_state(r, state):
+                """chaos: NaN the chosen chains' post-round theta at the
+                chosen absolute rounds — per-chain, so every other chain
+                is bitwise untouched."""
+                if chaos is None or not chaos.poisons_state:
+                    return state
+                m = jnp.isin(r, jnp.asarray(chaos.nan_rounds)) & \
+                    jnp.isin(gid, jnp.asarray(chaos.nan_chains))
+                th, mom = get_view(state)
+                th = jax.tree.map(
+                    lambda l: jnp.where(
+                        m.reshape((per,) + (1,) * (l.ndim - 1)),
+                        jnp.nan, l)
+                    if jnp.issubdtype(l.dtype, jnp.inexact) else l, th)
+                return set_view(state, th, mom)
+
+            def finite_chains(tree):
+                ok = None
+                for l in jax.tree.leaves(tree):
+                    f = jnp.all(jnp.isfinite(l.reshape((per, -1))), axis=1)
+                    ok = f if ok is None else ok & f
+                return ok
+
+            def check_health(r, k_run, sids, pre_th, pre_mom, state,
+                             trace, hw):
+                """Per-chain health word update + recovery masking, run
+                once per ROUND after the local updates (no extra
+                launches). Every write is a per-chain where(): a chain
+                that never trips keeps bit-identical state/trace, and a
+                tripped chain never reaches into its neighbours."""
+                word, lp_ref = hw
+                th, mom = get_view(state)
+                bad_new = ~finite_chains(th)
+                if hmc and rec.check_momentum:
+                    bad_new = bad_new | ~finite_chains(mom)
+                lp = None
+                if rec.use_detector:
+                    # probe key from fold_in: the detector consumes
+                    # NOTHING from the sampling stream, so enabling it
+                    # cannot perturb the chains it watches
+                    kp = jax.lax.dynamic_slice_in_dim(
+                        pad_tail(jax.random.split(jax.random.fold_in(
+                            k_run, HEALTH_PROBE_SALT), n_chains)),
+                        blk, per)
+                    sq = None
+                    for l in jax.tree.leaves(th):
+                        s = jnp.sum(jnp.square(
+                            l.astype(jnp.float32)).reshape((per, -1)), 1)
+                        sq = s if sq is None else sq + s
+                    lp = jax.vmap(
+                        lambda t, k, s: log_lik(
+                            t, probe_sample(k, s, shard_data)))(
+                        th, kp, sids)
+                    lp = lp.astype(jnp.float32) \
+                        - 0.5 * cfg.prior_precision * sq
+                    bad_new = bad_new | ~jnp.isfinite(lp) | \
+                        (lp < lp_ref - rec.divergence_threshold)
+                if rec.policy == "quarantine":
+                    bad = (word != 0) | bad_new
+                    word = jnp.where((word == 0) & bad_new,
+                                     r + 1, word)
+
+                    def fix(new, old):
+                        return jnp.where(
+                            bad.reshape((per,) + (1,) * (new.ndim - 1)),
+                            old, new)
+
+                    if lp is not None:
+                        lp_ref = jnp.where(bad | ~jnp.isfinite(lp),
+                                           lp_ref,
+                                           jnp.maximum(lp_ref, lp))
+                    repl = bad
+                else:                                       # respawn
+                    word = word + bad_new.astype(word.dtype)
+                    healthy = (~bad_new) & is_real
+                    donor = jnp.argmax(healthy)
+                    any_h = jnp.any(healthy)
+
+                    def fix(new, old):
+                        # re-seed from the block's first healthy real
+                        # chain; freeze in place when the whole block
+                        # diverged at once
+                        cand = jnp.where(any_h, new[donor][None], old)
+                        return jnp.where(
+                            bad_new.reshape(
+                                (per,) + (1,) * (new.ndim - 1)),
+                            cand, new)
+
+                    if lp is not None:
+                        lp_ref = jnp.where((~bad_new) & jnp.isfinite(lp),
+                                           jnp.maximum(lp_ref, lp),
+                                           lp_ref)
+                        lp_ref = jnp.where(bad_new, -jnp.inf, lp_ref)
+                    repl = bad_new
+                th = jax.tree.map(fix, th, pre_th)
+                mom = jax.tree.map(fix, mom, pre_mom) if hmc else None
+                if collect:
+                    trace = jax.tree.map(
+                        lambda t, f: jnp.where(
+                            repl.reshape((per, 1) + (1,) * (t.ndim - 2)),
+                            f[:, None], t),
+                        trace, th)
+                return set_view(state, th, mom), trace, (word, lp_ref)
+
+            def round_body(carry, r):
+                key, state, hw = carry
                 key, k_assign, k_run = jax.random.split(key, 3)
                 sids = propose_sids(k_assign)
+                if rec is not None:
+                    pre_th, pre_mom = get_view(state)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
                 state, trace = round_fn(state, keys_blk, sids, shard_data,
                                         rt_bank)
+                state = poison_state(r, state)
+                if rec is not None:
+                    state, trace, hw = check_health(
+                        r, k_run, sids, pre_th, pre_mom, state, trace, hw)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
                      if collect else None)
-                return (key, state), y
+                return (key, state, hw), y
 
             def fed_round_body(carry, r):
-                key, state, sids, cst = carry
+                key, state, sids, cst, hw = carry
                 key, k_assign, k_run, k_fed = jax.random.split(key, 4)
                 new_sids = propose_sids(k_assign).astype(jnp.int32)
                 comm = fsched.comm_mask(sched, r)
@@ -701,6 +865,11 @@ class MeshChainEngine:
                             n_chains)), blk, per)
                 else:
                     exch = jnp.broadcast_to(comm, (per,))
+                if rec is not None and rec.policy == "quarantine":
+                    # quarantined chains are masked OUT of the exchange:
+                    # they neither reassign nor push/pull the server view
+                    # (their ref/err rows freeze with them)
+                    exch = exch & (hw[0] == 0)
                 sids = jnp.where(exch, new_sids, sids)
                 if use_comp:
                     # compressed exchange at the round boundary: the
@@ -719,6 +888,15 @@ class MeshChainEngine:
                         flat = flatten(th)
                         upd = flat - ref + err
                         dhat = compress(upd, jax.random.fold_in(k_fed, 1))
+                        if chaos is not None and chaos.poisons_payload:
+                            # corrupted wire payload: the delta the server
+                            # applies goes NaN for the chosen chains at
+                            # the chosen rounds — their server view (and
+                            # the state they continue from) diverges
+                            pm = jnp.isin(r, jnp.asarray(
+                                chaos.payload_nan_rounds)) & jnp.isin(
+                                gid, jnp.asarray(chaos.payload_nan_chains))
+                            dhat = jnp.where(pm[:, None], jnp.nan, dhat)
                         ref_new = ref + dhat
                         err_new = (upd - dhat if comp.error_feedback
                                    else jnp.zeros_like(upd))
@@ -736,7 +914,7 @@ class MeshChainEngine:
 
                     state, cst = jax.lax.cond(
                         comm, do_exchange, lambda op: op, (state, cst))
-                if use_strag:
+                if use_strag or rec is not None:
                     pre_th, pre_mom = get_view(state)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
@@ -765,26 +943,28 @@ class MeshChainEngine:
                                 strag.reshape((per,) + (1,) * (t.ndim - 1)),
                                 p[:, None], t),
                             trace, pre_th)
+                state = poison_state(r, state)
+                if rec is not None:
+                    state, trace, hw = check_health(
+                        r, k_run, sids, pre_th, pre_mom, state, trace, hw)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
                      if collect else None)
-                return (key, state, sids, cst), y
+                return (key, state, sids, cst, hw), y
 
+            rounds = (r0 + jnp.arange(num_rounds)) if use_r else None
             if fed is None:
-                (key, state), traces = jax.lax.scan(
-                    round_body, (key, state), None, length=num_rounds)
+                (key, state, hw0), traces = jax.lax.scan(
+                    round_body, (key, state, hw0), rounds,
+                    length=num_rounds)
             else:
                 th0, _ = get_view(state)
                 flatten, unflatten, dim = make_flattener(th0)
                 if use_comp:
                     compress = make_compressor(comp, dim)
-                    ref0 = flatten(th0)
-                    cst0 = (ref0, jnp.zeros_like(ref0))
-                else:
-                    cst0 = None
-                (key, state, _, _), traces = jax.lax.scan(
+                (key, state, f_sids, f_cst, hw0), traces = jax.lax.scan(
                     fed_round_body,
-                    (key, state, jnp.zeros((per,), jnp.int32), cst0),
-                    jnp.arange(num_rounds))
+                    (key, state, fedc[0], fedc[1], hw0), rounds)
+                fedc = (f_sids, f_cst)
             if layout is not None:
                 chains_out = ((state[2], layout.unpack(state[1])) if hmc
                               else state[1])
@@ -798,13 +978,16 @@ class MeshChainEngine:
                         (t.shape[1], num_rounds * t.shape[2])
                         + t.shape[3:]),
                     traces)
-            return chains_out, traces, key
+            return chains_out, traces, key, fedc, hw0
 
         cspec = self._chain_spec()
+        fc_spec = cspec if fed is not None else None
+        h_spec = cspec if rec is not None else None
         mapped = shard_map(
             block, mesh=self.mesh,
-            in_specs=(P(), cspec, P(), P()),
-            out_specs=(cspec, cspec if collect else None, P()),
+            in_specs=(P(), cspec, P(), P(), P(), fc_spec, h_spec),
+            out_specs=(cspec, cspec if collect else None, P(), fc_spec,
+                       h_spec),
             check_rep=False)
         fn = jax.jit(mapped, donate_argnums=(1,))
         self._executors[cache_key] = fn
@@ -833,7 +1016,9 @@ class MeshChainEngine:
             n_chains: int = 1, reassign: str = "categorical",
             collect_every: int = 1, refresh_every: Optional[int] = None,
             collect: bool = True, stacked: bool = False,
-            federation=None):
+            federation=None, recovery=None, chaos=None,
+            snapshot_every: Optional[int] = None,
+            snapshot_path: Optional[str] = None, resume: bool = False):
         """Same contract (and same RNG stream) as the legacy
         ``FederatedSampler.run``: returns stacked samples with leading axes
         (n_chains, num_rounds * T_local / collect_every, ...), or the final
@@ -865,6 +1050,16 @@ class MeshChainEngine:
         BLOCK-CYCLIC client visiting: the round's permutation is tiled so
         chain c sits at client perm[c % S] — every client hosts
         floor/ceil(C/S) chains.
+
+        Fault tolerance: ``recovery`` (a ``repro.core.health.Recovery``)
+        turns on the in-scan health check and makes the call return
+        ``(result, RunHealth)`` — the health word per REAL chain (0 =
+        never faulted). ``chaos`` injects a static fault plan (testing).
+        ``snapshot_every=k, snapshot_path=dir`` atomically checkpoints
+        the full scan carry every k rounds; ``resume=True`` continues
+        from the newest valid snapshot in ``snapshot_path`` (falling
+        back to a fresh run when none exists) with traces bitwise
+        identical to an uninterrupted run.
         """
         d_size = self.mesh.shape["data"]
         n_total = n_chains + (-n_chains) % d_size
@@ -873,12 +1068,21 @@ class MeshChainEngine:
             raise ValueError(reassign)
         fed = (federation if federation is not None
                and not federation.engine_identity else None)
+        chaos = chaos if chaos is not None and chaos.active else None
         if fed is not None and refresh_every and self.cfg.method == "fsgld":
             raise NotImplementedError(
                 "adaptive refresh does not compose with a non-identity "
                 "communication schedule/compression yet: the carried "
                 "sids / error-feedback state would reset at every "
                 "refresh segment boundary")
+        if (snapshot_every or resume) and not snapshot_path:
+            raise ValueError(
+                "snapshot_every/resume need a snapshot_path directory")
+        if snapshot_path and refresh_every:
+            raise NotImplementedError(
+                "snapshots do not compose with adaptive refresh yet: the "
+                "refreshed surrogate bank is not part of the snapshot "
+                "payload")
         if self.dynamics == "sghmc":
             if refresh_every:
                 raise NotImplementedError(
@@ -913,13 +1117,98 @@ class MeshChainEngine:
         chains = jax.device_put(
             chains, jax.tree.map(lambda _: cshard, chains))
         bank_rt = self.bank
-        seg_len = (refresh_every if (refresh_every
-                                     and self.cfg.method == "fsgld")
-                   else num_rounds)
+        take = (lambda t: t[:n_chains]) if n_total > n_chains \
+            else (lambda t: t)
+
+        # in-scan carries threaded through the executor I/O (so segment
+        # boundaries — snapshots, resume — never reset them)
+        hw = None
+        if recovery is not None:
+            hw = (jnp.zeros((n_total,), jnp.int32),
+                  jnp.full((n_total,), -jnp.inf, jnp.float32))
+        fedc = None
+        if fed is not None:
+            cst0 = None
+            if not fed.compression.identity:
+                from repro.fed.compress import make_flattener
+                th_part = chains[0] if self.dynamics == "sghmc" else chains
+                flatten, _, _ = make_flattener(th_part)
+                # copy: flatten() can alias the (donated) chains buffer
+                ref0 = jnp.array(flatten(th_part), copy=True)
+                cst0 = (ref0, jnp.zeros_like(ref0))
+            fedc = (jnp.zeros((n_total,), jnp.int32), cst0)
+
+        typed_key = hasattr(jax.dtypes, "prng_key") and jnp.issubdtype(
+            key.dtype, jax.dtypes.prng_key)
+
+        def snap_payload(trace_now):
+            """The FULL scan carry, real-chain rows only (mesh padding is
+            reconstructed on load): everything a resumed run needs to be
+            bitwise identical to an uninterrupted one."""
+            p = {"chains": jax.tree.map(take, chains),
+                 "key": jax.random.key_data(key) if typed_key else key}
+            if fedc is not None:
+                p["sids"] = fedc[0][:n_chains]
+                if fedc[1] is not None:
+                    p["ref"] = fedc[1][0][:n_chains]
+                    p["err"] = fedc[1][1][:n_chains]
+            if hw is not None:
+                p["word"] = hw[0][:n_chains]
+                p["lp_ref"] = hw[1][:n_chains]
+            if collect:
+                p["trace"] = trace_now
+            return p
+
+        def repad(t, fill=None):
+            t = jnp.asarray(t)
+            if n_total == n_chains:
+                return t
+            tail = (jnp.broadcast_to(t[:1], (n_total - n_chains,)
+                                     + t.shape[1:])
+                    if fill is None else
+                    jnp.full((n_total - n_chains,) + t.shape[1:], fill,
+                             t.dtype))
+            return jnp.concatenate([t, tail])
+
         out = []
-        r0 = 0
+        r_start = 0
+        if resume:
+            from repro.checkpoint.snapshot import latest_snapshot
+            th_like = (jax.tree.map(take, chains)[0]
+                       if self.dynamics == "sghmc"
+                       else jax.tree.map(take, chains))
+            payload, r_start = latest_snapshot(snapshot_path,
+                                               snap_payload(th_like))
+            if payload is None:
+                r_start = 0       # nothing to resume: fresh run
+            else:
+                chains = jax.tree.map(repad, payload["chains"])
+                chains = jax.device_put(
+                    chains, jax.tree.map(lambda _: cshard, chains))
+                k = jnp.asarray(payload["key"])
+                key = jax.random.wrap_key_data(k) if typed_key else k
+                if fedc is not None:
+                    cst0 = None
+                    if fedc[1] is not None:
+                        cst0 = (repad(payload["ref"]),
+                                repad(payload["err"]))
+                    fedc = (repad(jnp.asarray(payload["sids"],
+                                              jnp.int32), fill=0), cst0)
+                if hw is not None:
+                    hw = (repad(jnp.asarray(payload["word"], jnp.int32),
+                                fill=0),
+                          repad(jnp.asarray(payload["lp_ref"],
+                                            jnp.float32), fill=-jnp.inf))
+                if collect:
+                    out = [jax.tree.map(jnp.asarray, payload["trace"])]
+
+        refresh_mode = bool(refresh_every) and self.cfg.method == "fsgld"
+        seg_len = (snapshot_every if snapshot_every
+                   else (refresh_every if refresh_mode else num_rounds))
+        r0 = r_start
         while r0 < num_rounds:
-            if r0 > 0:   # refresh boundary (r0 is a refresh_every multiple)
+            if refresh_mode and r0 > 0:
+                # refresh boundary (r0 is a refresh_every multiple)
                 if self.bank is None or self.bank.kind != "diag":
                     # refresh_bank(_mesh) fits DIAG banks over flat-vector
                     # params (same limit as the legacy path); swapping the
@@ -936,20 +1225,36 @@ class MeshChainEngine:
                 num_rounds=seg, n_chains=n_chains, n_total=n_total,
                 reassign=reassign, collect=collect,
                 collect_every=collect_every, layout=layout,
-                federation=fed)
-            chains, trace, key = execute(key, chains, self.shard_data,
-                                         bank_rt)
+                federation=fed, recovery=recovery, chaos=chaos)
+            chains, trace, key, fedc, hw = execute(
+                key, chains, self.shard_data, bank_rt,
+                jnp.asarray(r0, jnp.int32), fedc, hw)
             if collect:
                 out.append(trace)
             r0 += seg
-        take = (lambda t: t[:n_chains]) if n_total > n_chains \
-            else (lambda t: t)
+            if snapshot_every:
+                from repro.checkpoint.snapshot import save_snapshot
+                trace_now = None
+                if collect:
+                    sl = [jax.tree.map(take, t) for t in out]
+                    trace_now = (sl[0] if len(sl) == 1 else jax.tree.map(
+                        lambda *xs: jnp.concatenate(xs, 1), *sl))
+                save_snapshot(snapshot_path, snap_payload(trace_now),
+                              rounds_done=r0)
         if not collect:
-            return jax.tree.map(take, chains)
-        out = [jax.tree.map(take, t) for t in out]
-        if len(out) == 1:
-            return out[0]
-        return jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out)
+            res = jax.tree.map(take, chains)
+        else:
+            out = [jax.tree.map(take, t) for t in out]
+            res = (out[0] if len(out) == 1 else
+                   jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out))
+        if recovery is None:
+            return res
+        health = RunHealth(
+            word=jax.device_get(hw[0])[:n_chains],
+            policy=recovery.policy,
+            lp_ref=(jax.device_get(hw[1])[:n_chains]
+                    if recovery.use_detector else None))
+        return res, health
 
     # -- model-axis work: shard-parallel surrogate refresh ----------------
 

@@ -1,0 +1,127 @@
+"""In-scan chain health: divergence detection + recovery policies.
+
+The FA-LD line (Deng et al. 2021; Plassier et al. 2022) analyzes exactly
+the failure axes a federated sampler meets in the wild — heterogeneity-
+driven divergence, clients that return garbage, chains that walk off the
+posterior — yet a single NaN in one chain's update silently poisons its
+whole trace, and downstream ``ess``/``rhat`` with it. This module makes
+chain health a first-class, *declarative* part of the run:
+
+  * :class:`Recovery` — the policy spec the engine lowers INTO its
+    scanned round body (``core/engine.py``): a finite-state check on
+    theta (and momentum, for SGHMC) plus an optional log-posterior-
+    explosion detector, evaluated per chain per round with no extra
+    host dispatches — the jaxpr gate (one scan, one pallas_call, no
+    pad) holds with health tracking enabled.
+
+      - ``policy='quarantine'`` freezes a diverged chain at its last
+        healthy state: its trace repeats the frozen position from the
+        faulty round on, its updates keep being computed but are
+        discarded (the straggler machinery's masking), and it never
+        contaminates any other chain — all other chains' traces are
+        bitwise identical to a fault-free run.
+      - ``policy='respawn'`` re-seeds the diverged chain from a healthy
+        chain's state (the first healthy real chain in the same mesh
+        data block — deterministic given the seed) and lets it keep
+        sampling; the health word counts how many times each chain was
+        respawned.
+
+  * :class:`RunHealth` — the per-chain health report surfaced in the
+    run result: the raw health word plus the derived ``healthy`` mask
+    ``core/diagnostics.py`` accepts to exclude quarantined chains from
+    ess/rhat instead of erroring on their frozen (or non-finite)
+    traces.
+
+The detector itself is cheap: the finite check is an elementwise
+``isfinite`` reduction over the chain's own state, and the log-posterior
+probe (enabled by ``divergence_threshold``) is ONE extra likelihood
+evaluation per chain per ROUND (not per step) on a minibatch drawn from
+a key folded out of the round key — so enabling it never perturbs the
+sampling RNG stream, and a fault-free run with health tracking on is
+bitwise identical to one with it off.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+POLICIES = ("quarantine", "respawn")
+
+# fold_in salt deriving the health-probe key from the round key: the probe
+# stream is parallel to (never consumed from) the sampling stream.
+HEALTH_PROBE_SALT = 0x48EA17
+
+
+@dataclasses.dataclass(frozen=True)
+class Recovery:
+    """Declarative fault-recovery policy for the chain engine.
+
+    policy:
+      'quarantine' — a diverged chain is frozen at its last healthy
+                     state for the rest of the run (masked out of its
+                     trace's advancement; surfaced as unhealthy in
+                     :class:`RunHealth` so diagnostics exclude it).
+      'respawn'    — a diverged chain is re-seeded from the first
+                     healthy real chain in its mesh data block and
+                     keeps sampling (deterministic given the seed); if
+                     the whole block diverged it freezes instead.
+
+    divergence_threshold: when set, a chain also counts as diverged
+      once its probed unnormalized log-posterior drops more than this
+      many nats below the best value it has seen (the log-posterior-
+      explosion detector); None = finite-state checks only.
+    check_momentum: include SGHMC momenta in the finite-state check
+      (ignored for Langevin dynamics).
+
+    Hashable — the engine caches one executor per (config, recovery).
+    """
+    policy: str = "quarantine"
+    divergence_threshold: Optional[float] = None
+    check_momentum: bool = True
+
+    def __post_init__(self):
+        assert self.policy in POLICIES, self.policy
+        if self.divergence_threshold is not None:
+            assert self.divergence_threshold > 0, self.divergence_threshold
+
+    @property
+    def use_detector(self) -> bool:
+        return self.divergence_threshold is not None
+
+
+@dataclasses.dataclass
+class RunHealth:
+    """Per-chain health report of one engine run.
+
+    ``word`` is an (n_chains,) int32 whose meaning depends on the
+    policy: under 'quarantine', 0 = healthy and k > 0 = quarantined
+    after round k-1 (the first faulty round, 1-based so 0 stays the
+    healthy sentinel); under 'respawn' it counts how many times the
+    chain was respawned (every chain is live at the end either way).
+    ``lp_ref`` is the best probed log-posterior per chain when the
+    divergence detector ran, else None.
+    """
+    word: np.ndarray
+    policy: str = "quarantine"
+    lp_ref: Optional[np.ndarray] = None
+
+    @property
+    def healthy(self) -> np.ndarray:
+        """(n_chains,) bool — chains whose traces are trustworthy end to
+        end: never quarantined (and, under respawn, never respawned —
+        a respawned chain's early trace belongs to its donor's basin)."""
+        return np.asarray(self.word) == 0
+
+    @property
+    def n_healthy(self) -> int:
+        return int(self.healthy.sum())
+
+    @property
+    def n_chains(self) -> int:
+        return int(np.asarray(self.word).shape[0])
+
+    def __repr__(self):
+        return (f"RunHealth(policy={self.policy!r}, "
+                f"healthy={self.n_healthy}/{self.n_chains})")

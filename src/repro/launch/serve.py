@@ -71,8 +71,17 @@ def main(argv=None):
         print(f"serving {server.n_draws} draw(s) from {bank} ({prov})")
 
     for req in range(1 + max(0, args.watch)):
-        if req > 0 and server.refresh():
-            print(f"hot-swapped bank: now {server.n_draws} draw(s)")
+        if req > 0:
+            # a watching server must outlive a flaky bank: refresh()
+            # already degrades to the previous ensemble on read errors,
+            # and anything it still raises is logged, not fatal
+            try:
+                if server.refresh():
+                    print(f"hot-swapped bank: now {server.n_draws} "
+                          "draw(s)")
+            except Exception as e:  # noqa: BLE001
+                print(f"bank refresh failed ({e}); serving previous "
+                      f"{server.n_draws}-draw ensemble", flush=True)
         res = server.generate(gen=args.gen, batch=args.batch,
                               prompt_len=args.prompt_len)
         for t in range(res.tokens.shape[1]):

@@ -143,8 +143,28 @@ def main(argv=None):
     ap.add_argument("--bank-every", type=int, default=1,
                     help="rounds per draw-bank segment (thinning: one "
                          "draw every this many rounds)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="preemption safety: atomically snapshot the "
+                         "full scan carry (chains, key, federation "
+                         "state, health, trace) every N rounds into "
+                         "--snapshot-dir; a killed run resumes with "
+                         "--resume, bitwise identical to uninterrupted")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="directory for --snapshot-every / --resume "
+                         "snapshots")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest valid snapshot in "
+                         "--snapshot-dir (fresh run when none exists)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if (args.snapshot_every or args.resume) and not args.snapshot_dir:
+        raise SystemExit("--snapshot-every/--resume need --snapshot-dir")
+    if (args.snapshot_every or args.resume) and args.draw_bank:
+        raise SystemExit(
+            "--snapshot-every/--resume run the schedule as one resumable "
+            "engine dispatch; --draw-bank runs its own segment loop — "
+            "pick one")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh() if args.smoke \
@@ -194,7 +214,9 @@ def main(argv=None):
             n_chains=args.chains, reassign=reassign),
         execution=api.Execution(
             mesh=mesh, executor=executor, collect=False,
-            dtype=jnp.dtype(cfg.surrogate_dtype)),
+            dtype=jnp.dtype(cfg.surrogate_dtype),
+            snapshot_every=args.snapshot_every,
+            snapshot_path=args.snapshot_dir, resume=args.resume),
         federation=federation)
 
     # ---- phase 1: surrogates (once, before sampling) ----

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from typing import Any, List, Optional
 
 import jax
@@ -105,10 +106,18 @@ class EnsembleServer:
             draws = jax.device_put(draws, shardings)
         return draws
 
-    def refresh(self) -> bool:
+    def refresh(self, *, retries: int = 2,
+                backoff_s: float = 0.05) -> bool:
         """Poll the draw bank; when new complete draws appeared since the
         last load, hot-swap the freshest ``n_draws`` in. Returns True when
-        the ensemble changed. No-op (False) for non-bank servers."""
+        the ensemble changed. No-op (False) for non-bank servers.
+
+        Fault tolerance: transient read failures (``OSError``, torn-write
+        ``CorruptCheckpointError``) are retried ``retries`` times with
+        exponential backoff; refusals (arch/fingerprint mismatch, wholly
+        corrupt bank) are not retried. Either way, once an ensemble is
+        live a failed refresh keeps it serving (warn + False) — only the
+        INITIAL load is allowed to raise."""
         if self.bank is None:
             return False
         avail = len(checkpoint.list_draws(self.bank))
@@ -121,8 +130,28 @@ class EnsembleServer:
         k = self._want
         if k is not None and avail < k:
             k = avail  # sampler still filling the bank: serve what exists
-        stacked, metas = checkpoint.load_bank(
-            self.bank, self._like, k=k, expect_arch=self.cfg.name)
+        stacked = metas = None
+        last_exc: Optional[Exception] = None
+        for attempt in range(retries + 1):
+            try:
+                stacked, metas = checkpoint.load_bank(
+                    self.bank, self._like, k=k, expect_arch=self.cfg.name)
+                last_exc = None
+                break
+            except (checkpoint.CorruptCheckpointError, OSError) as e:
+                last_exc = e
+                if attempt < retries:
+                    time.sleep(backoff_s * (2 ** attempt))
+            except ValueError as e:  # refusal — retrying cannot help
+                last_exc = e
+                break
+        if last_exc is not None:
+            if self.draws is not None:
+                warnings.warn(
+                    f"draw-bank refresh failed ({last_exc}); keeping the "
+                    f"previous {self.n_draws}-draw ensemble live")
+                return False
+            raise last_exc
         self.draws = self._place(stacked)
         self.metas = metas
         self._seen_draws = avail

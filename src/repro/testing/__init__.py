@@ -1,0 +1,6 @@
+from repro.testing.chaos import (  # noqa: F401
+    ChaosSpec,
+    corrupt_draw,
+    flaky_io,
+    truncate_file,
+)

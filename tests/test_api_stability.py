@@ -32,8 +32,8 @@ def _params(obj):
 # The snapshot. Field ORDER is part of the contract (positional calls);
 # (name, has_default) pairs catch silently-added required arguments.
 EXPECTED_ALL = ("Posterior", "SurrogateSpec", "Schedule", "Execution",
-                "Federation", "Serving", "FSGLD", "fit_bank_local_sgld",
-                "get_scenario")
+                "Federation", "Recovery", "RunHealth", "Serving", "FSGLD",
+                "fit_bank_local_sgld", "get_scenario")
 
 EXPECTED_SIGNATURES = {
     "Posterior": (("log_lik", False), ("prior_precision", True),
@@ -44,9 +44,13 @@ EXPECTED_SIGNATURES = {
     "Schedule": (("rounds", False), ("local_steps", True),
                  ("n_chains", True), ("reassign", True), ("thin", True)),
     "Execution": (("mesh", True), ("executor", True), ("dtype", True),
-                  ("collect", True)),
+                  ("collect", True), ("recovery", True),
+                  ("snapshot_every", True), ("snapshot_path", True),
+                  ("resume", True)),
     "Federation": (("partition", True), ("schedule", True),
                    ("compression", True)),
+    "Recovery": (("policy", True), ("divergence_threshold", True),
+                 ("check_momentum", True)),
     "FSGLD": (("posterior", False), ("data", False), ("minibatch", False),
               ("step_size", True), ("method", True), ("kernel", True),
               ("alpha", True), ("friction", True), ("surrogate", True),
@@ -110,6 +114,16 @@ def test_readme_quickstart_runs():
     src = _readme_block("API")
     assert "api.FSGLD(" in src and "sample(" in src
     exec(compile(src, "README.md:<api-quickstart>", "exec"), {})
+
+
+def test_readme_fault_tolerance_quickstart_runs(tmp_path, monkeypatch):
+    """Exec the README '## Fault tolerance' quickstart verbatim:
+    recovery policy -> (trace, RunHealth), snapshots land, diagnostics
+    take the health mask."""
+    src = _readme_block("Fault tolerance")
+    assert "Recovery(" in src and "snapshot_every" in src
+    src = src.replace("/tmp/snaps", str(tmp_path / "snaps"))
+    exec(compile(src, "README.md:<fault-tolerance-quickstart>", "exec"), {})
 
 
 def test_readme_serving_quickstart_runs():

@@ -1,0 +1,388 @@
+"""Fault-tolerant sampling runtime (PR 7): chaos-injection suite.
+
+Deterministic fault injectors (``repro.testing.chaos``) drive the
+contracts under test:
+
+  * health tracking OFF-path neutrality: enabling a ``Recovery`` policy
+    on a fault-free run is BITWISE identical to the plain run (the
+    health probe key is salted off the sampling stream);
+  * quarantine isolation: a NaN injected into ONE chain leaves every
+    other chain's trace bitwise identical to the fault-free run, and
+    the faulty chain's health word records the first bad round;
+  * respawn determinism: re-seeding from a healthy donor is a pure
+    function of the run key — two runs agree bitwise;
+  * the jaxpr acceptance gate HOLDS with health + chaos lowered into
+    the scan: still one pallas_call, no `pad` primitive in any scan
+    body (fault tolerance costs zero extra launches);
+  * corrupted wire payloads under a compressed federation scenario are
+    contained to the chain whose payload was corrupted;
+  * storage chaos: ``corrupt_draw``/``truncate_file``/``flaky_io``
+    against the draw bank — ``load_bank`` degrades (serve K-j healthy
+    draws, warn) or refuses loudly (all corrupt), and a live
+    ``EnsembleServer`` keeps its previous ensemble when a refresh
+    fails.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import get_smoke_config
+from repro.configs.base import SamplerConfig
+from repro.core import analytic_gaussian_likelihood_surrogate, make_bank
+from repro.core.diagnostics import ess, rhat, summarize
+from repro.core.engine import MeshChainEngine
+from repro.core.health import Recovery, RunHealth
+from repro.fed import CommSchedule, Compression, Federation
+from repro.models import init_params
+from repro.serve import EnsembleServer
+from repro.testing import ChaosSpec, corrupt_draw, flaky_io
+
+S, N, D = 4, 12, 3
+
+
+def log_lik(theta, b):
+    return -0.5 * jnp.sum((b["y"] - b["x"] @ theta["w"]) ** 2)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (S, N, D))
+    w = jax.random.normal(ks[1], (D,))
+    y = x @ w + 0.1 * jax.random.normal(ks[2], (S, N))
+    return {"x": x, "y": y}
+
+
+def _engine(problem):
+    cfg = SamplerConfig(method="dsgld", step_size=1e-3, num_shards=S,
+                        local_updates=2, prior_precision=1.0)
+    return MeshChainEngine(log_lik, cfg, problem, minibatch=4)
+
+
+THETA0 = {"w": jnp.zeros(D)}
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# health tracking is free: fault-free runs are bitwise unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["quarantine", "respawn"])
+def test_health_no_fault_is_bitwise_identical(problem, policy):
+    eng = _engine(problem)
+    base = eng.run(KEY, THETA0, 5, n_chains=4, reassign="permutation")
+    out, h = eng.run(KEY, THETA0, 5, n_chains=4, reassign="permutation",
+                     recovery=Recovery(policy=policy,
+                                       divergence_threshold=50.0))
+    assert isinstance(h, RunHealth)
+    assert h.n_healthy == h.n_chains == 4
+    assert np.all(np.asarray(h.healthy))
+    np.testing.assert_array_equal(np.asarray(base["w"]),
+                                  np.asarray(out["w"]))
+
+
+# ---------------------------------------------------------------------------
+# quarantine: the faulty chain is contained, neighbours bitwise intact
+# ---------------------------------------------------------------------------
+
+def test_quarantine_isolates_nan_chain_bitwise(problem):
+    eng = _engine(problem)
+    base = eng.run(KEY, THETA0, 5, n_chains=4, reassign="permutation")
+    chaos = ChaosSpec(nan_chains=(2,), nan_rounds=(1,))
+    out, h = eng.run(KEY, THETA0, 5, n_chains=4, reassign="permutation",
+                     recovery=Recovery(policy="quarantine"), chaos=chaos)
+    # health word records 1 + first bad round; everyone else clean
+    np.testing.assert_array_equal(np.asarray(h.word), [0, 0, 2, 0])
+    assert h.n_healthy == 3
+    others = [0, 1, 3]
+    np.testing.assert_array_equal(np.asarray(base["w"])[others],
+                                  np.asarray(out["w"])[others])
+    # the quarantined chain is frozen at its last healthy state — its
+    # trace stays finite, the NaN never reaches storage
+    assert np.isfinite(np.asarray(out["w"])[2]).all()
+
+
+def test_respawn_is_deterministic_and_finite(problem):
+    eng = _engine(problem)
+    chaos = ChaosSpec(nan_chains=(2,), nan_rounds=(1,))
+    runs = [eng.run(KEY, THETA0, 5, n_chains=4, reassign="permutation",
+                    recovery=Recovery(policy="respawn"), chaos=chaos)
+            for _ in range(2)]
+    (a, ha), (b, hb) = runs
+    np.testing.assert_array_equal(np.asarray(ha.word), [0, 0, 1, 0])
+    np.testing.assert_array_equal(np.asarray(ha.word), np.asarray(hb.word))
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    assert np.isfinite(np.asarray(a["w"])).all()
+
+
+def test_quarantine_with_mesh_padding(problem):
+    """n_chains=3 on the padded block: the pad row's health word must
+    never flag (pad chains are not real) and real-chain containment
+    still holds."""
+    eng = _engine(problem)
+    base = eng.run(KEY, THETA0, 4, n_chains=3, reassign="permutation")
+    chaos = ChaosSpec(nan_chains=(1,), nan_rounds=(0,))
+    out, h = eng.run(KEY, THETA0, 4, n_chains=3, reassign="permutation",
+                     recovery=Recovery(policy="quarantine"), chaos=chaos)
+    assert h.n_chains == 3  # real rows only in the result
+    np.testing.assert_array_equal(np.asarray(h.word), [0, 1, 0])
+    others = [0, 2]
+    np.testing.assert_array_equal(np.asarray(base["w"])[others],
+                                  np.asarray(out["w"])[others])
+
+
+# ---------------------------------------------------------------------------
+# the jaxpr acceptance gate holds with fault tolerance lowered in
+# ---------------------------------------------------------------------------
+
+def _all_eqns(jaxpr):
+    for e in jaxpr.eqns:
+        yield e
+        for v in e.params.values():
+            for sub in _subjaxprs(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(v):
+    if hasattr(v, "jaxpr"):
+        return [v.jaxpr]
+    if hasattr(v, "eqns"):
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def test_jaxpr_gate_holds_with_health_and_chaos():
+    """One pallas_call, no `pad` primitive in any scan body — with a
+    recovery policy (detector on), chaos injection, and the packed
+    executor all active. Fault tolerance is where()s inside the scanned
+    round body, not extra launches."""
+    key0 = jax.random.PRNGKey(2)
+    mus = jax.random.uniform(key0, (S, D), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key0, 1),
+                                            (S, 24, D))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    data, bank = {"x": x}, make_bank(mu_s, prec_s, "diag")
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=3, prior_precision=1.0)
+    eng = MeshChainEngine(lambda t, b: -0.5 * jnp.sum((b["x"] - t) ** 2),
+                          cfg, data, minibatch=6, bank=bank,
+                          use_kernel=True)
+    theta0 = jnp.zeros(D)
+    layout = eng._layout_for(theta0)
+    assert layout is not None
+    execute = eng._executor(
+        num_rounds=3, n_chains=4, reassign="categorical", collect=True,
+        collect_every=1, layout=layout,
+        recovery=Recovery(policy="quarantine", divergence_threshold=50.0),
+        chaos=ChaosSpec(nan_chains=(1,), nan_rounds=(1,)))
+    chains = jnp.zeros((4, D))
+    hw0 = (jnp.zeros((4,), jnp.int32), jnp.full((4,), -jnp.inf,
+                                                jnp.float32))
+    jaxpr = jax.make_jaxpr(execute)(
+        jax.random.PRNGKey(0), chains, data, bank,
+        jnp.asarray(0, jnp.int32), None, hw0)
+
+    eqns = list(_all_eqns(jaxpr.jaxpr))
+    pallas = [e for e in eqns if "pallas" in e.primitive.name]
+    assert len(pallas) == 1, [e.primitive.name for e in pallas]
+    scans = [e for e in eqns if e.primitive.name == "scan"]
+    assert scans, "rounds loop not scanned"
+    for s in scans:
+        body = [e.primitive.name
+                for e in _all_eqns(s.params["jaxpr"].jaxpr)]
+        assert "pad" not in body, "pad op inside a scan body"
+        assert body.count("pallas_call") <= 1
+
+
+# ---------------------------------------------------------------------------
+# corrupted wire payloads under compression are contained
+# ---------------------------------------------------------------------------
+
+def test_payload_corruption_contained_under_compression():
+    """A NaN'd compressed payload poisons only the chain whose wire
+    delta was corrupted: its server reference (and onward state) goes
+    bad, the health check quarantines it, and every other chain's trace
+    is bitwise identical to the fault-free scenario run."""
+    key0 = jax.random.PRNGKey(0)
+    mus = jax.random.uniform(key0, (S, D), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key0, 1),
+                                            (S, 40, D))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    data, bank = {"x": x}, make_bank(mu_s, prec_s, "diag")
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=3, prior_precision=1.0)
+    eng = MeshChainEngine(lambda t, b: -0.5 * jnp.sum((b["x"] - t) ** 2),
+                          cfg, data, minibatch=8, bank=bank)
+    fed = Federation(schedule=CommSchedule(delay=2),
+                     compression=Compression(kind="topk", frac=0.5,
+                                             error_feedback=True))
+    base = eng.run(KEY, jnp.zeros(D), 6, n_chains=4, federation=fed)
+    chaos = ChaosSpec(payload_nan_chains=(1,), payload_nan_rounds=(2,))
+    out, h = eng.run(KEY, jnp.zeros(D), 6, n_chains=4, federation=fed,
+                     recovery=Recovery(policy="quarantine"), chaos=chaos)
+    word = np.asarray(h.word)
+    assert word[1] != 0 and np.all(word[[0, 2, 3]] == 0), word
+    others = [0, 2, 3]
+    np.testing.assert_array_equal(np.asarray(base)[others],
+                                  np.asarray(out)[others])
+
+
+# ---------------------------------------------------------------------------
+# diagnostics refuse poisoned traces, accept the health mask
+# ---------------------------------------------------------------------------
+
+def test_diagnostics_refuse_nonfinite_and_accept_mask(problem):
+    eng = _engine(problem)
+    chaos = ChaosSpec(payload_nan_chains=(), nan_chains=(2,),
+                      nan_rounds=(1,))
+    out, h = eng.run(KEY, THETA0, 8, n_chains=4, reassign="permutation",
+                     recovery=Recovery(policy="quarantine"), chaos=chaos)
+    trace = jnp.concatenate([out["w"], out["w"]], axis=1)  # N >= 4
+    poisoned = trace.at[2, 0].set(jnp.nan)  # what no-recovery looks like
+    for fn in (rhat, ess):
+        with pytest.raises(ValueError, match="non-finite"):
+            fn(poisoned)
+        assert np.all(np.isfinite(np.asarray(
+            fn(poisoned, mask=h.healthy))))
+    with pytest.raises(ValueError, match="excludes every chain"):
+        rhat(trace, mask=np.zeros(4, bool))
+    with pytest.raises(ValueError, match="mask shape"):
+        ess(trace, mask=np.ones(3, bool))
+    s = summarize(trace, mask=h.healthy)
+    assert s["n_healthy"] == 3 and s["n_excluded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# storage chaos: draw banks + the ensemble server
+# ---------------------------------------------------------------------------
+
+ARCH = "h2o-danube-1.8b"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _meta(cfg, r=0):
+    return checkpoint.DrawMeta(method="fsgld", round=r,
+                               scenario="identity", seed=0,
+                               dtype="float32", arch=cfg.name)
+
+
+def _fill_bank(bank, cfg, params, n=3):
+    paths = []
+    for r in range(n):
+        paths.append(checkpoint.save_draw(
+            bank, jax.tree.map(lambda l, rr=r: l + rr, params),
+            _meta(cfg, r), step=r))
+    return paths
+
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "missing"])
+def test_load_bank_degrades_around_corrupt_draw(tmp_path, cfg, params,
+                                                mode):
+    bank = str(tmp_path / "bank")
+    paths = _fill_bank(bank, cfg, params, n=3)
+    corrupt_draw(paths[1], mode=mode)
+    with pytest.warns(UserWarning, match="corrupt"):
+        stacked, metas = checkpoint.load_bank(bank, params)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 2
+    assert [m.round for m in metas] == [0, 2]  # the bad middle draw gone
+
+
+def test_load_bank_degraded_still_serves_want_k(tmp_path, cfg, params):
+    """want_k=2 with the freshest draw corrupt: the bank walks further
+    back and still serves 2 healthy draws."""
+    bank = str(tmp_path / "bank")
+    paths = _fill_bank(bank, cfg, params, n=3)
+    corrupt_draw(paths[2], mode="truncate")
+    stacked, metas = checkpoint.load_bank(bank, params, k=2)
+    assert jax.tree.leaves(stacked)[0].shape[0] == 2
+    assert [m.round for m in metas] == [0, 1]
+
+
+def test_load_bank_all_corrupt_refuses_loudly(tmp_path, cfg, params):
+    bank = str(tmp_path / "bank")
+    paths = _fill_bank(bank, cfg, params, n=2)
+    for p in paths:
+        corrupt_draw(p, mode="garbage")
+    with pytest.raises(ValueError, match="no servable draws"):
+        checkpoint.load_bank(bank, params)
+
+
+def test_load_bank_missing_dir_and_empty_bank_errors(tmp_path, params):
+    with pytest.raises(ValueError, match="does not exist"):
+        checkpoint.load_bank(str(tmp_path / "nope"), params)
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(ValueError, match="no complete draw"):
+        checkpoint.load_bank(str(empty), params)
+
+
+def test_server_survives_corrupted_refresh(tmp_path, cfg, params):
+    """A live server whose bank refresh hits a wholly-corrupt new draw
+    set keeps serving the previous ensemble (warn, not crash)."""
+    bank = str(tmp_path / "bank")
+    _fill_bank(bank, cfg, params, n=1)
+    srv = EnsembleServer(cfg, bank=bank)
+    assert srv.n_draws == 1
+    before = jax.tree.leaves(srv.draws)[0]
+    # every draw (old + new) goes corrupt on disk: refresh can load
+    # nothing, but the in-memory ensemble keeps serving
+    for p in checkpoint.list_draws(bank):
+        corrupt_draw(p, mode="garbage")
+    checkpoint.save_draw(bank, params, _meta(cfg, 9), step=9)
+    corrupt_draw(checkpoint.list_draws(bank)[-1], mode="truncate")
+    with pytest.warns(UserWarning, match="keeping the previous"):
+        assert srv.refresh(retries=1, backoff_s=0.0) is False
+    assert srv.n_draws == 1
+    np.testing.assert_array_equal(np.asarray(before),
+                                  np.asarray(jax.tree.leaves(srv.draws)[0]))
+
+
+def test_server_retries_flaky_reads_with_backoff(tmp_path, cfg, params):
+    """Transient read failures (flaky_io raises OSError on the first n
+    manifest reads) are retried with backoff and the refresh then
+    succeeds. (A flaky ARRAY read instead degrades through the bank's
+    corrupt-draw skipping — also survivable, tested above.)"""
+    bank = str(tmp_path / "bank")
+    _fill_bank(bank, cfg, params, n=1)
+    srv = EnsembleServer(cfg, bank=bank)
+    checkpoint.save_draw(bank, jax.tree.map(lambda l: l + 5, params),
+                         _meta(cfg, 5), step=5)
+    with flaky_io(1, match="manifest.json") as calls:
+        assert srv.refresh(retries=2, backoff_s=0.0) is True
+    assert calls[0] >= 1  # the injector actually fired
+    assert srv.n_draws == 2
+
+
+def test_initial_load_still_fails_hard(tmp_path, cfg, params):
+    """Degradation is for live servers only: constructing a server on a
+    wholly-corrupt bank must raise (serving garbage is worse than not
+    starting)."""
+    bank = str(tmp_path / "bank")
+    paths = _fill_bank(bank, cfg, params, n=1)
+    corrupt_draw(paths[0], mode="garbage")
+    with pytest.raises(ValueError):
+        EnsembleServer(cfg, bank=bank)
+
+
+def test_chaos_spec_validation_and_hashability():
+    spec = ChaosSpec(nan_chains=[2], nan_rounds=[1])
+    assert spec.nan_chains == (2,) and spec.active
+    assert hash(spec) == hash(ChaosSpec(nan_chains=(2,), nan_rounds=(1,)))
+    assert not ChaosSpec().active
+    assert ChaosSpec(payload_nan_chains=(0,),
+                     payload_nan_rounds=(0,)).poisons_payload

@@ -114,3 +114,40 @@ def test_summarize_headline_keys():
     s = summarize(chains)
     assert set(s) == {"max_rhat", "min_ess", "mean_ess"}
     assert s["min_ess"] <= s["mean_ess"]
+
+
+# ---------------------------------------------------------------------------
+# fault discipline (PR 7): refuse non-finite traces, accept a health mask
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_trace_is_refused_loudly():
+    """A NaN R-hat reads exactly like a converged one in a `< 1.01`
+    assertion — so every entry point refuses poisoned traces instead."""
+    chains = _ar1(jax.random.PRNGKey(6), 3, 50, 0.2)
+    poisoned = chains.at[1, 7].set(jnp.nan)
+    for fn in (rhat, ess, summarize):
+        with pytest.raises(ValueError, match="non-finite"):
+            fn(poisoned)
+    with pytest.raises(ValueError, match="non-finite"):
+        rhat(chains.at[0, 0].set(jnp.inf))
+
+
+def test_health_mask_excludes_quarantined_chains():
+    chains = _ar1(jax.random.PRNGKey(7), 3, 50, 0.2)
+    poisoned = chains.at[1].set(jnp.nan)  # a diverged, quarantined chain
+    mask = np.array([True, False, True])
+    # masked statistics == statistics over the healthy subset, exactly
+    np.testing.assert_array_equal(np.asarray(rhat(poisoned, mask=mask)),
+                                  np.asarray(rhat(chains[np.array([0, 2])])))
+    np.testing.assert_array_equal(np.asarray(ess(poisoned, mask=mask)),
+                                  np.asarray(ess(chains[np.array([0, 2])])))
+    s = summarize(poisoned, mask=mask)
+    assert s["n_healthy"] == 2 and s["n_excluded"] == 1
+
+
+def test_health_mask_validation():
+    chains = _ar1(jax.random.PRNGKey(8), 3, 50, 0.2)
+    with pytest.raises(ValueError, match="mask shape"):
+        rhat(chains, mask=np.ones(4, bool))
+    with pytest.raises(ValueError, match="excludes every chain"):
+        ess(chains, mask=np.zeros(3, bool))

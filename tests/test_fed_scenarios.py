@@ -156,8 +156,11 @@ def test_scheduled_compressed_rounds_lower_into_one_scan():
                             reassign="categorical", collect=True,
                             collect_every=2, layout=layout, federation=fed)
     chains = jnp.zeros((4, 3))
+    sids0 = jnp.zeros((4,), jnp.int32)
+    ref0 = jnp.zeros((4, 3), jnp.float32)
     jaxpr = jax.make_jaxpr(execute)(
-        jax.random.PRNGKey(0), chains, data, bank)
+        jax.random.PRNGKey(0), chains, data, bank,
+        jnp.asarray(0, jnp.int32), (sids0, (ref0, ref0)), None)
 
     eqns = list(_all_eqns(jaxpr.jaxpr))
     pallas = [e for e in eqns if "pallas" in e.primitive.name]

@@ -324,7 +324,8 @@ def test_packed_run_jaxpr_single_pallas_call_no_pad_in_scan():
     chains = jax.tree.map(
         lambda t: jnp.zeros((4,) + t.shape, t.dtype), theta0)
     jaxpr = jax.make_jaxpr(execute)(
-        jax.random.PRNGKey(0), chains, data, bank)
+        jax.random.PRNGKey(0), chains, data, bank,
+        jnp.asarray(0, jnp.int32), None, None)
 
     eqns = list(_all_eqns(jaxpr.jaxpr))
     pallas = [e for e in eqns if "pallas" in e.primitive.name]

@@ -90,6 +90,62 @@ def test_parity_cell_bitmatches_oracle(executor, kernel, dtype):
                                       np.asarray(ref[name]), err_msg=name)
 
 
+@pytest.mark.parametrize("executor", ["vmap", "packed"])
+def test_sghmc_nan_pad_rows_never_reach_real_chains(executor):
+    """Mesh-pad chain rows are provably DEAD under SGHMC dynamics: build
+    the executor with one pad row (n_total=4 over n_chains=3), poison
+    that row's theta AND momentum with NaN, and the real chains' traces
+    must still bit-match the run_vmap oracle — any leak through
+    reassignment, the packed momentum segment, or a cross-chain
+    collective would surface as NaN (0 * NaN == NaN), not as drift."""
+    data, bank, theta0 = _problem(jax.random.PRNGKey(2), jnp.float32)
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=M,
+        step_size=1e-4, kernel="sghmc", friction=0.1,
+        surrogate=api.SurrogateSpec(kind="scalar", bank=bank),
+        schedule=api.Schedule(rounds=ROUNDS, local_steps=LOCAL,
+                              n_chains=3),
+        execution=api.Execution(executor=executor))
+    eng = f.engine
+    layout = eng._layout_for(theta0) if executor == "packed" else None
+    if executor == "packed":
+        assert layout is not None
+    execute = eng._executor(num_rounds=ROUNDS, n_chains=3, n_total=4,
+                            reassign="categorical", collect=True,
+                            collect_every=1, layout=layout)
+    from repro.core.sghmc import init_momentum
+    th = jax.tree.map(lambda t: jnp.zeros((4,) + t.shape, t.dtype),
+                      theta0)
+    chains = jax.tree.map(lambda t: t.at[3].set(jnp.nan),
+                          (th, init_momentum(th)))
+    chains_out, trace, _, _, _ = execute(
+        jax.random.PRNGKey(7), chains, data, bank,
+        jnp.asarray(0, jnp.int32), None, None)
+
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=LOCAL, prior_precision=1.0,
+                        surrogate="scalar")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core.sghmc import SGHMCConfig
+        oracle = FederatedSampler(log_lik, cfg, data, minibatch=M,
+                                  bank=bank,
+                                  use_kernel=(executor != "vmap"),
+                                  dynamics="sghmc",
+                                  sghmc=SGHMCConfig(friction=0.1))
+    ref = oracle.run_vmap(jax.random.PRNGKey(7), theta0, ROUNDS,
+                          n_chains=3)
+    for name in theta0:
+        np.testing.assert_array_equal(
+            np.asarray(trace[name][:3]), np.asarray(ref[name]),
+            err_msg=f"{name}: NaN pad row leaked into real chains")
+    # the pad row itself stays poisoned — proof the executor never
+    # sanitised it into something that could silently participate
+    for leaf in jax.tree.leaves(jax.tree.map(lambda t: t[3],
+                                             chains_out[0])):
+        assert np.isnan(np.asarray(leaf)).all()
+
+
 def test_mixed_dtype_tree_stays_packed_and_bitmatches():
     """One bf16 leaf + one fp32 leaf in the SAME tree rides the packed
     buffer (the old fp32-only guard is gone) and still bit-matches the
