@@ -223,8 +223,10 @@ def _bnn_rows(key, rows):
 def _fed_rows(key, rows):
     """Compressed vs uncompressed communication rounds (PR 5): the same
     Gaussian posterior through the facade with a registry scenario. Every
-    row reports steps/s AND the estimated upload bytes per chain per
-    communication round (the ``bytes_per_round`` envelope column). The
+    row reports steps/s AND the estimated wire bytes per chain per
+    communication round in BOTH directions — upload plus broadcast,
+    uncompressed legs at 4 bytes/coordinate (the ``bytes_per_round``
+    envelope column, ``Compression.bytes_per_round``). The
     ``compress_overhead`` ratio is gated absolutely: in-scan compression
     at round boundaries must not halve throughput (both sides share the
     backend, so the floor is machine-portable like the packed floors)."""

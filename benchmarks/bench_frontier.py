@@ -1,0 +1,167 @@
+"""Rival-sampler frontier: convergence vs wire bytes, head-to-head.
+
+The paper's FSGLD, the DSGLD baseline it corrects, and FA-LD
+(arXiv:2112.05120, server-averaged Langevin clients) race on ONE
+fixed-seed Gaussian-mean posterior — S=10 strongly non-IID shards,
+mu_s ~ U[-6,6]^d — across federation scenarios that span the
+communication axis: exact every-round exchange, 5x-delayed rounds, and
+ELF-style bidirectionally compressed rounds (arXiv:2303.04622). Every
+cell reports
+
+  * ``derived``          — posterior-mean MSE of the second-half trace
+                           against the analytic posterior mean (the
+                           convergence axis), and
+  * ``bytes_per_round``  — estimated wire bytes per chain per
+                           communication round, BOTH directions
+                           (``Compression.bytes_per_round``; the note
+                           carries the whole-run total), the cost axis,
+
+so the CSV IS the convergence-vs-bytes frontier. Three claims are gated
+same-run by ``check_regression.py::check_frontier_bounds`` via
+``frontier-floor=`` / ``frontier-ceiling=`` note marks (absolute,
+machine-portable — statistics of a fixed-seed problem, like the calib
+bounds):
+
+  * conducive gradients survive delay: FSGLD's delayed-5x MSE stays
+    under an absolute ceiling while DSGLD's indicator — delayed MSE
+    blowing up by >5x over FSGLD's — fails for DSGLD;
+  * compression saves wire: every compressed cell's bytes_per_round is
+    strictly below the exact exchange's;
+  * FA-LD is exactly its oracle: a small engine run with
+    ``aggregation='fald'`` is bitwise-identical to
+    ``repro.rivals.fald_run_vmap`` (indicator row, floor 1).
+
+Sizes are FIXED (REPRO_BENCH_SCALE is ignored): the gates are
+statistical properties and shrinking the run only widens the noise on
+the quantities under gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, Timer
+from repro import api
+from repro.core import analytic_gaussian_likelihood_surrogate, make_bank
+from repro.fed import SCENARIOS
+from repro.rivals import fald_run_vmap
+
+# committed gate bounds — measured ~{fsgld: 2e-3..2e-2} on the fixed
+# seed; the ceilings leave ~5x headroom, the DSGLD-degrades factor is
+# the same 5x margin fig2_3 uses
+FSGLD_MSE_CEILING = 0.1
+DSGLD_DEGRADES_FACTOR = 5.0
+
+S, N_PER, D = 10, 200, 64
+ROUNDS, LOCAL, CHAINS, MINIBATCH = 4000, 1, 4, 10
+
+# the frontier grid: every method crossed with the communication axis.
+# The compressed cell is the BIDIRECTIONAL qsgd scenario — hard top-k
+# (elf-bidir-topk-1%) destabilizes the non-averaging methods on this
+# problem (error feedback accumulates the full drift and dumps it one
+# giant coordinate at a time); FA-LD tolerates it (the averaging
+# re-synchronizes clients), which the oracle gate row exercises.
+METHODS = ("dsgld", "fsgld", "fald")
+SCENARIO_NAMES = ("identity", "delayed-5x", "elf-bidir-qsgd-8bit")
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem():
+    key = jax.random.PRNGKey(0)
+    mus = jax.random.uniform(key, (S, D), minval=-6, maxval=6)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, N_PER, D))
+    post_mean = x.reshape(-1, D).sum(0) / (1 + S * N_PER)
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    bank = make_bank(mu_s, prec_s, "diag")
+    return x, post_mean, bank
+
+
+def _cell(x, bank, method, scenario):
+    samp = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+        minibatch=MINIBATCH, step_size=1e-4, method=method,
+        surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                   if method == "fsgld"
+                   else api.SurrogateSpec(kind="none")),
+        schedule=api.Schedule(rounds=ROUNDS, local_steps=LOCAL,
+                              n_chains=CHAINS),
+        federation=scenario)
+    with Timer() as t:
+        trace = samp.sample(jax.random.PRNGKey(2), jnp.zeros(D))
+    return trace, t.us_per(ROUNDS * LOCAL * CHAINS)
+
+
+def _fald_oracle_row():
+    """Tiny bitwise engine-vs-oracle run: the regression pin that keeps
+    the frontier's FA-LD cells honest (indicator, frontier-floor=1)."""
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (4, 8, 3))
+    theta0 = jnp.zeros(3)
+    samp = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+        minibatch=4, method="fald",
+        surrogate=api.SurrogateSpec(kind="none"),
+        schedule=api.Schedule(rounds=4, local_steps=2, n_chains=4),
+        federation="elf-bidir-topk-1%")
+    eng = np.asarray(samp.sample(jax.random.PRNGKey(3), theta0))
+    orc = np.asarray(fald_run_vmap(
+        log_lik, samp.cfg, samp.data, 4, jax.random.PRNGKey(3), theta0,
+        4, n_chains=4, federation="elf-bidir-topk-1%"))
+    return Row("frontier/gate/fald_matches_oracle", 0.0,
+               float(np.array_equal(eng, orc)),
+               note="engine aggregation='fald' bitwise == rivals.fald "
+                    "oracle (compressed bidir scenario); "
+                    "frontier-floor=1")
+
+
+def run():
+    x, post_mean, bank = _problem()
+    rows, mse = [], {}
+    for method in METHODS:
+        for scenario in SCENARIO_NAMES:
+            trace, us = _cell(x, bank, method, scenario)
+            half = trace[:, trace.shape[1] // 2:]          # (C, T/2, D)
+            m = float(jnp.sum((half.mean((0, 1)) - post_mean) ** 2))
+            mse[(method, scenario)] = m
+            fed = SCENARIOS[scenario]
+            bpr = fed.compression.bytes_per_round(D)
+            n_comm = ROUNDS // fed.schedule.delay
+            note = (f"derived = posterior-mean MSE (second-half trace); "
+                    f"total wire ~{bpr * n_comm / 1e3:.1f} kB/chain over "
+                    f"{n_comm} comm rounds")
+            if method == "fsgld":
+                note += f"; frontier-ceiling={FSGLD_MSE_CEILING}"
+            rows.append(Row(f"frontier/{method}/{scenario}", us, m,
+                            note=note, bytes_per_round=bpr))
+    # claim 1: FSGLD converges under delay where DSGLD degrades
+    rows.append(Row(
+        "frontier/gate/dsgld_degrades_fsgld_survives_delay", 0.0,
+        float(mse[("dsgld", "delayed-5x")]
+              > DSGLD_DEGRADES_FACTOR * mse[("fsgld", "delayed-5x")]),
+        note=f"dsgld delayed-5x MSE > {DSGLD_DEGRADES_FACTOR:g}x fsgld's "
+             f"(the paper's conducive-gradient claim on the frontier); "
+             f"frontier-floor=1"))
+    # claim 2: every compressed cell moves strictly fewer bytes than the
+    # exact exchange (within this run — no baseline needed)
+    exact = SCENARIOS["identity"].compression.bytes_per_round(D)
+    comp_b = [SCENARIOS[s].compression.bytes_per_round(D)
+              for s in SCENARIO_NAMES
+              if not SCENARIOS[s].compression.identity]
+    rows.append(Row(
+        "frontier/gate/compressed_below_exact", 0.0,
+        float(bool(comp_b) and max(comp_b) < exact),
+        note=f"compressed bytes/round (max {max(comp_b):g}) strictly "
+             f"below exact exchange ({exact:g}); frontier-floor=1"))
+    # claim 3: FA-LD engine == oracle, bitwise
+    rows.append(_fald_oracle_row())
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import bench_main
+    raise SystemExit(bench_main(run))

@@ -17,6 +17,10 @@ Gate semantics:
     metrics of fixed-seed problems (benchmarks/bench_calibration.py)
     are statistical properties, not throughput — see
     ``check_calibration_bounds``;
+  * ``frontier-floor=X`` / ``frontier-ceiling=Y`` marks gate the
+    rival-sampler frontier the same way (benchmarks/bench_frontier.py):
+    FSGLD MSE ceilings and 0/1 indicator rows with floor 1 — see
+    ``check_frontier_bounds``;
   * no baseline file            -> SKIP (exit 0) — the lane still runs
     and uploads its artifact, the gate just has nothing to compare to;
   * scale mismatch              -> SKIP (exit 0) — a SCALE=0.01 smoke run
@@ -56,6 +60,8 @@ FLOOR_MARK = "speedup-floor="
 FED_PREFIX = "chains/fed/"
 CALIB_FLOOR_MARK = "calib-floor="
 CALIB_CEIL_MARK = "calib-ceiling="
+FRONTIER_FLOOR_MARK = "frontier-floor="
+FRONTIER_CEIL_MARK = "frontier-ceiling="
 
 
 def _rows(env: dict) -> dict:
@@ -92,18 +98,18 @@ def _mark_value(note: str, mark: str):
     return float(note.split(mark, 1)[1].split(";")[0].split()[0])
 
 
-def check_calibration_bounds(env: dict) -> list:
-    """ABSOLUTE gate on calibration rows: a row whose note carries
-    ``calib-floor=X`` and/or ``calib-ceiling=Y`` fails when derived
-    falls outside [X, Y]. Like the speedup floors this needs no baseline
-    — the bounds are committed statistical properties of fixed-seed
-    problems (ensemble NLL/ECE ceilings, coverage bracketed from both
-    sides), portable across machines. Returns failing row names."""
+def _check_absolute_bounds(env: dict, floor_mark: str,
+                           ceil_mark: str) -> list:
+    """ABSOLUTE gate on marked rows: a row whose note carries
+    ``<floor_mark>X`` and/or ``<ceil_mark>Y`` fails when derived falls
+    outside [X, Y]. Like the speedup floors this needs no baseline —
+    the bounds are committed statistical properties of fixed-seed
+    problems, portable across machines. Returns failing row names."""
     failed = []
     for r in env.get("rows", []):
         note = r.get("note", "")
-        lo = _mark_value(note, CALIB_FLOOR_MARK)
-        hi = _mark_value(note, CALIB_CEIL_MARK)
+        lo = _mark_value(note, floor_mark)
+        hi = _mark_value(note, ceil_mark)
         if lo is None and hi is None:
             continue
         got = r.get("derived", float("nan"))
@@ -118,6 +124,22 @@ def check_calibration_bounds(env: dict) -> list:
         if not ok:
             failed.append(r["name"])
     return failed
+
+
+def check_calibration_bounds(env: dict) -> list:
+    """Calibration rows (benchmarks/bench_calibration.py): ensemble
+    NLL/ECE ceilings, coverage bracketed from both sides."""
+    return _check_absolute_bounds(env, CALIB_FLOOR_MARK, CALIB_CEIL_MARK)
+
+
+def check_frontier_bounds(env: dict) -> list:
+    """Rival-frontier rows (benchmarks/bench_frontier.py): FSGLD
+    posterior-mean MSE ceilings plus the indicator gates (DSGLD degrades
+    under delay where FSGLD survives; compressed cells move strictly
+    fewer bytes than exact; the FA-LD engine is bitwise-identical to its
+    pure-JAX oracle) — indicators are 0/1 derived values with floor 1."""
+    return _check_absolute_bounds(env, FRONTIER_FLOOR_MARK,
+                                  FRONTIER_CEIL_MARK)
 
 
 def check_fed_bytes(env: dict) -> list:
@@ -163,6 +185,7 @@ def main(argv=None) -> int:
     floor_failed = check_speedup_floors(cur)
     floor_failed += check_fed_bytes(cur)
     floor_failed += check_calibration_bounds(cur)
+    floor_failed += check_frontier_bounds(cur)
     if floor_failed:
         print(f"absolute gate(s) violated: {floor_failed}",
               file=sys.stderr)

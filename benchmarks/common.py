@@ -25,7 +25,9 @@ class Row:
     us_per_call: float
     derived: float
     note: str = ""
-    # bytes uploaded per chain per communication round (the compressed-
+    # bytes on the wire per chain per communication round, BOTH
+    # directions — client→server upload plus server→client broadcast,
+    # uncompressed legs counted at 4 bytes/coordinate (the compressed-
     # rounds lanes); None on rows where the wire cost is not the point.
     # Additive envelope column: absent->null in old baselines, ignored by
     # consumers that don't know it.

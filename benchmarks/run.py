@@ -14,6 +14,10 @@
   calib — K-draw ensemble calibration gates (NLL/ECE/coverage with
           absolute calib-floor=/calib-ceiling= bounds in the notes,
           enforced by check_regression.py; fixed sizes, SCALE ignored)
+  frontier — rival samplers head-to-head (DSGLD / FSGLD / FA-LD across
+          federation scenarios): posterior-mean MSE vs wire bytes per
+          round, with absolute frontier-floor=/frontier-ceiling= gates
+          (check_regression.py; fixed sizes, SCALE ignored)
 
 REPRO_BENCH_SCALE=10 approaches paper-scale chain lengths;
 REPRO_BENCH_SCALE=0.01 is the CI bench-smoke setting.
@@ -32,10 +36,11 @@ import traceback
 
 
 def main(argv=None) -> int:
-    from benchmarks import (bench_calibration, bench_chains, bench_kernel,
-                            f1_linreg, fig1_variance, fig2_3_gaussian,
-                            fig4_epsilon, fig5_metric_learning,
-                            remark1_alpha, table1_bnn)
+    from benchmarks import (bench_calibration, bench_chains,
+                            bench_frontier, bench_kernel, f1_linreg,
+                            fig1_variance, fig2_3_gaussian, fig4_epsilon,
+                            fig5_metric_learning, remark1_alpha,
+                            table1_bnn)
     from benchmarks.common import write_json
 
     modules = [
@@ -44,6 +49,7 @@ def main(argv=None) -> int:
         ("table1", table1_bnn), ("f1", f1_linreg),
         ("remark1", remark1_alpha), ("kernel", bench_kernel),
         ("chains", bench_chains), ("calib", bench_calibration),
+        ("frontier", bench_frontier),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,

@@ -53,6 +53,7 @@ from repro.core.health import Recovery, RunHealth
 from repro.core.surrogate import SurrogateBank, fit_scalar_tree, make_bank
 from repro.fed import Federation, get_scenario
 from repro.fed.partition import partition as partition_clients
+from repro.rivals.methods import get_method
 
 PyTree = Any
 LogLikFn = Callable[[PyTree, PyTree], jax.Array]
@@ -236,8 +237,12 @@ class FSGLD:
     data: client shards — either a pytree with stacked (S, n, ...) leaves
     or a list of per-client pytrees (ragged clients are padded with
     ``pad_shards`` and the pad rows are provably dead). ``method``
-    selects the estimator family ('fsgld' needs a surrogate kind other
-    than 'none'; 'dsgld'/'sgld' ignore surrogates). ``kernel`` selects
+    selects the sampling method from the ``repro.rivals`` table:
+    'fsgld' (the source paper; needs a surrogate kind other than
+    'none'), 'dsgld'/'sgld' (baselines, surrogates ignored), or 'fald'
+    (FA-LD, arXiv:2112.05120 — DSGLD clients whose states the engine
+    server-averages at every communication round, each client's noise
+    amplified sqrt(C); Langevin kernel only). ``kernel`` selects
     the transition dynamics: 'sgld' (the Langevin family above) or
     'sghmc' (federated SGHMC with the SAME conducive estimator stack —
     see repro.core.sghmc; ``friction`` is its alpha_f knob). Both
@@ -262,15 +267,20 @@ class FSGLD:
                  shard_probs: Optional[tuple] = None,
                  sizes: Optional[tuple] = None,
                  federation: Any = None):
-        if method not in ("sgld", "dsgld", "fsgld"):
-            raise ValueError(method)
+        meth = get_method(method)
         if kernel not in ("sgld", "sghmc"):
             raise ValueError(kernel)
+        if meth.aggregation == "fald" and kernel == "sghmc":
+            raise ValueError(
+                "method='fald' is a Langevin algorithm (FA-LD averages "
+                "overdamped clients); it does not compose with "
+                "kernel='sghmc'")
+        self.method = meth
         self.posterior = posterior
         self.surrogate = surrogate if surrogate is not None \
-            else (SurrogateSpec() if method == "fsgld"
+            else (SurrogateSpec() if meth.needs_surrogate
                   else SurrogateSpec(kind="none"))
-        if method == "fsgld" and self.surrogate.kind == "none":
+        if meth.needs_surrogate and self.surrogate.kind == "none":
             raise ValueError("method='fsgld' needs a surrogate kind other "
                              "than 'none' (that's DSGLD)")
         self.schedule = schedule if schedule is not None \
@@ -297,7 +307,8 @@ class FSGLD:
         self.sizes = sizes
         num_shards = jax.tree.leaves(data)[0].shape[0]
         self.cfg = SamplerConfig(
-            method=method, step_size=step_size, num_shards=num_shards,
+            method=meth.cfg_method, step_size=step_size,
+            num_shards=num_shards,
             shard_probs=shard_probs,
             local_updates=self.schedule.local_steps, alpha=alpha,
             surrogate=(self.surrogate.kind
@@ -383,7 +394,7 @@ class FSGLD:
                 sizes=self.sizes, packed=packed,
                 dynamics=("sghmc" if self.kernel == "sghmc"
                           else "langevin"),
-                sghmc=sghmc)
+                sghmc=sghmc, aggregation=self.method.aggregation)
         return self._engine
 
     # -- phase 2: sampling -------------------------------------------------

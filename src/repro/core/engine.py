@@ -74,6 +74,20 @@ federation carry, health words, trace-so-far) between segments through
 valid snapshot with traces bitwise identical to an uninterrupted run —
 the executor takes the absolute starting round and the federation carry
 as inputs, so segmentation never resets in-scan state.
+
+Rival samplers (PR 8): ``aggregation='fald'`` lowers FA-LD (federated
+averaging Langevin dynamics, Deng et al. 2021) into the SAME scanned
+round body — at every communication round the participating chains'
+states are averaged in flat fp32 space (a masked ``psum`` over the
+``data`` axis, so multi-device blocks agree), and each client's injected
+noise is amplified by ``sqrt(n_chains)`` (temperature × C) so the
+AVERAGED iterate targets the correct posterior temperature. ELF-style
+bidirectional compression (``Compression(direction='dual'|'bidir')``)
+compresses the server→client broadcast as a delta against the shared
+reference with its OWN error-feedback residual riding the carry next to
+the primal one — primal-only runs keep today's carry and ops bitwise.
+Both lower into the one-scan/one-pallas_call/no-pad round body; the
+pure-JAX FA-LD oracle lives in ``repro.rivals.fald``.
 """
 from __future__ import annotations
 
@@ -91,7 +105,7 @@ from repro.core.sampler import (LogLikFn, ShardScheme, chain_scales,
                                 make_step_fn)
 from repro.core.surrogate import SurrogateBank, make_bank
 from repro.kernels import ops as kops
-from repro.sharding.rules import chain_spec
+from repro.sharding.rules import chain_spec, fed_carry_spec
 
 PyTree = Any
 
@@ -489,6 +503,18 @@ class MeshChainEngine:
     output). The REAL chains' RNG streams are derived from the true
     ``n_chains``, so a padded run stays bit-identical to the
     ``run_vmap`` oracle with the same chain count.
+
+    ``aggregation='fald'`` turns the engine into FA-LD: participating
+    chains' states are server-averaged at every communication round
+    (inside the scan, a masked psum over the ``data`` axis) and each
+    chain's injected noise is scaled so the AVERAGE has the configured
+    temperature (per-client temperature × n_chains — FA-LD's
+    ``sqrt(N/p_c)`` noise with uniform weights). Composes with every
+    executor, Federation schedule/compression (including dual/bidir),
+    health/recovery, and snapshots; Langevin dynamics only. The rounds
+    always take the federated round body (even with no Federation spec),
+    so FA-LD runs share one RNG stream layout with scheduled runs and
+    the ``repro.rivals.fald`` oracle mirrors it bitwise.
     """
     log_lik_fn: LogLikFn
     cfg: SamplerConfig
@@ -501,6 +527,7 @@ class MeshChainEngine:
     packed: Optional[bool] = None
     dynamics: str = "langevin"
     sghmc: Any = None  # Optional[SGHMCConfig]; None -> defaults
+    aggregation: str = "none"  # 'none' | 'fald' (server-averaged rounds)
 
     def __post_init__(self):
         if self.mesh is None:
@@ -513,6 +540,15 @@ class MeshChainEngine:
                  else tuple(int(n) for n in self.sizes))
         assert len(sizes) == s and max(sizes) == max_n, (sizes, max_n)
         self.scheme = ShardScheme(sizes=sizes, probs=self.cfg.probs())
+        if self.aggregation not in ("none", "fald"):
+            raise ValueError(
+                f"unknown aggregation {self.aggregation!r}; "
+                f"available: none, fald")
+        if self.aggregation == "fald" and self.dynamics != "langevin":
+            raise NotImplementedError(
+                "aggregation='fald' is a Langevin-dynamics algorithm "
+                "(FA-LD averages overdamped clients); it does not "
+                f"compose with dynamics={self.dynamics!r}")
         if self.dynamics == "sghmc":
             from repro.core.sghmc import SGHMCConfig, make_sghmc_step
             if self.sghmc is None:
@@ -575,9 +611,11 @@ class MeshChainEngine:
         fed_carry, health) -> (chains, traces, key, fed_carry, health)``.
         ``r0`` is the absolute index of the first round this dispatch
         runs (traced — resegmenting a run never retraces); ``fed_carry``
-        is ``(sids, (ref, err) | None)`` for a lowered federation
-        scenario and None otherwise; ``health`` is ``(word, lp_ref)``
-        when a recovery policy is active and None otherwise. Threading
+        is ``(sids, (ref, err[, derr]) | None)`` for a lowered
+        federation scenario or FA-LD aggregation (``derr`` rides along
+        for dual/bidir compression) and None otherwise; ``health`` is
+        ``(word, lp_window)`` when a recovery policy is active and None
+        otherwise. Threading
         both through the executor I/O is what makes segment boundaries
         (snapshots, resume) invisible to the scanned state.
 
@@ -621,22 +659,33 @@ class MeshChainEngine:
         probs = jnp.asarray(cfg.probs())
         bank_kind = self.bank.kind if self.bank is not None else None
 
+        # FA-LD noise calibration: averaging C clients shrinks the
+        # injected-noise variance by C, so each client samples at
+        # temperature * C and the AVERAGED iterate targets cfg.temperature
+        # (Deng et al. 2021's sqrt(N/p_c) client noise, uniform weights).
+        agg = self.aggregation == "fald"
+        cfg_dyn = (dataclasses.replace(
+            cfg, temperature=cfg.temperature * n_chains) if agg else cfg)
+
         grad_vmap = make_masked_grad_vmap(
             jax.grad(self.log_lik_fn), per=per, n_chains=n_chains,
             d_size=self.mesh.shape["data"]) if n_pad else None
         if layout is not None:
             round_fn = make_packed_round_fn(
-                self.log_lik_fn, cfg, self.scheme, self.minibatch,
+                self.log_lik_fn, cfg_dyn, self.scheme, self.minibatch,
                 bank_kind, layout, collect=collect, dynamics=self.dynamics,
                 sghmc=self.sghmc, grad_vmap=grad_vmap)
         elif self.use_kernel:
             round_fn = make_chain_round_fn(
-                self.log_lik_fn, cfg, self.scheme, self.minibatch,
+                self.log_lik_fn, cfg_dyn, self.scheme, self.minibatch,
                 bank_kind, collect=collect, dynamics=self.dynamics,
                 sghmc=self.sghmc, grad_vmap=grad_vmap)
         else:
+            step_fn = self.step_fn if not agg else make_step_fn(
+                self.log_lik_fn, cfg_dyn, self.scheme, self.bank,
+                use_kernel=False)
             one_chain = make_round_fn(
-                self.log_lik_fn, cfg, self.scheme, self.step_fn,
+                self.log_lik_fn, cfg_dyn, self.scheme, step_fn,
                 self.minibatch, collect=collect,
                 collect_state=((lambda s: s[0])
                                if self.dynamics == "sghmc" else None))
@@ -678,18 +727,32 @@ class MeshChainEngine:
             def set_view(st, th, r):
                 return (th, r) if hmc else th
 
-        if fed is not None:
+        # FA-LD takes the federated round body even with no Federation
+        # spec (identity schedule, exact exchange): the averaging is a
+        # communication-round feature, and sharing the fed body keeps ONE
+        # RNG stream layout for the rivals/fald oracle to mirror.
+        use_fed = fed is not None or agg
+        if use_fed:
             from repro.fed import schedule as fsched
-            from repro.fed.compress import make_compressor, make_flattener
-            sched, comp = fed.schedule, fed.compression
+            from repro.fed.compress import (Compression, make_compressor,
+                                            make_flattener)
+            if fed is not None:
+                sched, comp = fed.schedule, fed.compression
+            else:
+                sched, comp = fsched.CommSchedule(), Compression()
             use_part = sched.participation < 1.0
             use_strag = sched.straggler_prob > 0.0
             use_comp = not comp.identity
+            # ELF leg selection: primal compresses client->server uploads
+            # (today's path), dual compresses the server->client
+            # broadcast with its own EF residual riding the carry.
+            use_primal, use_dual = comp.use_primal, comp.use_dual
+            use_exch = use_comp or agg
 
         # the identity fast path keeps its round-index-free scan (xs=None)
         # — same jaxpr as ever; any of these features needs the absolute
         # round index threaded through the scan instead.
-        use_r = fed is not None or chaos is not None or rec is not None
+        use_r = use_fed or chaos is not None or rec is not None
         if rec is not None and rec.use_detector:
             probe_sample = _make_batch_sampler(cfg, self.scheme,
                                                self.minibatch)
@@ -760,8 +823,18 @@ class MeshChainEngine:
                 once per ROUND after the local updates (no extra
                 launches). Every write is a per-chain where(): a chain
                 that never trips keeps bit-identical state/trace, and a
-                tripped chain never reaches into its neighbours."""
-                word, lp_ref = hw
+                tripped chain never reaches into its neighbours.
+
+                The divergence reference is a nearest-rank QUANTILE over
+                the chain's last ``rec.window`` probes (the ring rides
+                the health carry, -inf padded), not a running max: the
+                quantile is robust to single lucky probes, so the
+                threshold can sit a few probe-IQRs under the recent
+                healthy plateau and a SLOW divergence trips early. While
+                the window is -inf dominated (warm-up, post-respawn) the
+                reference is -inf and nothing trips — so a fault-free
+                run stays bitwise identical with health on or off."""
+                word, lp_win = hw
                 th, mom = get_view(state)
                 bad_new = ~finite_chains(th)
                 if hmc and rec.check_momentum:
@@ -786,8 +859,16 @@ class MeshChainEngine:
                         th, kp, sids)
                     lp = lp.astype(jnp.float32) \
                         - 0.5 * cfg.prior_precision * sq
+                    # nearest-rank quantile, NOT jnp.quantile: lerp
+                    # between -inf (warm-up padding) and a finite probe
+                    # would be NaN
+                    q_idx = min(rec.window - 1,
+                                int(rec.quantile * (rec.window - 1)))
+                    lp_ref = jnp.sort(lp_win, axis=1)[:, q_idx]
                     bad_new = bad_new | ~jnp.isfinite(lp) | \
                         (lp < lp_ref - rec.divergence_threshold)
+                    pushed = jnp.concatenate(
+                        [lp_win[:, 1:], lp[:, None]], axis=1)
                 if rec.policy == "quarantine":
                     bad = (word != 0) | bad_new
                     word = jnp.where((word == 0) & bad_new,
@@ -799,9 +880,10 @@ class MeshChainEngine:
                             old, new)
 
                     if lp is not None:
-                        lp_ref = jnp.where(bad | ~jnp.isfinite(lp),
-                                           lp_ref,
-                                           jnp.maximum(lp_ref, lp))
+                        # quarantined chains' windows freeze with them
+                        lp_win = jnp.where(
+                            (bad | ~jnp.isfinite(lp))[:, None],
+                            lp_win, pushed)
                     repl = bad
                 else:                                       # respawn
                     word = word + bad_new.astype(word.dtype)
@@ -820,10 +902,13 @@ class MeshChainEngine:
                             cand, new)
 
                     if lp is not None:
-                        lp_ref = jnp.where((~bad_new) & jnp.isfinite(lp),
-                                           jnp.maximum(lp_ref, lp),
-                                           lp_ref)
-                        lp_ref = jnp.where(bad_new, -jnp.inf, lp_ref)
+                        # respawned chains restart an empty window (their
+                        # donor's plateau is not theirs)
+                        lp_win = jnp.where(
+                            ((~bad_new) & jnp.isfinite(lp))[:, None],
+                            pushed, lp_win)
+                        lp_win = jnp.where(bad_new[:, None], -jnp.inf,
+                                           lp_win)
                     repl = bad_new
                 th = jax.tree.map(fix, th, pre_th)
                 mom = jax.tree.map(fix, mom, pre_mom) if hmc else None
@@ -833,7 +918,7 @@ class MeshChainEngine:
                             repl.reshape((per, 1) + (1,) * (t.ndim - 2)),
                             f[:, None], t),
                         trace, th)
-                return set_view(state, th, mom), trace, (word, lp_ref)
+                return set_view(state, th, mom), trace, (word, lp_win)
 
             def round_body(carry, r):
                 key, state, hw = carry
@@ -871,46 +956,104 @@ class MeshChainEngine:
                     # (their ref/err rows freeze with them)
                     exch = exch & (hw[0] == 0)
                 sids = jnp.where(exch, new_sids, sids)
-                if use_comp:
-                    # compressed exchange at the round boundary: the
-                    # exchanging chains' deltas (plus error feedback) are
-                    # compressed and the chain continues from the
-                    # server's view; everyone else's state is untouched —
-                    # bitwise: non-exchanging chains' leaves are never
-                    # written (no fp32 flatten round-trip), and the
-                    # whole pipeline (flatten, top_k/quantize, repack)
-                    # runs under a lax.cond so delayed schedules skip it
-                    # entirely on non-communication rounds (comm is a
-                    # replicated scalar of r, so the cond is SPMD-safe).
+                if use_exch:
+                    # exchange at the round boundary: primal leg
+                    # (compressed client->server upload), optional FA-LD
+                    # server averaging over the participating chains,
+                    # optional dual leg (compressed server->client
+                    # broadcast) — the exchanging chains continue from
+                    # the server's view; everyone else's state is
+                    # untouched — bitwise: non-exchanging chains' leaves
+                    # are never written (no fp32 flatten round-trip), and
+                    # the whole pipeline (flatten, top_k/quantize,
+                    # average, repack) runs under a lax.cond so delayed
+                    # schedules skip it entirely on non-communication
+                    # rounds (comm is a replicated scalar of r, so the
+                    # cond is SPMD-safe).
                     def do_exchange(op):
-                        state, (ref, err) = op
+                        state, cst_in = op
                         th, mom = get_view(state)
                         flat = flatten(th)
-                        upd = flat - ref + err
-                        dhat = compress(upd, jax.random.fold_in(k_fed, 1))
+                        poison = None
                         if chaos is not None and chaos.poisons_payload:
                             # corrupted wire payload: the delta the server
                             # applies goes NaN for the chosen chains at
                             # the chosen rounds — their server view (and
                             # the state they continue from) diverges
-                            pm = jnp.isin(r, jnp.asarray(
+                            poison = jnp.isin(r, jnp.asarray(
                                 chaos.payload_nan_rounds)) & jnp.isin(
                                 gid, jnp.asarray(chaos.payload_nan_chains))
-                            dhat = jnp.where(pm[:, None], jnp.nan, dhat)
-                        ref_new = ref + dhat
-                        err_new = (upd - dhat if comp.error_feedback
-                                   else jnp.zeros_like(upd))
-                        m = exch[:, None]
-                        ref = jnp.where(m, ref_new, ref)
-                        err = jnp.where(m, err_new, err)
-                        th_srv = unflatten(ref_new)  # the server's view
+                        if use_primal:
+                            ref, err = cst_in[0], cst_in[1]
+                            upd = flat - ref + err
+                            dhat = compress(
+                                upd, jax.random.fold_in(k_fed, 1))
+                            if poison is not None:
+                                dhat = jnp.where(poison[:, None],
+                                                 jnp.nan, dhat)
+                            # m_flat: the server's per-chain model after
+                            # the upload leg
+                            m_flat = ref + dhat
+                            err_new = (upd - dhat if comp.error_feedback
+                                       else jnp.zeros_like(upd))
+                        else:
+                            ref = cst_in[0] if cst_in is not None else None
+                            m_flat = flat
+                            if poison is not None:
+                                m_flat = jnp.where(poison[:, None],
+                                                   jnp.nan, m_flat)
+                        if agg:
+                            # FA-LD server step: average the exchanging
+                            # REAL chains' models (masked psum over the
+                            # chain axis — every data group sees the same
+                            # average; pad chains never contribute).
+                            w = exch & is_real
+                            cnt = jax.lax.psum(
+                                jnp.sum(w.astype(jnp.float32)), "data")
+                            tot = jax.lax.psum(jnp.sum(
+                                jnp.where(w[:, None], m_flat, 0.0),
+                                axis=0), "data")
+                            avg = tot / jnp.maximum(cnt, 1.0)
+                            m_flat = jnp.where(w[:, None], avg[None],
+                                               m_flat)
+                        if use_dual:
+                            # dual leg: the broadcast is a compressed
+                            # delta against the SHARED reference (what
+                            # both sides last agreed on), with its own
+                            # error-feedback residual
+                            derr = cst_in[2]
+                            dupd = m_flat - ref + derr
+                            dd = compress(
+                                dupd, jax.random.fold_in(k_fed, 3))
+                            v_new = ref + dd
+                            derr_new = (dupd - dd if comp.error_feedback
+                                        else jnp.zeros_like(dupd))
+                        else:
+                            # exact broadcast: the client receives the
+                            # server model itself (NOT ref + (m - ref):
+                            # the fp round-trip would break bitwise
+                            # parity of primal-only runs)
+                            v_new = m_flat
+                        cst_out = cst_in
+                        if use_comp:
+                            mm = exch[:, None]
+                            ref_o = jnp.where(mm, v_new, cst_in[0])
+                            err_o = (jnp.where(mm, err_new, cst_in[1])
+                                     if use_primal else cst_in[1])
+                            if use_dual:
+                                cst_out = (ref_o, err_o,
+                                           jnp.where(mm, derr_new,
+                                                     cst_in[2]))
+                            else:
+                                cst_out = (ref_o, err_o)
+                        th_srv = unflatten(v_new)  # the clients' new view
                         th = jax.tree.map(
                             lambda srv, old: jnp.where(
                                 exch.reshape((per,)
                                              + (1,) * (old.ndim - 1)),
                                 srv, old),
                             th_srv, th)
-                        return set_view(state, th, mom), (ref, err)
+                        return set_view(state, th, mom), cst_out
 
                     state, cst = jax.lax.cond(
                         comm, do_exchange, lambda op: op, (state, cst))
@@ -952,7 +1095,7 @@ class MeshChainEngine:
                 return (key, state, sids, cst, hw), y
 
             rounds = (r0 + jnp.arange(num_rounds)) if use_r else None
-            if fed is None:
+            if not use_fed:
                 (key, state, hw0), traces = jax.lax.scan(
                     round_body, (key, state, hw0), rounds,
                     length=num_rounds)
@@ -981,7 +1124,7 @@ class MeshChainEngine:
             return chains_out, traces, key, fedc, hw0
 
         cspec = self._chain_spec()
-        fc_spec = cspec if fed is not None else None
+        fc_spec = fed_carry_spec() if use_fed else None
         h_spec = cspec if rec is not None else None
         mapped = shard_map(
             block, mesh=self.mesh,
@@ -1124,18 +1267,28 @@ class MeshChainEngine:
         # boundaries — snapshots, resume — never reset them)
         hw = None
         if recovery is not None:
+            # the divergence probe window rides the carry as a (C, W)
+            # ring, -inf padded (= empty)
             hw = (jnp.zeros((n_total,), jnp.int32),
-                  jnp.full((n_total,), -jnp.inf, jnp.float32))
+                  jnp.full((n_total, recovery.window), -jnp.inf,
+                           jnp.float32))
         fedc = None
-        if fed is not None:
+        # FA-LD routes through the federated round body even with no
+        # Federation spec (see _executor) — it needs the fed carry
+        use_fed = fed is not None or self.aggregation == "fald"
+        if use_fed:
+            comp0 = fed.compression if fed is not None else None
             cst0 = None
-            if not fed.compression.identity:
+            if comp0 is not None and not comp0.identity:
                 from repro.fed.compress import make_flattener
                 th_part = chains[0] if self.dynamics == "sghmc" else chains
                 flatten, _, _ = make_flattener(th_part)
                 # copy: flatten() can alias the (donated) chains buffer
                 ref0 = jnp.array(flatten(th_part), copy=True)
                 cst0 = (ref0, jnp.zeros_like(ref0))
+                if comp0.use_dual:
+                    # dual-leg error feedback rides a third carry slot
+                    cst0 = cst0 + (jnp.zeros_like(ref0),)
             fedc = (jnp.zeros((n_total,), jnp.int32), cst0)
 
         typed_key = hasattr(jax.dtypes, "prng_key") and jnp.issubdtype(
@@ -1152,6 +1305,8 @@ class MeshChainEngine:
                 if fedc[1] is not None:
                     p["ref"] = fedc[1][0][:n_chains]
                     p["err"] = fedc[1][1][:n_chains]
+                    if len(fedc[1]) == 3:
+                        p["derr"] = fedc[1][2][:n_chains]
             if hw is not None:
                 p["word"] = hw[0][:n_chains]
                 p["lp_ref"] = hw[1][:n_chains]
@@ -1192,6 +1347,8 @@ class MeshChainEngine:
                     if fedc[1] is not None:
                         cst0 = (repad(payload["ref"]),
                                 repad(payload["err"]))
+                        if len(fedc[1]) == 3:
+                            cst0 = cst0 + (repad(payload["derr"]),)
                     fedc = (repad(jnp.asarray(payload["sids"],
                                               jnp.int32), fill=0), cst0)
                 if hw is not None:
@@ -1249,11 +1406,19 @@ class MeshChainEngine:
                    jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out))
         if recovery is None:
             return res
+        lp_ref = None
+        if recovery.use_detector:
+            # surface the reduced per-chain reference (the same
+            # nearest-rank quantile the in-scan detector compares
+            # against), not the raw probe ring
+            q_idx = min(recovery.window - 1,
+                        int(recovery.quantile * (recovery.window - 1)))
+            lp_ref = jax.device_get(
+                jnp.sort(hw[1][:n_chains], axis=1)[:, q_idx])
         health = RunHealth(
             word=jax.device_get(hw[0])[:n_chains],
             policy=recovery.policy,
-            lp_ref=(jax.device_get(hw[1])[:n_chains]
-                    if recovery.use_detector else None))
+            lp_ref=lp_ref)
         return res, health
 
     # -- model-axis work: shard-parallel surrogate refresh ----------------

@@ -70,8 +70,22 @@ class Recovery:
 
     divergence_threshold: when set, a chain also counts as diverged
       once its probed unnormalized log-posterior drops more than this
-      many nats below the best value it has seen (the log-posterior-
-      explosion detector); None = finite-state checks only.
+      many nats below its reference level (the log-posterior-explosion
+      detector); None = finite-state checks only. The reference is a
+      quantile over the chain's last ``window`` probes, NOT a running
+      max: a max reference is inflated by the single luckiest probe of
+      the whole run (minibatch log-posterior noise), which forces the
+      threshold to be set far above the noise spread and lets a slowly
+      diverging chain fall a long way before tripping. The windowed
+      quantile tracks the chain's recent healthy plateau, so a tight
+      threshold (a few times the probe IQR) trips a slow divergence as
+      soon as it drops below the recent level.
+    window: how many recent probes the reference quantile is taken
+      over. The window starts empty (-inf padded); a chain only trips
+      once enough probes accumulated for the quantile to be finite, so
+      warm-up rounds never false-trip.
+    quantile: the reference quantile in [0, 1] (nearest-rank over the
+      window; 0.5 = median).
     check_momentum: include SGHMC momenta in the finite-state check
       (ignored for Langevin dynamics).
 
@@ -80,11 +94,15 @@ class Recovery:
     policy: str = "quarantine"
     divergence_threshold: Optional[float] = None
     check_momentum: bool = True
+    window: int = 8
+    quantile: float = 0.5
 
     def __post_init__(self):
         assert self.policy in POLICIES, self.policy
         if self.divergence_threshold is not None:
             assert self.divergence_threshold > 0, self.divergence_threshold
+        assert self.window >= 1, self.window
+        assert 0.0 <= self.quantile <= 1.0, self.quantile
 
     @property
     def use_detector(self) -> bool:
@@ -100,8 +118,9 @@ class RunHealth:
     after round k-1 (the first faulty round, 1-based so 0 stays the
     healthy sentinel); under 'respawn' it counts how many times the
     chain was respawned (every chain is live at the end either way).
-    ``lp_ref`` is the best probed log-posterior per chain when the
-    divergence detector ran, else None.
+    ``lp_ref`` is the final windowed-quantile log-posterior reference
+    per chain when the divergence detector ran (-inf while a chain's
+    probe window is still warming up), else None.
     """
     word: np.ndarray
     policy: str = "quarantine"

@@ -17,9 +17,24 @@ so with error feedback the quantization error is re-injected on the next
 exchange instead of accumulating as bias. ``kind='none'`` (or
 ``frac=1`` top-k) makes ``dhat == upd`` and the round is exact.
 
+ELF's *dual* direction compresses the server→client broadcast the same
+way: the server's post-aggregation model ``m`` is sent as a compressed
+delta against the shared reference ``v`` (what both sides last agreed
+on), with its own error-feedback residual ``derr``::
+
+    dupd  = (m - v) + derr                     # server-side delta + EF
+    dd    = C_d(dupd)                          # the downlink payload
+    v'    = v + dd                             # both sides' new reference
+    derr' = dupd - dd                          # dual EF residual
+
+``direction`` selects which legs are compressed: ``'primal'`` (client→
+server, the default — today's behavior), ``'dual'`` (server→client
+only), or ``'bidir'`` (both, each leg with independent EF state).
+
 All operators are pure jnp on (C, P) chain-major flat matrices — they
 run *inside* the engine's jitted scan — and each spec reports the
-estimated ``bytes_per_round`` it uploads per chain (the bench column).
+estimated ``bytes_per_round`` it moves per chain per communication
+round, BOTH directions (uncompressed legs count 4 bytes/coordinate).
 """
 from __future__ import annotations
 
@@ -48,29 +63,54 @@ class Compression:
                 unbiased by stochastic rounding).
     ``error_feedback`` keeps the residual state (top-k without it is
     biased; randk/qsgd are unbiased either way).
+
+    ``direction`` — ELF-style leg selection: ``'primal'`` compresses
+    client→server uploads (the default), ``'dual'`` compresses the
+    server→client broadcast, ``'bidir'`` compresses both with
+    independent error-feedback state per leg.
     """
     kind: str = "none"
     frac: float = 0.01
     bits: int = 8
     error_feedback: bool = True
+    direction: str = "primal"
 
     def __post_init__(self):
         assert self.kind in ("none", "topk", "randk", "qsgd"), self.kind
         assert 0.0 < self.frac <= 1.0, self.frac
         assert 1 <= self.bits <= 16, self.bits
+        assert self.direction in ("primal", "dual", "bidir"), self.direction
 
     @property
     def identity(self) -> bool:
         return self.kind == "none"
 
-    def bytes_per_round(self, dim: int) -> float:
-        """Estimated upload bytes per chain per communication round."""
+    @property
+    def use_primal(self) -> bool:
+        """Client→server uploads go through the operator."""
+        return self.kind != "none" and self.direction in ("primal", "bidir")
+
+    @property
+    def use_dual(self) -> bool:
+        """Server→client broadcasts go through the operator."""
+        return self.kind != "none" and self.direction in ("dual", "bidir")
+
+    def payload_bytes(self, dim: int) -> float:
+        """Estimated bytes of ONE compressed payload for a dim-P chain."""
         if self.kind == "none":
             return 4.0 * dim
         if self.kind in ("topk", "randk"):
             k = max(1, int(round(self.frac * dim)))
             return 8.0 * k  # fp32 value + int32 index per kept coordinate
         return dim * self.bits / 8.0 + 4.0  # qsgd: levels + fp32 scale
+
+    def bytes_per_round(self, dim: int) -> float:
+        """Estimated bytes per chain per communication round, BOTH
+        directions: compressed legs report the operator's payload,
+        uncompressed legs count the exact 4 bytes/coordinate."""
+        up = self.payload_bytes(dim) if self.use_primal else 4.0 * dim
+        down = self.payload_bytes(dim) if self.use_dual else 4.0 * dim
+        return up + down
 
 
 def make_flattener(thetas: PyTree):

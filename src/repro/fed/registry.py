@@ -8,6 +8,8 @@ every facade entry point takes either.
 """
 from __future__ import annotations
 
+import difflib
+
 from repro.fed.compress import Compression
 from repro.fed.partition import PartitionSpec
 from repro.fed.schedule import CommSchedule
@@ -37,6 +39,17 @@ SCENARIOS = {
     "randk-10%": Federation(
         compression=Compression(kind="randk", frac=0.10)),
     "qsgd-8bit": Federation(compression=Compression(kind="qsgd", bits=8)),
+    # ELF-style leg selection: dual compresses the server->client
+    # broadcast, bidir compresses both legs with independent EF state
+    "elf-dual-topk-1%": Federation(
+        compression=Compression(kind="topk", frac=0.01, direction="dual")),
+    "elf-bidir-topk-1%": Federation(
+        compression=Compression(kind="topk", frac=0.01, direction="bidir")),
+    "elf-bidir-randk-10%": Federation(
+        compression=Compression(kind="randk", frac=0.10,
+                                direction="bidir")),
+    "elf-bidir-qsgd-8bit": Federation(
+        compression=Compression(kind="qsgd", bits=8, direction="bidir")),
 }
 
 
@@ -51,7 +64,10 @@ def get_scenario(name_or_spec) -> Federation:
         return name_or_spec
     try:
         return SCENARIOS[name_or_spec]
-    except KeyError:
+    except (KeyError, TypeError):
+        near = difflib.get_close_matches(str(name_or_spec),
+                                         scenario_names(), n=1)
+        hint = f" (did you mean {near[0]!r}?)" if near else ""
         raise KeyError(
-            f"unknown federation scenario {name_or_spec!r}; known: "
-            f"{', '.join(scenario_names())}") from None
+            f"unknown federation scenario {name_or_spec!r}{hint}; "
+            f"available: {', '.join(scenario_names())}") from None

@@ -88,7 +88,7 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config + 1x1 mesh (CPU container)")
     ap.add_argument("--method", default="fsgld",
-                    choices=["sgld", "dsgld", "fsgld"])
+                    choices=["sgld", "dsgld", "fsgld", "fald"])
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--chains", type=int, default=1,
                     help="parallel chains on the mesh chain engine "

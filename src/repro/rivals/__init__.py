@@ -1,0 +1,32 @@
+"""Rival federated samplers as first-class engine citizens.
+
+The source paper's claim — conducive gradients let FSGLD survive
+delayed, non-IID communication where DSGLD diverges — deserves to be
+tested against the literature's direct competitors, not only against
+its own baseline:
+
+  * **FA-LD** (Deng et al., "On Convergence of Federated Averaging
+    Langevin Dynamics", arXiv:2112.05120) — server-averaged Langevin
+    clients with local steps and amplified injected noise. Implemented
+    as ``MeshChainEngine(aggregation='fald')`` — the averaging is a
+    masked psum INSIDE the scanned round body, so the jaxpr gate (one
+    scan, one pallas_call, no pad) holds — with the pure-JAX oracle
+    :func:`repro.rivals.fald.fald_run_vmap` every executor cell is
+    regression-tested against bitwise.
+  * **ELF** (Karagulyan & Richtárik, "ELF: Federated Langevin
+    Algorithms with Primal, Dual and Bidirectional Compression",
+    arXiv:2303.04622) — compression on the server→client broadcast
+    (dual) or both legs (bidir), each with its own error-feedback
+    state. Implemented in ``repro.fed.compress`` (``direction=``) and
+    surfaced as registry scenarios (``elf-bidir-topk-1%``, ...).
+
+:mod:`repro.rivals.methods` is the facade's method table: every method
+name the ``api.FSGLD(method=...)`` axis and ``launch/train.py
+--method`` accept, with its engine lowering and paper reference.
+``benchmarks/bench_frontier.py`` races them on a shared
+convergence-vs-bytes frontier.
+"""
+from repro.rivals.fald import fald_run_vmap
+from repro.rivals.methods import METHODS, Method, get_method
+
+__all__ = ["METHODS", "Method", "get_method", "fald_run_vmap"]

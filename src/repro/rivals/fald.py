@@ -1,0 +1,169 @@
+"""Pure-JAX FA-LD oracle: the reference every executor cell must match.
+
+FA-LD (Deng et al., arXiv:2112.05120) runs C Langevin clients for T
+local steps between communication rounds; at each round the server
+averages the participating clients' iterates and broadcasts the average
+back. Each client injects noise at ``temperature * C`` so the AVERAGED
+iterate — whose injected-noise variance is the per-client variance / C —
+targets the configured temperature (the paper's ``sqrt(2 h N / p_c)``
+client noise with uniform weights p_c = 1/C).
+
+This module is the bitwise regression reference for
+``MeshChainEngine(aggregation='fald')``, the same role
+``FederatedSampler.run_vmap`` plays for the plain engine: a host-side
+loop over rounds whose per-round RNG derivation, reassignment draw,
+schedule masks, compression operators, and averaging expression are the
+SAME jnp expressions the engine's scanned ``fed_round_body`` traces
+(the schedule/compression helpers are imported, not re-implemented), so
+on the host mesh — where the engine's chain block is the whole chain
+axis and its masked ``psum`` is an identity — engine and oracle agree
+bit for bit, on every executor. Fault-free runs only (no chaos/recovery
+mirroring): the parity tests pin the engine to the oracle, and the
+chaos suite pins the engine's fault paths to its own fault-free runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SamplerConfig
+from repro.core.engine import _perm_sids_slice, make_round_fn
+from repro.core.sampler import LogLikFn, ShardScheme, make_step_fn
+from repro.fed import schedule as fsched
+from repro.fed.compress import (Compression, make_compressor,
+                                make_flattener)
+from repro.fed.registry import get_scenario
+
+PyTree = Any
+
+
+def fald_run_vmap(log_lik_fn: LogLikFn, cfg: SamplerConfig,
+                  shard_data: PyTree, minibatch: int, key: jax.Array,
+                  theta0: PyTree, num_rounds: int, *, n_chains: int,
+                  bank=None, reassign: str = "categorical",
+                  collect_every: int = 1, federation=None,
+                  sizes: Optional[tuple] = None,
+                  use_kernel: bool = False) -> PyTree:
+    """Host-loop FA-LD reference run; returns the stacked trace with
+    leading axes (n_chains, num_rounds * T_local / collect_every, ...).
+
+    ``federation`` (None | registry name | Federation) supplies the
+    communication schedule and compression exactly as the engine takes
+    them; None means every-round exact averaging. ``use_kernel``
+    selects the fused-update step (what the per_leaf/packed executors
+    run) so every executor cell has a matching oracle flavor.
+    """
+    leaf = jax.tree.leaves(shard_data)[0]
+    S, max_n = leaf.shape[0], leaf.shape[1]
+    assert S == cfg.num_shards, (S, cfg.num_shards)
+    sizes = (max_n,) * S if sizes is None else tuple(sizes)
+    scheme = ShardScheme(sizes=sizes, probs=cfg.probs())
+    fed = get_scenario(federation) if federation is not None else None
+    sched = fed.schedule if fed is not None else fsched.CommSchedule()
+    comp = fed.compression if fed is not None else Compression()
+    use_part = sched.participation < 1.0
+    use_strag = sched.straggler_prob > 0.0
+    use_comp = not comp.identity
+    use_primal, use_dual = comp.use_primal, comp.use_dual
+
+    # FA-LD noise calibration: per-client temperature * C (see module
+    # docstring) — the ONLY config difference vs a DSGLD client
+    cfg_dyn = dataclasses.replace(
+        cfg, temperature=cfg.temperature * n_chains)
+    step_fn = make_step_fn(log_lik_fn, cfg_dyn, scheme, bank,
+                           use_kernel=use_kernel)
+    one_chain = make_round_fn(log_lik_fn, cfg_dyn, scheme, step_fn,
+                              minibatch, collect=True)
+    vround = jax.vmap(one_chain, in_axes=(0, 0, 0, None, None))
+
+    chains = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (n_chains,) + t.shape).copy(),
+        theta0)
+    flatten, unflatten, dim = make_flattener(chains)
+    compress = make_compressor(comp, dim) if use_comp else None
+    probs = jnp.asarray(cfg.probs())
+    sids = jnp.zeros((n_chains,), jnp.int32)
+    if use_comp:
+        ref = jnp.array(flatten(chains), copy=True)
+        err = jnp.zeros_like(ref)
+        derr = jnp.zeros_like(ref) if use_dual else None
+
+    out = []
+    for r in range(num_rounds):
+        key, k_assign, k_run, k_fed = jax.random.split(key, 4)
+        if cfg.method == "sgld":
+            new_sids = jnp.zeros((n_chains,), jnp.int32)
+        elif reassign == "categorical":
+            new_sids = jax.random.categorical(
+                k_assign, jnp.log(probs)[None].repeat(n_chains, 0))
+        else:
+            new_sids = _perm_sids_slice(k_assign, S, 0, n_chains,
+                                        n_chains)
+        comm = (r % sched.delay) == 0
+        if use_part:
+            exch = comm & fsched.participation_mask(
+                sched, jax.random.fold_in(k_fed, 0), r, n_chains)
+        else:
+            exch = jnp.broadcast_to(jnp.asarray(comm), (n_chains,))
+        sids = jnp.where(exch, new_sids.astype(jnp.int32), sids)
+        if comm:
+            # the exchange, mirroring the engine's do_exchange: primal
+            # leg -> server average -> dual leg, writes masked per chain
+            flat = flatten(chains)
+            if use_primal:
+                upd = flat - ref + err
+                dhat = compress(upd, jax.random.fold_in(k_fed, 1))
+                m_flat = ref + dhat
+                err_new = (upd - dhat if comp.error_feedback
+                           else jnp.zeros_like(upd))
+            else:
+                m_flat = flat
+            w = exch
+            cnt = jnp.sum(w.astype(jnp.float32))
+            tot = jnp.sum(jnp.where(w[:, None], m_flat, 0.0), axis=0)
+            avg = tot / jnp.maximum(cnt, 1.0)
+            m_flat = jnp.where(w[:, None], avg[None], m_flat)
+            if use_dual:
+                dupd = m_flat - ref + derr
+                dd = compress(dupd, jax.random.fold_in(k_fed, 3))
+                v_new = ref + dd
+                derr_new = (dupd - dd if comp.error_feedback
+                            else jnp.zeros_like(dupd))
+            else:
+                v_new = m_flat
+            if use_comp:
+                mm = exch[:, None]
+                ref = jnp.where(mm, v_new, ref)
+                if use_primal:
+                    err = jnp.where(mm, err_new, err)
+                if use_dual:
+                    derr = jnp.where(mm, derr_new, derr)
+            th_srv = unflatten(v_new)
+            chains = jax.tree.map(
+                lambda srv, old: jnp.where(
+                    exch.reshape((n_chains,) + (1,) * (old.ndim - 1)),
+                    srv, old),
+                th_srv, chains)
+        pre = chains
+        keys = jax.random.split(k_run, n_chains)
+        chains, trace = vround(chains, keys, sids, shard_data, bank)
+        if use_strag:
+            strag = fsched.straggler_mask(
+                sched, jax.random.fold_in(k_fed, 2), n_chains)
+
+            def keep(new, old):
+                m = strag.reshape((n_chains,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, old, new)
+
+            chains = jax.tree.map(keep, chains, pre)
+            trace = jax.tree.map(
+                lambda t, p: jnp.where(
+                    strag.reshape((n_chains,) + (1,) * (t.ndim - 1)),
+                    p[:, None], t),
+                trace, pre)
+        out.append(jax.tree.map(lambda t: t[:, ::collect_every], trace))
+    return (out[0] if len(out) == 1
+            else jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out))

@@ -209,6 +209,17 @@ def packed_chain_spec() -> P:
     return P(CHAIN_AXIS, None)
 
 
+def fed_carry_spec() -> P:
+    """Spec for the engine's federated-round carry: the resident sids
+    (C,) and every compression-state row — server-view reference,
+    primal error feedback, dual error feedback — are PER-CHAIN (C,) /
+    (C, P) arrays, so they shard over 'data' exactly like the chain
+    states they mirror. The FA-LD server average is the one cross-chain
+    reduction over this carry, and it runs as an in-scan masked psum
+    over the same axis rather than a relayout."""
+    return P(CHAIN_AXIS)
+
+
 def chain_specs(tree: PyTree) -> PyTree:
     """Per-leaf chain-axis specs for a pytree of (C, ...) chain states."""
     return jax.tree.map(lambda _: P(CHAIN_AXIS), tree)

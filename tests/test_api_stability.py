@@ -50,7 +50,8 @@ EXPECTED_SIGNATURES = {
     "Federation": (("partition", True), ("schedule", True),
                    ("compression", True)),
     "Recovery": (("policy", True), ("divergence_threshold", True),
-                 ("check_momentum", True)),
+                 ("check_momentum", True), ("window", True),
+                 ("quantile", True)),
     "FSGLD": (("posterior", False), ("data", False), ("minibatch", False),
               ("step_size", True), ("method", True), ("kernel", True),
               ("alpha", True), ("friction", True), ("surrogate", True),
@@ -133,3 +134,12 @@ def test_readme_serving_quickstart_runs():
     src = _readme_block("Serving")
     assert "FSGLD.serve(" in src and "save_draw(" in src
     exec(compile(src, "README.md:<serving-quickstart>", "exec"), {})
+
+
+def test_readme_rival_samplers_runs():
+    """Exec the README '## Rival samplers' quickstart verbatim: the
+    method axis runs FA-LD through the same facade and matches the
+    pure-JAX oracle bitwise. Its asserts are the test."""
+    src = _readme_block("Rival samplers")
+    assert "method=" in src and "fald" in src
+    exec(compile(src, "README.md:<rival-samplers-quickstart>", "exec"), {})

@@ -136,6 +136,62 @@ def test_quarantine_with_mesh_padding(problem):
 
 
 # ---------------------------------------------------------------------------
+# windowed-quantile divergence detector (PR 8): the log-posterior
+# reference is a quantile over the last `window` probes, not a running
+# max — tight thresholds become usable, warm-up never false-trips
+# ---------------------------------------------------------------------------
+
+def test_detector_warmup_never_false_trips(problem):
+    """Until the window holds enough probes for the quantile to be
+    finite (ceil((1-q)*W) rounds at the default W=8, q=0.5), the
+    reference is -inf and NOTHING can trip — even a threshold far
+    inside the probe noise. The same absurd threshold past warm-up
+    does trip: the reference went finite and tight."""
+    eng = _engine(problem)
+    rec = Recovery(policy="quarantine", divergence_threshold=1e-6)
+    # 4 rounds: 8-slot window still majority -inf -> median -inf
+    _, h4 = eng.run(KEY, THETA0, 4, n_chains=4, reassign="permutation",
+                    recovery=rec)
+    assert h4.n_healthy == 4, np.asarray(h4.word)
+    assert np.all(np.isneginf(np.asarray(h4.lp_ref))), h4.lp_ref
+    # 12 rounds: the median is finite and a 1e-6 threshold is far
+    # inside the minibatch probe noise -> chains trip
+    _, h12 = eng.run(KEY, THETA0, 12, n_chains=4, reassign="permutation",
+                     recovery=rec)
+    assert h12.n_healthy < 4, np.asarray(h12.word)
+
+
+def test_detector_window_and_quantile_are_plumbed(problem):
+    """window/quantile reach the in-scan detector: quantile=1.0 over a
+    short window warms up after ONE probe (the max of a single finite
+    probe is finite), so the same tight threshold that was inert during
+    the default config's warm-up trips within the first rounds here."""
+    eng = _engine(problem)
+    _, h = eng.run(KEY, THETA0, 3, n_chains=4, reassign="permutation",
+                   recovery=Recovery(policy="quarantine",
+                                     divergence_threshold=1e-6,
+                                     window=2, quantile=1.0))
+    assert h.n_healthy < 4, np.asarray(h.word)
+    # sane threshold, same custom window: nothing trips, bitwise clean
+    base = eng.run(KEY, THETA0, 3, n_chains=4, reassign="permutation")
+    out, h2 = eng.run(KEY, THETA0, 3, n_chains=4, reassign="permutation",
+                      recovery=Recovery(policy="quarantine",
+                                        divergence_threshold=200.0,
+                                        window=2, quantile=1.0))
+    assert h2.n_healthy == 4
+    np.testing.assert_array_equal(np.asarray(base["w"]),
+                                  np.asarray(out["w"]))
+    assert np.all(np.isfinite(np.asarray(h2.lp_ref)))
+
+
+def test_recovery_validates_window_and_quantile():
+    with pytest.raises(AssertionError):
+        Recovery(window=0)
+    with pytest.raises(AssertionError):
+        Recovery(quantile=1.5)
+
+
+# ---------------------------------------------------------------------------
 # the jaxpr acceptance gate holds with fault tolerance lowered in
 # ---------------------------------------------------------------------------
 
@@ -182,7 +238,7 @@ def test_jaxpr_gate_holds_with_health_and_chaos():
         recovery=Recovery(policy="quarantine", divergence_threshold=50.0),
         chaos=ChaosSpec(nan_chains=(1,), nan_rounds=(1,)))
     chains = jnp.zeros((4, D))
-    hw0 = (jnp.zeros((4,), jnp.int32), jnp.full((4,), -jnp.inf,
+    hw0 = (jnp.zeros((4,), jnp.int32), jnp.full((4, 8), -jnp.inf,
                                                 jnp.float32))
     jaxpr = jax.make_jaxpr(execute)(
         jax.random.PRNGKey(0), chains, data, bank,

@@ -307,8 +307,23 @@ def test_registry_names_resolve_and_unknown_raises():
         get_scenario("no-such-scenario")
     # the ISSUE's named configurations all exist
     for name in ("iid", "dirichlet-0.1", "delayed-5x", "partial-50%",
-                 "topk-1%"):
+                 "topk-1%", "elf-dual-topk-1%", "elf-bidir-topk-1%",
+                 "elf-bidir-randk-10%", "elf-bidir-qsgd-8bit"):
         assert name in scenario_names(), name
+
+
+def test_registry_unknown_name_error_is_actionable():
+    """A typo'd scenario name lists every available name AND suggests
+    the nearest match; non-string keys get the same actionable error
+    instead of a bare TypeError."""
+    with pytest.raises(KeyError, match=r"did you mean 'delayed-5x'"):
+        get_scenario("delayed-5")
+    with pytest.raises(KeyError, match=r"elf-bidir-topk-1%"):
+        get_scenario("elf-bidir-topk")
+    with pytest.raises(KeyError, match="available: identity"):
+        get_scenario("no-such-scenario")
+    with pytest.raises(KeyError, match="unknown federation scenario"):
+        get_scenario(("not", "hashable", ["x"]))
 
 
 def test_sample_time_repartition_refused():

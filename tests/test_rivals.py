@@ -1,0 +1,289 @@
+"""Rival samplers (PR 8): FA-LD aggregation + ELF dual compression.
+
+Contracts (the PR 8 acceptance criteria):
+
+  * the engine's ``aggregation='fald'`` mode is BIT-IDENTICAL to the
+    pure-JAX ``repro.rivals.fald_run_vmap`` oracle on every executor
+    (vmap / per_leaf / packed) x scenario (exact, delayed, compressed-
+    bidir) cell;
+  * the jaxpr acceptance gate HOLDS with FA-LD averaging AND
+    bidirectional compression lowered into the scanned round body: one
+    rounds-scan, one pallas_call, no ``pad`` primitive;
+  * ELF dual/bidir compression contracts: randk/qsgd payload operators
+    are unbiased; topk ``frac=1`` bidir with error feedback is the
+    exact exchange, bitwise; the dual error-feedback state survives
+    ``snapshot_every``/``resume`` bitwise;
+  * the ``method=`` facade axis resolves through ``repro.rivals``:
+    'fald' runs (and refuses the SGHMC kernel), unknown names get an
+    actionable error with a nearest-match hint.
+"""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import list_snapshots
+from repro.configs.base import SamplerConfig
+from repro.core.engine import MeshChainEngine
+from repro.fed import CommSchedule, Compression, Federation, get_scenario
+from repro.fed.compress import make_compressor
+from repro.rivals import METHODS, fald_run_vmap, get_method, Method
+
+S, N, D = 5, 24, 3
+KEY = jax.random.PRNGKey(7)
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key0 = jax.random.PRNGKey(0)
+    mus = jax.random.uniform(key0, (S, D), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(
+        jax.random.fold_in(key0, 1), (S, N, D))
+    return {"x": x}
+
+
+# ---------------------------------------------------------------------------
+# FA-LD == oracle, bitwise, on every executor x scenario cell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["vmap", "per_leaf", "packed"])
+@pytest.mark.parametrize("scenario", [None, "delayed-5x",
+                                      "elf-bidir-topk-1%"])
+def test_fald_bitwise_vs_oracle(problem, executor, scenario):
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), problem,
+        minibatch=6, step_size=1e-4, method="fald",
+        schedule=api.Schedule(rounds=4, local_steps=3, n_chains=4),
+        execution=api.Execution(executor=executor), federation=scenario)
+    got = f.sample(KEY, jnp.zeros(D))
+    ref = fald_run_vmap(log_lik, f.cfg, f.data, 6, KEY, jnp.zeros(D), 4,
+                        n_chains=4, federation=scenario,
+                        use_kernel=(executor != "vmap"))
+    assert got.shape == ref.shape == (4, 12, D)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fald_averaging_actually_averages(problem):
+    """At an exact every-round exchange all chains leave the exchange on
+    the SAME server state: the collected states one local step later
+    differ only by per-chain noise/minibatch — and with local_steps=1
+    on round boundaries the post-exchange pre-step states coincide, so
+    chains must NOT equal a no-aggregation DSGLD run."""
+    kw = dict(minibatch=6, step_size=1e-4,
+              schedule=api.Schedule(rounds=3, local_steps=2, n_chains=4))
+    post = api.Posterior(log_lik, prior_precision=1.0)
+    fald = api.FSGLD(post, problem, method="fald", **kw)
+    dsgld = api.FSGLD(post, problem, method="dsgld", **kw)
+    a = np.asarray(fald.sample(KEY, jnp.zeros(D)))
+    b = np.asarray(dsgld.sample(KEY, jnp.zeros(D)))
+    assert not np.array_equal(a, b)
+    # averaging contracts the chain spread at every exchange round
+    assert np.isfinite(a).all()
+
+
+# ---------------------------------------------------------------------------
+# jaxpr gate: FA-LD + bidirectional compression, in-scan
+# ---------------------------------------------------------------------------
+
+def _all_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(v):
+    if hasattr(v, "jaxpr"):
+        return [v.jaxpr]
+    if hasattr(v, "eqns"):
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def test_fald_bidir_lowering_one_scan_one_pallas_no_pad(problem):
+    """Server averaging (masked psum) + primal AND dual compression with
+    two error-feedback states all ride the ONE rounds-scan; the packed
+    executor still issues exactly one pallas_call and no pad primitive
+    appears in any scan body."""
+    cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=S,
+                        local_updates=3, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, problem, minibatch=6,
+                          use_kernel=True, aggregation="fald")
+    fed = Federation(
+        schedule=CommSchedule(delay=2, participation=0.5),
+        compression=Compression(kind="topk", frac=0.1,
+                                direction="bidir"))
+    num_rounds = 6
+    layout = eng._layout_for(jnp.zeros(D))
+    execute = eng._executor(num_rounds=num_rounds, n_chains=4,
+                            reassign="categorical", collect=True,
+                            collect_every=1, layout=layout,
+                            federation=fed)
+    chains = jnp.zeros((4, D))
+    sids0 = jnp.zeros((4,), jnp.int32)
+    ref0 = jnp.zeros((4, D), jnp.float32)
+    jaxpr = jax.make_jaxpr(execute)(
+        jax.random.PRNGKey(0), chains, problem, None,
+        jnp.asarray(0, jnp.int32), (sids0, (ref0, ref0, ref0)), None)
+
+    eqns = list(_all_eqns(jaxpr.jaxpr))
+    pallas = [e for e in eqns if "pallas" in e.primitive.name]
+    assert len(pallas) == 1, [e.primitive.name for e in pallas]
+    round_scans = [e for e in eqns if e.primitive.name == "scan"
+                   and e.params["length"] == num_rounds]
+    assert len(round_scans) == 1, "rounds loop not a single scan"
+    for s in (e for e in eqns if e.primitive.name == "scan"):
+        body = [e.primitive.name
+                for e in _all_eqns(s.params["jaxpr"].jaxpr)]
+        assert "pad" not in body, "pad op inside a scan body"
+        assert body.count("pallas_call") <= 1
+
+
+# ---------------------------------------------------------------------------
+# ELF dual-compression contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    Compression(kind="randk", frac=0.25, direction="dual"),
+    Compression(kind="qsgd", bits=4, direction="bidir"),
+], ids=["randk", "qsgd"])
+def test_randk_qsgd_operators_unbiased(spec):
+    """E[C(upd)] == upd for the stochastic operators — the property that
+    keeps the dual (broadcast) leg unbiased without error feedback."""
+    dim = 48
+    upd = jax.random.normal(jax.random.PRNGKey(0), (2, dim))
+    compress = make_compressor(spec, dim)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    mean = jnp.mean(jax.vmap(lambda k: compress(upd, k))(keys), axis=0)
+    scale = float(jnp.max(jnp.abs(upd)))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(upd),
+                               atol=0.05 * scale)
+
+
+@pytest.mark.parametrize("direction", ["dual", "bidir"])
+def test_topk_full_frac_bidir_is_exact_exchange_bitwise(direction):
+    """topk frac=1 keeps every coordinate, so dual/bidir specs with the
+    error-feedback states active must reproduce the uncompressed
+    exchange bit for bit on the PR 5 reference config — the dual leg's
+    add/sub round-trip never touches the values (small per-round deltas
+    make ``ref + (flat - ref)`` exact). Both runs share the same
+    non-identity schedule so they lower the same fed round body (same
+    RNG stream); the only difference is the payload math under test."""
+    from repro.core import analytic_gaussian_likelihood_surrogate, \
+        make_bank
+    key0 = jax.random.PRNGKey(0)
+    mus = jax.random.uniform(key0, (S, D), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(
+        jax.random.fold_in(key0, 1), (S, 40, D))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), {"x": x},
+        minibatch=8, step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag",
+                                    bank=make_bank(mu_s, prec_s, "diag")),
+        schedule=api.Schedule(rounds=4, local_steps=3, n_chains=4))
+    sched = CommSchedule(delay=2)
+    exact = f.sample(jax.random.PRNGKey(9), jnp.zeros(D),
+                     federation=Federation(schedule=sched))
+    comp = f.sample(jax.random.PRNGKey(9), jnp.zeros(D),
+                    federation=Federation(
+                        schedule=sched,
+                        compression=Compression(kind="topk", frac=1.0,
+                                                direction=direction)))
+    np.testing.assert_array_equal(np.asarray(exact), np.asarray(comp))
+
+
+@pytest.mark.parametrize("direction", ["dual", "bidir"])
+def test_dual_error_feedback_survives_resume_bitwise(tmp_path, problem,
+                                                     direction):
+    """The dual EF residual rides the fed carry: a run killed mid-way
+    and resumed from its snapshot equals the uninterrupted run bitwise
+    — dropping ``derr`` on resume would silently re-bias the broadcast."""
+    cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=S,
+                        local_updates=2, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, problem, minibatch=6)
+    fed = Federation(
+        schedule=CommSchedule(delay=2),
+        compression=Compression(kind="topk", frac=0.5,
+                                direction=direction))
+    snaps = str(tmp_path / "snaps")
+    ref = eng.run(KEY, jnp.zeros(D), 7, n_chains=4, federation=fed)
+    a = eng.run(KEY, jnp.zeros(D), 7, n_chains=4, federation=fed,
+                snapshot_every=3, snapshot_path=snaps)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(a))
+    # kill: drop the newest snapshot, resume from the older one
+    shutil.rmtree(list_snapshots(snaps)[-1][1])
+    b = eng.run(KEY, jnp.zeros(D), 7, n_chains=4, federation=fed,
+                snapshot_every=3, snapshot_path=snaps, resume=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(b))
+
+
+def test_dual_only_direction_differs_from_primal(problem):
+    """direction='dual' compresses the broadcast, not the upload: each
+    leg draws its own operator key, so a STOCHASTIC operator (randk)
+    must produce a different trajectory than both the exact exchange
+    and the primal-only spec. (A deterministic operator like topk is
+    key-blind, and with no aggregation between the legs primal-only and
+    dual-only are then the same transformation — the distinction is
+    real exactly when the operator or the server step is.)"""
+    cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=S,
+                        local_updates=2, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, problem, minibatch=6)
+    sched = CommSchedule(delay=2)
+    runs = {}
+    for tag, comp in [
+            ("exact", Compression()),
+            ("primal", Compression(kind="randk", frac=0.5,
+                                   direction="primal")),
+            ("dual", Compression(kind="randk", frac=0.5,
+                                 direction="dual"))]:
+        fed = Federation(schedule=sched, compression=comp)
+        runs[tag] = np.asarray(eng.run(KEY, jnp.zeros(D), 4, n_chains=4,
+                                       federation=fed))
+        assert np.isfinite(runs[tag]).all(), tag
+    assert not np.array_equal(runs["exact"], runs["dual"])
+    assert not np.array_equal(runs["primal"], runs["dual"])
+
+
+# ---------------------------------------------------------------------------
+# the method facade axis
+# ---------------------------------------------------------------------------
+
+def test_method_table_resolves_and_hints():
+    assert set(METHODS) == {"sgld", "dsgld", "fsgld", "fald"}
+    assert isinstance(get_method("fald"), Method)
+    assert get_method("fald").aggregation == "fald"
+    assert get_method("fsgld").needs_surrogate
+    with pytest.raises(ValueError, match=r"did you mean 'fald'"):
+        get_method("falld")
+    with pytest.raises(ValueError, match="available"):
+        get_method(None)
+
+
+def test_facade_fald_refuses_sghmc(problem):
+    with pytest.raises(ValueError, match="sghmc"):
+        api.FSGLD(api.Posterior(log_lik), problem, minibatch=6,
+                  method="fald", kernel="sghmc")
+
+
+def test_engine_validates_aggregation(problem):
+    cfg = SamplerConfig(method="dsgld", step_size=1e-4, num_shards=S,
+                        local_updates=2, prior_precision=1.0)
+    with pytest.raises(ValueError, match="aggregation"):
+        MeshChainEngine(log_lik, cfg, problem, minibatch=6,
+                        aggregation="bogus")
+    with pytest.raises(NotImplementedError, match="Langevin"):
+        from repro.core.sghmc import SGHMCConfig
+        MeshChainEngine(log_lik, cfg, problem, minibatch=6,
+                        aggregation="fald", dynamics="sghmc",
+                        sghmc=SGHMCConfig())
