@@ -1,0 +1,121 @@
+"""Streamed client-axis scaling benchmark: memory vs client count.
+
+Sweeps synthetic client populations of 10^2 / 10^4 / 10^6
+(``repro.fed.SyntheticClientSource`` — lazy, per-client fold_in
+generation) through the facade with ``Stream(resident=K)``: only K
+clients are ever materialized on device, the host prefetches the next
+window's shards while the scan segment runs, and fault-free streamed
+runs are bitwise identical to the resident path.
+
+Published rows per client count N:
+
+  * ``clients/streamed/N*/throughput``     — chain-steps/s (baseline-
+    compared like every throughput row when a baseline carries it);
+  * ``clients/streamed/N*/peak_device_mb`` — peak live device bytes
+    across stream windows (``jax.live_arrays()`` sampled from the
+    engine's ``stream_hook``), gated ABSOLUTELY by the committed
+    ``client-ceiling=`` mark: materializing all 10^6 clients (~4 GB of
+    token shards) would blow the ceiling by an order of magnitude;
+  * ``clients/parity/N100``                — 0/1 indicator (floor 1):
+    streamed final states bitwise equal the resident oracle at the one
+    N where the oracle comfortably fits;
+  * ``clients/streamed/peak_host_rss_mb``  — process peak RSS after the
+    10^6-client run (covers host staging buffers the device gate can't
+    see), also ceiling-gated.
+
+The shapes are FIXED (SCALE ignored): the memory ceilings are absolute
+committed gates (benchmarks/check_regression.py ``client-floor=`` /
+``client-ceiling=``), so the problem size must not drift with the
+environment.
+"""
+from __future__ import annotations
+
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, bench_main
+from repro import api
+
+# fixed shapes — see module docstring (ceilings are committed absolutes)
+SHARD, SEQ, VOCAB = 32, 16, 256
+CHAINS, ROUNDS, T_LOCAL = 4, 6, 4
+RESIDENT, WINDOW = 32, 2
+SWEEP = (100, 10_000, 1_000_000)
+# ceilings: 10^6 clients materialized would be ~4 GB device-side alone;
+# the streamed path holds K=32 client shards (~130 KB) plus chain state
+DEVICE_CEIL_MB = 512.0
+RSS_CEIL_MB = 3072.0
+
+
+def token_log_lik(theta, batch):
+    return jnp.sum(jax.nn.log_softmax(theta)[batch["labels"]])
+
+
+def _live_mb() -> float:
+    return sum(a.size * a.dtype.itemsize
+               for a in jax.live_arrays()) / 2**20
+
+
+def _fsgld(src, stream):
+    return api.FSGLD(
+        api.Posterior(token_log_lik), src, minibatch=8, step_size=1e-4,
+        method="dsgld", surrogate=api.SurrogateSpec(kind="none"),
+        schedule=api.Schedule(rounds=ROUNDS, local_steps=T_LOCAL,
+                              n_chains=CHAINS, reassign="permutation"),
+        execution=api.Execution(executor="vmap", collect=False,
+                                stream=stream))
+
+
+def run():
+    rows = []
+    theta0 = jnp.zeros((VOCAB,))
+    for N in SWEEP:
+        src = api.SyntheticClientSource(
+            jax.random.PRNGKey(7), num_clients=N, shard_size=SHARD,
+            seq_len=SEQ, vocab_size=VOCAB)
+        f = _fsgld(src, api.Stream(resident=RESIDENT, window=WINDOW))
+        dev_peak = [0.0]
+        f.engine.stream_hook = lambda i, win, _p=dev_peak: \
+            _p.__setitem__(0, max(_p[0], _live_mb()))
+        # warm up (compiles the full-window + tail executor variants),
+        # then best-of-2 — same discipline as bench_chains
+        jax.block_until_ready(f.sample(jax.random.PRNGKey(1), theta0))
+        dt = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            out = f.sample(jax.random.PRNGKey(1), theta0)
+            jax.block_until_ready(out)
+            dt = min(dt, time.perf_counter() - t0)
+        steps = ROUNDS * T_LOCAL * CHAINS
+        rows.append(Row(f"clients/streamed/N{N}/throughput",
+                        1e6 * dt / steps, steps / dt,
+                        note="derived = chain-steps/s"))
+        rows.append(Row(
+            f"clients/streamed/N{N}/peak_device_mb", 0.0, dev_peak[0],
+            note=f"derived = peak live device MB across stream windows "
+                 f"(resident K={RESIDENT} of {N} clients); "
+                 f"client-ceiling={DEVICE_CEIL_MB:g}"))
+        if N == SWEEP[0]:
+            ref = _fsgld(src, None).sample(jax.random.PRNGKey(1), theta0)
+            same = all(bool(jnp.array_equal(a, b)) for a, b in
+                       zip(jax.tree.leaves(ref), jax.tree.leaves(out)))
+            rows.append(Row(
+                f"clients/parity/N{N}", 0.0, float(same),
+                note="derived = 1 iff streamed final states are bitwise "
+                     "identical to the resident oracle; client-floor=1"))
+        del f, src, out
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    rows.append(Row(
+        "clients/streamed/peak_host_rss_mb", 0.0, rss_mb,
+        note="derived = process peak RSS MB after the 10^6-client "
+             "streamed run (materialize-all would need ~4 GB of shards "
+             "on top of the interpreter); "
+             f"client-ceiling={RSS_CEIL_MB:g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    raise SystemExit(bench_main(run))

@@ -21,10 +21,18 @@ Gate semantics:
     rival-sampler frontier the same way (benchmarks/bench_frontier.py):
     FSGLD MSE ceilings and 0/1 indicator rows with floor 1 — see
     ``check_frontier_bounds``;
+  * ``client-floor=X`` / ``client-ceiling=Y`` marks gate the streamed
+    client axis (benchmarks/bench_clients.py): absolute peak
+    device/host memory ceilings at 10^6 synthetic clients plus the
+    streamed-vs-resident bitwise parity indicator — see
+    ``check_client_bounds``;
   * no baseline file            -> SKIP (exit 0) — the lane still runs
     and uploads its artifact, the gate just has nothing to compare to;
   * scale mismatch              -> SKIP (exit 0) — a SCALE=0.01 smoke run
     is not comparable to a SCALE=1 baseline;
+  * every SKIP is ANNOTATED: a ``::warning::`` line with the one-line
+    reason surfaces in the GitHub checks UI instead of a silent green
+    (``_skip``);
   * only rows whose note marks them as throughput ("chain-steps/s") and
     that exist in BOTH files by name are gated; new/removed rows are
     reported, not failed;
@@ -62,6 +70,17 @@ CALIB_FLOOR_MARK = "calib-floor="
 CALIB_CEIL_MARK = "calib-ceiling="
 FRONTIER_FLOOR_MARK = "frontier-floor="
 FRONTIER_CEIL_MARK = "frontier-ceiling="
+CLIENT_FLOOR_MARK = "client-floor="
+CLIENT_CEIL_MARK = "client-ceiling="
+
+
+def _skip(reason: str) -> int:
+    """A skipped gate must be VISIBLE, not a silent green exit 0: print
+    the one-line reason AND a GitHub Actions ``::warning::`` annotation
+    (a no-op plain line outside Actions), then skip."""
+    print(f"gate SKIPPED: {reason}")
+    print(f"::warning title=bench regression gate skipped::{reason}")
+    return 0
 
 
 def _rows(env: dict) -> dict:
@@ -142,6 +161,15 @@ def check_frontier_bounds(env: dict) -> list:
                                   FRONTIER_CEIL_MARK)
 
 
+def check_client_bounds(env: dict) -> list:
+    """Streamed client-axis rows (benchmarks/bench_clients.py): peak
+    device-memory and host-RSS ceilings at 10^6 synthetic clients — the
+    committed proof that streaming holds only the resident window on
+    device — plus the streamed-vs-resident bitwise parity indicator
+    (0/1 derived with floor 1)."""
+    return _check_absolute_bounds(env, CLIENT_FLOOR_MARK, CLIENT_CEIL_MARK)
+
+
 def check_fed_bytes(env: dict) -> list:
     """The compressed-rounds lanes must REPORT their wire cost: every
     ``chains/fed/`` throughput row carries a finite positive
@@ -186,30 +214,33 @@ def main(argv=None) -> int:
     floor_failed += check_fed_bytes(cur)
     floor_failed += check_calibration_bounds(cur)
     floor_failed += check_frontier_bounds(cur)
+    floor_failed += check_client_bounds(cur)
     if floor_failed:
         print(f"absolute gate(s) violated: {floor_failed}",
               file=sys.stderr)
         return 1
 
     if not os.path.exists(args.baseline):
-        print(f"no baseline at {args.baseline}: gate SKIPPED")
-        return 0
+        return _skip(f"no baseline at {args.baseline} — nothing to "
+                     "compare against (absolute gates above still ran)")
     with open(args.baseline) as f:
         base = json.load(f)
     if cur.get("schema") != base.get("schema"):
-        print(f"schema mismatch ({cur.get('schema')} vs "
-              f"{base.get('schema')}): gate SKIPPED")
-        return 0
+        return _skip(f"schema mismatch (current {cur.get('schema')} vs "
+                     f"baseline {base.get('schema')}) — regenerate the "
+                     "baseline with this commit's benchmarks")
     if cur.get("scale") != base.get("scale"):
-        print(f"scale mismatch (current {cur.get('scale')} vs baseline "
-              f"{base.get('scale')}): gate SKIPPED")
-        return 0
+        return _skip(f"scale mismatch (current REPRO_BENCH_SCALE="
+                     f"{cur.get('scale')} vs baseline "
+                     f"{base.get('scale')}) — runs at different problem "
+                     "sizes are not comparable")
 
     cur_rows, base_rows = _rows(cur), _rows(base)
     shared = sorted(set(cur_rows) & set(base_rows))
     if not shared:
-        print("no overlapping throughput rows: gate SKIPPED")
-        return 0
+        return _skip("no throughput rows overlap between current run "
+                     "and baseline — row names may have been renamed; "
+                     "regenerate the baseline")
     for name in sorted(set(base_rows) - set(cur_rows)):
         print(f"~ {name}: in baseline only (not gated)")
     for name in sorted(set(cur_rows) - set(base_rows)):

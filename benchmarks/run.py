@@ -18,6 +18,10 @@
           federation scenarios): posterior-mean MSE vs wire bytes per
           round, with absolute frontier-floor=/frontier-ceiling= gates
           (check_regression.py; fixed sizes, SCALE ignored)
+  clients — streamed client-axis scaling (10^2/10^4/10^6 synthetic
+          clients, resident-K windows): steps/s + peak device/host
+          memory with absolute client-floor=/client-ceiling= gates
+          (check_regression.py; fixed sizes, SCALE ignored)
 
 REPRO_BENCH_SCALE=10 approaches paper-scale chain lengths;
 REPRO_BENCH_SCALE=0.01 is the CI bench-smoke setting.
@@ -37,10 +41,10 @@ import traceback
 
 def main(argv=None) -> int:
     from benchmarks import (bench_calibration, bench_chains,
-                            bench_frontier, bench_kernel, f1_linreg,
-                            fig1_variance, fig2_3_gaussian, fig4_epsilon,
-                            fig5_metric_learning, remark1_alpha,
-                            table1_bnn)
+                            bench_clients, bench_frontier, bench_kernel,
+                            f1_linreg, fig1_variance, fig2_3_gaussian,
+                            fig4_epsilon, fig5_metric_learning,
+                            remark1_alpha, table1_bnn)
     from benchmarks.common import write_json
 
     modules = [
@@ -49,7 +53,7 @@ def main(argv=None) -> int:
         ("table1", table1_bnn), ("f1", f1_linreg),
         ("remark1", remark1_alpha), ("kernel", bench_kernel),
         ("chains", bench_chains), ("calib", bench_calibration),
-        ("frontier", bench_frontier),
+        ("frontier", bench_frontier), ("clients", bench_clients),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,

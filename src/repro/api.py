@@ -45,14 +45,17 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import SamplerConfig
 from repro.core.engine import MeshChainEngine, pad_shards
 from repro.core.federated import fit_bank_fisher, refresh_bank
 from repro.core.health import Recovery, RunHealth
 from repro.core.surrogate import SurrogateBank, fit_scalar_tree, make_bank
-from repro.fed import Federation, get_scenario
-from repro.fed.partition import partition as partition_clients
+from repro.fed import Federation, Stream, SyntheticClientSource, get_scenario
+from repro.fed.partition import (is_client_source,
+                                 partition as partition_clients,
+                                 resolve_shard_probs)
 from repro.rivals.methods import get_method
 
 PyTree = Any
@@ -60,8 +63,8 @@ LogLikFn = Callable[[PyTree, PyTree], jax.Array]
 
 __all__ = [
     "Posterior", "SurrogateSpec", "Schedule", "Execution", "Federation",
-    "Recovery", "RunHealth", "Serving", "FSGLD", "fit_bank_local_sgld",
-    "get_scenario",
+    "Stream", "SyntheticClientSource", "Recovery", "RunHealth", "Serving",
+    "FSGLD", "fit_bank_local_sgld", "get_scenario",
 ]
 
 _COLLECT_SIGNALS = ("mean", "entropy", "mutual_info", "variance")
@@ -172,6 +175,12 @@ class Execution:
       resumable). resume: continue from the newest valid snapshot in
       ``snapshot_path`` — traces are bitwise identical to an
       uninterrupted run.
+    stream: a :class:`repro.fed.Stream` — the streamed client axis: only
+      ``stream.resident`` clients live on device, with host prefetch of
+      the next window's shards overlapping the scan. Fault-free streamed
+      runs are bitwise identical to the resident path; requires
+      ``Schedule(reassign='permutation')`` and does not compose with
+      refresh_every / snapshots / recovery (the engine refuses loudly).
     """
     mesh: Any = None
     executor: str = "auto"
@@ -181,6 +190,7 @@ class Execution:
     snapshot_every: Optional[int] = None
     snapshot_path: Optional[str] = None
     resume: bool = False
+    stream: Optional[Stream] = None
 
     def __post_init__(self):
         assert self.executor in _EXECUTORS, self.executor
@@ -291,21 +301,48 @@ class FSGLD:
         self.federation = (get_scenario(federation)
                            if federation is not None else None)
 
-        if self.federation is not None and \
-                self.federation.partition is not None:
-            # with a partition spec the data contract flips: ``data`` is
-            # POOLED (pytree of (N, ...) leaves) and the partitioner
-            # splits it onto clients (padded + masked, ragged ok). The
-            # partition RNG comes from the spec's own seed — changing the
-            # scenario never perturbs the sampling stream.
-            data, sizes = partition_clients(
-                None, data, self.federation.partition)
-        elif isinstance(data, (list, tuple)):
-            data, inferred = pad_shards(list(data))
-            sizes = sizes if sizes is not None else inferred
+        if is_client_source(data):
+            # lazy per-client source (the streamed-scale data contract):
+            # the engine materializes only the clients a run touches
+            if self.federation is not None and \
+                    self.federation.partition is not None:
+                raise ValueError(
+                    "a ClientSource is already partitioned per client; "
+                    "it does not compose with a Federation partition "
+                    "spec (wrap the pooled data in PartitionedSource "
+                    "instead)")
+            if sizes is not None:
+                raise ValueError("a ClientSource carries its own sizes")
+            num_shards = int(data.num_clients)
+        else:
+            if self.federation is not None and \
+                    self.federation.partition is not None:
+                # with a partition spec the data contract flips:
+                # ``data`` is POOLED (pytree of (N, ...) leaves) and the
+                # partitioner splits it onto clients (padded + masked,
+                # ragged ok). The partition RNG comes from the spec's
+                # own seed — changing the scenario never perturbs the
+                # sampling stream.
+                data, sizes = partition_clients(
+                    None, data, self.federation.partition)
+            elif isinstance(data, (list, tuple)):
+                data, inferred = pad_shards(list(data))
+                sizes = sizes if sizes is not None else inferred
+            num_shards = jax.tree.leaves(data)[0].shape[0]
         self.data = data
         self.sizes = sizes
-        num_shards = jax.tree.leaves(data)[0].shape[0]
+        if isinstance(shard_probs, str):
+            # partition-aware preset ('uniform', 'size-proportional',
+            # 'sqrt-size') resolved against the true client sizes via
+            # the hierarchical (cross-silo) host reductions
+            if is_client_source(data):
+                true_sizes = np.asarray(data.sizes)
+            elif sizes is not None:
+                true_sizes = np.asarray(sizes)
+            else:
+                true_sizes = np.full(
+                    (num_shards,), jax.tree.leaves(data)[0].shape[1])
+            shard_probs = resolve_shard_probs(shard_probs, true_sizes)
         self.cfg = SamplerConfig(
             method=meth.cfg_method, step_size=step_size,
             num_shards=num_shards,
@@ -331,6 +368,12 @@ class FSGLD:
         spec = self.surrogate
         if spec.kind == "none":
             raise ValueError("surrogate kind 'none': nothing to fit")
+        if is_client_source(self.data):
+            raise ValueError(
+                "surrogate fitting needs materialized (S, n, ...) shard "
+                "data; with a ClientSource pass a prefit bank "
+                "(SurrogateSpec(bank=...)) or a surrogate-free method "
+                "('dsgld')")
         fit = spec.fit
         if fit == "auto":
             fit = "local_sgld" if spec.kind == "scalar" else "refresh"
@@ -402,7 +445,8 @@ class FSGLD:
     def sample(self, key: jax.Array, theta0: PyTree, *,
                rounds: Optional[int] = None,
                n_chains: Optional[int] = None,
-               federation: Any = None):
+               federation: Any = None,
+               stream: Optional[Stream] = None):
         """Run the full schedule and return stacked samples with leading
         axes (n_chains, rounds * local_steps / thin, ...) — or the final
         chain states when ``Execution.collect`` is False.
@@ -420,6 +464,11 @@ class FSGLD:
         partition fixed the data at construction, so an override whose
         partition differs is refused. The identity scenario is
         bit-identical to ``federation=None`` on every executor.
+
+        ``stream`` — a ``repro.fed.Stream`` — overrides
+        ``Execution.stream`` for this run (the streamed client axis:
+        only ``resident`` clients on device, host prefetch overlapping
+        the scan, bitwise identical to the resident path).
         """
         if (self.cfg.method == "fsgld" and self.bank is None):
             self.fit(jax.random.fold_in(key, 0x5357), theta0)
@@ -443,7 +492,8 @@ class FSGLD:
             refresh_every=self.surrogate.refresh_every,
             collect=exe.collect, federation=fed,
             recovery=exe.recovery, snapshot_every=exe.snapshot_every,
-            snapshot_path=exe.snapshot_path, resume=exe.resume)
+            snapshot_path=exe.snapshot_path, resume=exe.resume,
+            stream=stream if stream is not None else exe.stream)
 
     # -- phase 3: serving the posterior ------------------------------------
 

@@ -135,9 +135,22 @@ class InputShape:
     kind: str  # 'train' | 'prefill' | 'decode'
 
 
+# Above this client count an implicit uniform ``probs()`` tuple is not
+# materialized (a ~10^6-element tuple costs tens of MB); ``probs()``
+# returns None and consumers treat None as uniform 1/S
+# (``core.sampler.ShardScheme`` lowers both spellings to the same fp32
+# values, so the cutoff never changes results).
+_PROBS_TUPLE_LIMIT = 65536
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplerConfig:
-    """FSGLD / DSGLD / SGLD settings (paper Secs. 2-3)."""
+    """FSGLD / DSGLD / SGLD settings (paper Secs. 2-3).
+
+    ``shard_probs`` may be a tuple, a numpy array (the streamed-client
+    scale format — see ``repro.fed.partition.resolve_shard_probs`` for
+    the named presets), or None for uniform f_s = 1/S.
+    """
 
     method: str = "fsgld"  # 'sgld' | 'dsgld' | 'fsgld'
     step_size: float = 1e-4
@@ -149,8 +162,10 @@ class SamplerConfig:
     prior_precision: float = 1.0  # N(0, lambda^-1 I) prior on params
     temperature: float = 1.0  # noise scale; 0 -> MAP/SGD limit
 
-    def probs(self) -> Tuple[float, ...]:
+    def probs(self) -> Optional[Tuple[float, ...]]:
         if self.shard_probs is not None:
             assert len(self.shard_probs) == self.num_shards
             return self.shard_probs
+        if self.num_shards > _PROBS_TUPLE_LIMIT:
+            return None  # uniform, lowered lazily by ShardScheme
         return tuple(1.0 / self.num_shards for _ in range(self.num_shards))

@@ -96,6 +96,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -105,7 +106,8 @@ from repro.core.sampler import (LogLikFn, ShardScheme, chain_scales,
                                 make_step_fn)
 from repro.core.surrogate import SurrogateBank, make_bank
 from repro.kernels import ops as kops
-from repro.sharding.rules import chain_spec, fed_carry_spec
+from repro.sharding.rules import (chain_spec, fed_carry_spec,
+                                  stream_window_spec)
 
 PyTree = Any
 
@@ -153,20 +155,27 @@ def _make_batch_sampler(cfg: SamplerConfig, scheme: ShardScheme,
     ragged concatenation of all shards: a global index u in [0, N) maps to
     (shard, offset) via the size prefix sums — for uniform shards this
     selects exactly the elements of the legacy pooled-reshape path.
+
+    ``sizes_rt`` overrides the closed-over (S,) size table with the
+    streamed path's RESIDENT (K,) int32 rows (``shard_id`` is then
+    resident-local); the rows are host-gathers of the same table, so the
+    randint bound — and hence the draw — is bitwise unchanged.
     """
     sizes = scheme.sizes_array()
-    starts = scheme.starts_array()
-    ends = jnp.cumsum(sizes)
     total = scheme.total
     m = minibatch
+    if cfg.method == "sgld":
+        starts = scheme.starts_array()
+        ends = jnp.cumsum(sizes)
 
-    def sample(k_batch, shard_id, shard_data):
+    def sample(k_batch, shard_id, shard_data, sizes_rt=None):
         if cfg.method == "sgld":
             u = jax.random.randint(k_batch, (m,), 0, total)
             sh = jnp.searchsorted(ends, u, side="right").astype(jnp.int32)
             off = u - starts[sh]
             return jax.tree.map(lambda d: d[sh, off], shard_data)
-        idx = jax.random.randint(k_batch, (m,), 0, sizes[shard_id])
+        sz = sizes if sizes_rt is None else sizes_rt
+        idx = jax.random.randint(k_batch, (m,), 0, sz[shard_id])
         return jax.tree.map(lambda d: d[shard_id][idx], shard_data)
 
     return sample
@@ -187,13 +196,16 @@ def make_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     if collect_state is None:
         collect_state = lambda s: s  # noqa: E731
 
-    def round_fn(state, key, shard_id, shard_data, bank_rt=None):
+    def round_fn(state, key, shard_id, shard_data, bank_rt=None,
+                 sp_rt=None):
+        sizes_rt = None if sp_rt is None else sp_rt[0]
+
         def body(carry, k):
             state = carry
             k_batch, k_step = jax.random.split(k)
-            batch = sample(k_batch, shard_id, shard_data)
+            batch = sample(k_batch, shard_id, shard_data, sizes_rt)
             state = step_fn(state, k_step, batch, shard_id, minibatch,
-                            bank_rt=bank_rt)
+                            bank_rt=bank_rt, sp_rt=sp_rt)
             return state, collect_state(state) if collect else None
 
         keys = jax.random.split(key, cfg.local_updates)
@@ -284,17 +296,19 @@ def make_chain_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
                    temperature=sghmc.temperature) if hmc
               else dict(temperature=cfg.temperature))
 
-    def round_fn(state, keys, sids, shard_data, bank=None):
+    def round_fn(state, keys, sids, shard_data, bank=None, sp_rt=None):
         if not use_surrogate:
             bank = None
-        scale, f_s = chain_scales(cfg, scheme, sids, minibatch)
+        scale, f_s = chain_scales(cfg, scheme, sids, minibatch, sp_rt)
+        sizes_rt = None if sp_rt is None else sp_rt[0]
 
         def body(carry, ks):
             thetas, r = carry if hmc else (carry, None)
             kk = jax.vmap(jax.random.split)(ks)       # (C, 2, 2)
             k_batch, k_step = kk[:, 0], kk[:, 1]
             batches = jax.vmap(
-                lambda k, s: sample(k, s, shard_data))(k_batch, sids)
+                lambda k, s: sample(k, s, shard_data, sizes_rt))(
+                k_batch, sids)
             glls = grad_vmap(thetas, batches)
             out = kops.fused_update_chains_tree(
                 thetas, glls, k_step, h=cfg.step_size, scale=scale,
@@ -404,10 +418,11 @@ def make_packed_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     L = layout.num_leaves
     hmc = dynamics == "sghmc"
 
-    def round_fn(state, keys, sids, shard_data, pbank=None):
+    def round_fn(state, keys, sids, shard_data, pbank=None, sp_rt=None):
         if not use_surrogate:
             pbank = None
-        scale, f_s = chain_scales(cfg, scheme, sids, minibatch)
+        scale, f_s = chain_scales(cfg, scheme, sids, minibatch, sp_rt)
+        sizes_rt = None if sp_rt is None else sp_rt[0]
         mu_g = mu_s = lam_gp = lam_sp = None
         lam_g_leaf = lam_s_leaf = None
         if bank_kind is None:
@@ -440,7 +455,8 @@ def make_packed_round_fn(log_lik_fn: LogLikFn, cfg: SamplerConfig,
             kk = jax.vmap(jax.random.split)(ks)       # (C, 2, 2)
             k_batch, k_step = kk[:, 0], kk[:, 1]
             batches = jax.vmap(
-                lambda k, s: sample(k, s, shard_data))(k_batch, sids)
+                lambda k, s: sample(k, s, shard_data, sizes_rt))(
+                k_batch, sids)
             glls = grad_vmap(thetas, batches)
             g_p = layout.pack(glls)
             seeds = kops.chain_leaf_seeds(k_step, L)
@@ -528,17 +544,36 @@ class MeshChainEngine:
     dynamics: str = "langevin"
     sghmc: Any = None  # Optional[SGHMCConfig]; None -> defaults
     aggregation: str = "none"  # 'none' | 'fald' (server-averaged rounds)
+    stream_hook: Any = None  # callable(window_idx, StreamWindow) | None;
+    # fires after each streamed window's dispatch (bench memory sampling)
 
     def __post_init__(self):
         if self.mesh is None:
             from repro.launch.mesh import make_host_mesh
             self.mesh = make_host_mesh()
-        leaf = jax.tree.leaves(self.shard_data)[0]
-        s, max_n = leaf.shape[0], leaf.shape[1]
-        assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
-        sizes = ((max_n,) * s if self.sizes is None
-                 else tuple(int(n) for n in self.sizes))
-        assert len(sizes) == s and max(sizes) == max_n, (sizes, max_n)
+        from repro.fed.partition import is_client_source
+        self._source = (self.shard_data
+                        if is_client_source(self.shard_data) else None)
+        self._resident_cache = None
+        if self._source is not None:
+            # lazy per-client source: only the clients a run actually
+            # touches are ever materialized (the streamed path gathers
+            # resident windows; the resident path materializes all S
+            # on first use — small-S only, by construction).
+            s = int(self._source.num_clients)
+            assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
+            assert self.sizes is None, \
+                "a ClientSource carries its own sizes"
+            sizes = np.asarray(self._source.sizes, np.int64)
+            assert sizes.shape == (s,), sizes.shape
+            assert int(sizes.max()) == int(self._source.max_size)
+        else:
+            leaf = jax.tree.leaves(self.shard_data)[0]
+            s, max_n = leaf.shape[0], leaf.shape[1]
+            assert s == self.cfg.num_shards, (s, self.cfg.num_shards)
+            sizes = ((max_n,) * s if self.sizes is None
+                     else tuple(int(n) for n in self.sizes))
+            assert len(sizes) == s and max(sizes) == max_n, (sizes, max_n)
         self.scheme = ShardScheme(sizes=sizes, probs=self.cfg.probs())
         if self.aggregation not in ("none", "fald"):
             raise ValueError(
@@ -571,6 +606,31 @@ class MeshChainEngine:
     def _chain_spec(self):
         return chain_spec()
 
+    # -- client-axis materialization ---------------------------------------
+
+    def _data(self):
+        """The FULL (S, max_n, ...) shard stack for resident-path runs.
+        Materialized (and cached) from a lazy ClientSource on first use —
+        the streamed path never calls this."""
+        if self._source is None:
+            return self.shard_data
+        if self._resident_cache is None:
+            ids = np.arange(self.cfg.num_shards)
+            self._resident_cache = jax.tree.map(
+                jnp.asarray, self._source.rows(ids))
+        return self._resident_cache
+
+    def _client_rows(self, ids):
+        """(K, max_n, ...) rows for one resident window. From a
+        ClientSource this builds ONLY the requested clients; from a
+        materialized stack it gathers rows of identical values — either
+        way a streamed lookup reads the exact bytes the resident path
+        reads, which is what makes streamed runs bitwise identical."""
+        if self._source is not None:
+            return jax.tree.map(jnp.asarray, self._source.rows(ids))
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        return jax.tree.map(lambda d: d[idx], self.shard_data)
+
     def _layout_for(self, theta0: PyTree) -> Optional[kops.PackedChains]:
         """Resolve the packed layout for this run, or None for the
         per-leaf paths. Mixed floating dtypes pack (non-fp32 leaves
@@ -597,7 +657,8 @@ class MeshChainEngine:
                   n_total: Optional[int] = None, reassign: str,
                   collect: bool, collect_every: int,
                   layout: Optional[kops.PackedChains], federation=None,
-                  recovery=None, chaos=None):
+                  recovery=None, chaos=None,
+                  stream: Optional[int] = None):
         """jit(shard_map(scan-over-rounds)) executor: ONE dispatch runs
         ``num_rounds`` communication rounds — reassignment, round key
         splitting, local updates, and thinned trace collection all live
@@ -648,7 +709,7 @@ class MeshChainEngine:
         chaos = chaos if chaos is not None and chaos.active else None
         rec = recovery
         cache_key = (num_rounds, n_chains, n_total, reassign, collect,
-                     collect_every, layout, fed, rec, chaos)
+                     collect_every, layout, fed, rec, chaos, stream)
         if cache_key in self._executors:
             return self._executors[cache_key]
 
@@ -656,7 +717,11 @@ class MeshChainEngine:
         S = cfg.num_shards
         per = n_total // self.mesh.shape["data"]
         n_pad = n_total - n_chains
-        probs = jnp.asarray(cfg.probs())
+        if reassign == "categorical" and cfg.method != "sgld":
+            # built lazily: at streamed-client scale probs() is None
+            # (implicit uniform) and categorical reassignment is refused
+            # before ever reaching an executor
+            log_probs = jnp.log(jnp.asarray(self.scheme.probs_array()))
         bank_kind = self.bank.kind if self.bank is not None else None
 
         # FA-LD noise calibration: averaging C clients shrinks the
@@ -690,9 +755,11 @@ class MeshChainEngine:
                 collect_state=((lambda s: s[0])
                                if self.dynamics == "sghmc" else None))
 
-            def round_fn(thetas, keys, sids, shard_data, bank_rt):
-                return jax.vmap(one_chain, in_axes=(0, 0, 0, None, None))(
-                    thetas, keys, sids, shard_data, bank_rt)
+            def round_fn(thetas, keys, sids, shard_data, bank_rt,
+                         sp_rt=None):
+                return jax.vmap(
+                    one_chain, in_axes=(0, 0, 0, None, None, None))(
+                    thetas, keys, sids, shard_data, bank_rt, sp_rt)
 
         def pad_tail(arr):
             """Extend a (n_chains, ...) per-chain operand to n_total rows
@@ -758,7 +825,27 @@ class MeshChainEngine:
                                                self.minibatch)
         log_lik = self.log_lik_fn
 
-        def block(key, chains, shard_data, bank_rt, r0, fedc, hw0):
+        def block(key, chains, shard_data, bank_rt, r0, fedc, hw0,
+                  stream_ids=None, sp_rt=None):
+            # streamed client axis: shard_data/bank_rt hold only the
+            # RESIDENT window's K client rows; ``stream_ids`` is the
+            # sorted (K,) global-id vector and ``sp_rt`` the resident
+            # (sizes_i32, sizes_f32, probs_f32) metadata rows. Carried
+            # sids stay GLOBAL (so fed carries compare bitwise across
+            # window boundaries); each round remaps them to
+            # resident-local once, by a compare-and-sum rank — NOT
+            # searchsorted, which lowers with an inner scan and would
+            # break the one-scan jaxpr guarantee.
+            if stream is not None:
+                def to_local(s):
+                    loc = jnp.sum(stream_ids[None, :] < s[:, None],
+                                  axis=1)
+                    # pad chains may hold ids outside the window (their
+                    # trajectories are discarded); clamp keeps their
+                    # gathers in range without a pad primitive
+                    return jnp.minimum(loc, stream - 1).astype(jnp.int32)
+            else:
+                to_local = lambda s: s  # noqa: E731
             if layout is not None:
                 rt_bank = pack_bank(
                     layout, bank_rt if cfg.method == "fsgld" else None)
@@ -785,7 +872,7 @@ class MeshChainEngine:
                     return jax.lax.dynamic_slice_in_dim(
                         pad_tail(jax.random.categorical(
                             k_assign,
-                            jnp.log(probs)[None].repeat(n_chains, 0))),
+                            log_probs[None].repeat(n_chains, 0))),
                         blk, per)
                 # SPMD variant (DESIGN 4.1); block-cyclic when C > S
                 return _perm_sids_slice(k_assign, S, blk, per, n_total)
@@ -924,16 +1011,18 @@ class MeshChainEngine:
                 key, state, hw = carry
                 key, k_assign, k_run = jax.random.split(key, 3)
                 sids = propose_sids(k_assign)
+                run_sids = to_local(sids)
                 if rec is not None:
                     pre_th, pre_mom = get_view(state)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
-                state, trace = round_fn(state, keys_blk, sids, shard_data,
-                                        rt_bank)
+                state, trace = round_fn(state, keys_blk, run_sids,
+                                        shard_data, rt_bank, sp_rt)
                 state = poison_state(r, state)
                 if rec is not None:
                     state, trace, hw = check_health(
-                        r, k_run, sids, pre_th, pre_mom, state, trace, hw)
+                        r, k_run, run_sids, pre_th, pre_mom, state, trace,
+                        hw)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
                      if collect else None)
                 return (key, state, hw), y
@@ -1057,12 +1146,13 @@ class MeshChainEngine:
 
                     state, cst = jax.lax.cond(
                         comm, do_exchange, lambda op: op, (state, cst))
+                run_sids = to_local(sids)
                 if use_strag or rec is not None:
                     pre_th, pre_mom = get_view(state)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
-                state, trace = round_fn(state, keys_blk, sids, shard_data,
-                                        rt_bank)
+                state, trace = round_fn(state, keys_blk, run_sids,
+                                        shard_data, rt_bank, sp_rt)
                 if use_strag:
                     # dropped updates: straggler chains' state does not
                     # advance and their trace repeats the frozen position
@@ -1089,7 +1179,8 @@ class MeshChainEngine:
                 state = poison_state(r, state)
                 if rec is not None:
                     state, trace, hw = check_health(
-                        r, k_run, sids, pre_th, pre_mom, state, trace, hw)
+                        r, k_run, run_sids, pre_th, pre_mom, state, trace,
+                        hw)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
                      if collect else None)
                 return (key, state, sids, cst, hw), y
@@ -1126,9 +1217,15 @@ class MeshChainEngine:
         cspec = self._chain_spec()
         fc_spec = fed_carry_spec() if use_fed else None
         h_spec = cspec if rec is not None else None
+        in_specs = (P(), cspec, P(), P(), P(), fc_spec, h_spec)
+        if stream is not None:
+            # resident window ids + metadata rows: replicated, like the
+            # shard stack they index into
+            w_spec = stream_window_spec()
+            in_specs = in_specs + (w_spec, (w_spec,) * 3)
         mapped = shard_map(
             block, mesh=self.mesh,
-            in_specs=(P(), cspec, P(), P(), P(), fc_spec, h_spec),
+            in_specs=in_specs,
             out_specs=(cspec, cspec if collect else None, P(), fc_spec,
                        h_spec),
             check_rep=False)
@@ -1161,7 +1258,8 @@ class MeshChainEngine:
             collect: bool = True, stacked: bool = False,
             federation=None, recovery=None, chaos=None,
             snapshot_every: Optional[int] = None,
-            snapshot_path: Optional[str] = None, resume: bool = False):
+            snapshot_path: Optional[str] = None, resume: bool = False,
+            stream=None):
         """Same contract (and same RNG stream) as the legacy
         ``FederatedSampler.run``: returns stacked samples with leading axes
         (n_chains, num_rounds * T_local / collect_every, ...), or the final
@@ -1212,6 +1310,40 @@ class MeshChainEngine:
         fed = (federation if federation is not None
                and not federation.engine_identity else None)
         chaos = chaos if chaos is not None and chaos.active else None
+        if stream is not None:
+            # streamed client axis: only the planner-replayable,
+            # window-local features compose. Everything below needs
+            # either all clients resident or an un-plannable RNG stream —
+            # refuse loudly rather than stream wrong results.
+            if self.cfg.method == "sgld":
+                raise NotImplementedError(
+                    "stream= does not compose with method='sgld': pooled "
+                    "sampling draws from the virtual concatenation of ALL "
+                    "clients and needs them resident")
+            if reassign != "permutation":
+                raise NotImplementedError(
+                    f"stream= requires reassign='permutation' (got "
+                    f"{reassign!r}): the resident-set planner replays the "
+                    "collision-free permutation stream; categorical "
+                    "draws are not plannable ahead of the scan")
+            if refresh_every:
+                raise NotImplementedError(
+                    "stream= does not compose with refresh_every: the "
+                    "surrogate re-fit is a pass over ALL clients' data")
+            if snapshot_every or resume:
+                raise NotImplementedError(
+                    "stream= does not compose with snapshots/resume yet: "
+                    "the window plan is not part of the snapshot payload")
+            if recovery is not None or chaos is not None:
+                raise NotImplementedError(
+                    "stream= does not compose with recovery/chaos yet")
+            if stream.resident > self.cfg.num_shards:
+                raise ValueError(
+                    f"Stream(resident={stream.resident}) exceeds the "
+                    f"client count ({self.cfg.num_shards}); resident is "
+                    "the ON-DEVICE subset size and must be <= the number "
+                    "of clients — lower resident, or raise the client "
+                    "count")
         if fed is not None and refresh_every and self.cfg.method == "fsgld":
             raise NotImplementedError(
                 "adaptive refresh does not compose with a non-identity "
@@ -1290,6 +1422,13 @@ class MeshChainEngine:
                     # dual-leg error feedback rides a third carry slot
                     cst0 = cst0 + (jnp.zeros_like(ref0),)
             fedc = (jnp.zeros((n_total,), jnp.int32), cst0)
+
+        if stream is not None:
+            return self._run_streamed(
+                key, chains, num_rounds, stream=stream,
+                n_chains=n_chains, n_total=n_total, reassign=reassign,
+                collect_every=collect_every, collect=collect,
+                layout=layout, federation=fed, fedc=fedc, take=take)
 
         typed_key = hasattr(jax.dtypes, "prng_key") and jnp.issubdtype(
             key.dtype, jax.dtypes.prng_key)
@@ -1384,7 +1523,7 @@ class MeshChainEngine:
                 collect_every=collect_every, layout=layout,
                 federation=fed, recovery=recovery, chaos=chaos)
             chains, trace, key, fedc, hw = execute(
-                key, chains, self.shard_data, bank_rt,
+                key, chains, self._data(), bank_rt,
                 jnp.asarray(r0, jnp.int32), fedc, hw)
             if collect:
                 out.append(trace)
@@ -1421,6 +1560,91 @@ class MeshChainEngine:
             lp_ref=lp_ref)
         return res, health
 
+    # -- streamed client axis ---------------------------------------------
+
+    def _run_streamed(self, key, chains, num_rounds, *, stream, n_chains,
+                      n_total, reassign, collect_every, collect, layout,
+                      federation, fedc, take):
+        """Streamed-window loop: plan the resident sets from the RNG
+        chain, then for each fixed-length window dispatch the scan
+        segment (async) and — while the device runs it — build and stage
+        the NEXT window's resident buffers (double-buffered host
+        prefetch; ``Stream(prefetch=False)`` serializes for A/B timing).
+
+        Fault-free streamed runs are bitwise identical to the resident
+        path: the carry (key, chain states, fed carry) threads through
+        the same executor I/O that already makes snapshot segmentation
+        invisible, and every resident-window lookup — shard rows, sizes,
+        probs, surrogate rows — is a gather of the exact values the
+        resident path reads."""
+        from repro.fed import schedule as fsched
+        S = self.cfg.num_shards
+        use_fed = federation is not None or self.aggregation == "fald"
+        sids_rn = fsched.replay_sids(
+            key, num_rounds=num_rounds, n_chains=n_chains, num_shards=S,
+            federated=use_fed,
+            sched=(federation.schedule if federation is not None
+                   else None),
+            reassign=reassign)
+        windows = fsched.plan_stream(sids_rn, resident=stream.resident,
+                                     window=stream.window)
+        sizes_np = np.asarray(np.asarray(self.scheme.sizes), np.int64)
+        probs_np = self.scheme.probs_array()
+        bank = self.bank
+
+        def stage(win):
+            """Host-build one window's device operands. Every transfer
+            below is async (jax dispatches device_put/gathers without
+            blocking), so calling this right after a segment dispatch
+            overlaps the staging with the running scan."""
+            ids = win.resident_ids          # (K,) sorted int32, padded
+            data = self._client_rows(ids)
+            # int->f32 via the SAME conversions the resident arrays take
+            # (ShardScheme.as_arrays / sizes_array), so each (K,) row is
+            # bitwise the resident table's row
+            sp = (jnp.asarray(sizes_np[ids].astype(np.int32)),
+                  jnp.asarray(sizes_np[ids].astype(np.float32)),
+                  jnp.asarray(probs_np[ids]))
+            bnk = None
+            if bank is not None:
+                idx = jnp.asarray(ids)
+                row = lambda a: jnp.asarray(a)[idx]  # noqa: E731
+                # resident-row bank: per-shard rows gathered, the global
+                # product Gaussian carried through UNTOUCHED (it is a
+                # sum over all S shards, computed once at fit time)
+                bnk = SurrogateBank(jax.tree.map(row, bank.means),
+                                    jax.tree.map(row, bank.precs),
+                                    bank.global_, bank.kind)
+            return data, bnk, jnp.asarray(ids), sp
+
+        hw = None
+        out = []
+        staged = stage(windows[0])
+        for i, win in enumerate(windows):
+            execute = self._executor(
+                num_rounds=win.length, n_chains=n_chains,
+                n_total=n_total, reassign=reassign, collect=collect,
+                collect_every=collect_every, layout=layout,
+                federation=federation, stream=stream.resident)
+            data_k, bank_k, ids_dev, sp_dev = staged
+            chains, trace, key, fedc, hw = execute(
+                key, chains, data_k, bank_k,
+                jnp.asarray(win.r0, jnp.int32), fedc, hw, ids_dev,
+                sp_dev)
+            if i + 1 < len(windows):
+                if not stream.prefetch:
+                    jax.block_until_ready(chains)   # no overlap: A/B ref
+                staged = stage(windows[i + 1])
+            if collect:
+                out.append(trace)
+            if self.stream_hook is not None:
+                self.stream_hook(i, win)
+        if not collect:
+            return jax.tree.map(take, chains)
+        out = [jax.tree.map(take, t) for t in out]
+        return (out[0] if len(out) == 1 else
+                jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out))
+
     # -- model-axis work: shard-parallel surrogate refresh ----------------
 
     def refresh(self, theta: PyTree) -> SurrogateBank:
@@ -1429,7 +1653,7 @@ class MeshChainEngine:
         Fisher/gradient pass for its subset of clients, results gathered
         by the shard_map output spec). Same math as
         ``federated.refresh_bank``."""
-        return refresh_bank_mesh(self.log_lik_fn, self.shard_data, theta,
+        return refresh_bank_mesh(self.log_lik_fn, self._data(), theta,
                                  self.mesh, sizes=self.scheme.sizes)
 
 

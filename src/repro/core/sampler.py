@@ -17,6 +17,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import SamplerConfig
 from repro.core.conducive import conducive_gradient
@@ -60,9 +61,16 @@ class ShardScheme:
     the per-shard sample axis to ``max_size`` and the pad rows are dead —
     ``valid_mask``/``sizes_array`` let samplers draw minibatch indices only
     from the live prefix of each shard (see core/engine.py).
+
+    At streamed-client scale (~10^6 clients) ``sizes`` may be a numpy
+    array instead of a tuple, and ``probs`` may be None for the uniform
+    f_s = 1/S case — a million-element python tuple costs tens of MB and
+    seconds to build; ``None`` lowers to the SAME fp32 values the tuple
+    path produces (``1.0/S`` cast once), so small-S runs are bitwise
+    unaffected by which spelling constructed the scheme.
     """
-    sizes: tuple
-    probs: tuple
+    sizes: Any            # tuple | np.ndarray of int
+    probs: Any            # tuple | np.ndarray | None (None => uniform 1/S)
 
     @property
     def num_shards(self) -> int:
@@ -70,28 +78,38 @@ class ShardScheme:
 
     @property
     def total(self) -> int:
-        return int(sum(self.sizes))
+        return int(np.asarray(self.sizes, np.int64).sum())
 
     @property
     def max_size(self) -> int:
-        return int(max(self.sizes))
+        return int(np.asarray(self.sizes).max())
 
     @property
     def uniform(self) -> bool:
-        return len(set(self.sizes)) == 1
+        a = np.asarray(self.sizes)
+        return int(a.min()) == int(a.max())
+
+    def probs_array(self) -> np.ndarray:
+        """(S,) float32 selection probs on the HOST (numpy) — the
+        streamed planner and resident-subset gathers read this without
+        touching the device."""
+        if self.probs is None:
+            return np.full((self.num_shards,), 1.0 / self.num_shards,
+                           np.float32)
+        return np.asarray(self.probs, np.float32)
 
     def as_arrays(self):
-        return (jnp.asarray(self.sizes, jnp.float32),
-                jnp.asarray(self.probs, jnp.float32))
+        return (jnp.asarray(np.asarray(self.sizes, np.float32)),
+                jnp.asarray(self.probs_array()))
 
     def sizes_array(self) -> jnp.ndarray:
         """(S,) int32 true shard sizes (pre-padding)."""
-        return jnp.asarray(self.sizes, jnp.int32)
+        return jnp.asarray(np.asarray(self.sizes, np.int32))
 
     def starts_array(self) -> jnp.ndarray:
         """(S,) int32 exclusive-prefix-sum of sizes: global offset of each
         shard in the virtual ragged concatenation (pooled SGLD sampling)."""
-        sizes = jnp.asarray(self.sizes, jnp.int32)
+        sizes = self.sizes_array()
         return jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                 jnp.cumsum(sizes)[:-1]])
 
@@ -102,16 +120,26 @@ class ShardScheme:
 
 
 def chain_scales(cfg: SamplerConfig, scheme: ShardScheme, sids: jax.Array,
-                 minibatch: int) -> tuple[jax.Array, jax.Array]:
+                 minibatch: int, sp_rt=None) -> tuple[jax.Array, jax.Array]:
     """Per-chain estimator factors for a chain block resident at clients
     ``sids``: returns (scale, f_s), each (C,) fp32. DSGLD/FSGLD unbias by
     N_s/(f_s m) (paper Eq. 4); centralized SGLD scales by N/m and has no
-    shard factor. Shared by the chain-batched and packed round bodies."""
+    shard factor. Shared by the chain-batched and packed round bodies.
+
+    ``sp_rt`` is the streamed-client runtime override — a
+    ``(sizes_i32, sizes_f32, probs_f32)`` triple of (K,) arrays holding
+    the RESIDENT subset's metadata, indexed by resident-local sids. The
+    rows are host-gathers of the full (S,) arrays, so a streamed lookup
+    returns the exact fp32 value the resident path reads (see
+    core/engine.py's streamed executor)."""
     C = sids.shape[0]
     if cfg.method == "sgld":
         return (jnp.full((C,), scheme.total / minibatch, jnp.float32),
                 jnp.ones((C,), jnp.float32))
-    sizes_f, probs_f = scheme.as_arrays()
+    if sp_rt is not None:
+        sizes_f, probs_f = sp_rt[1], sp_rt[2]
+    else:
+        sizes_f, probs_f = scheme.as_arrays()
     f_s = probs_f[sids]
     return sizes_f[sids] / (f_s * minibatch), f_s
 
@@ -132,17 +160,20 @@ def make_drift_fn(
         raise ValueError("FSGLD needs a SurrogateBank")
 
     def drift(theta, batch, shard_id, m, bank_rt: Optional[SurrogateBank]
-              = None):
+              = None, sp_rt=None):
         """bank_rt: runtime surrogate override — lets the adaptive-refresh
-        scheduler swap surrogates without retracing (banks are pytrees)."""
+        scheduler swap surrogates without retracing (banks are pytrees).
+        sp_rt: resident-subset (sizes_i32, sizes_f, probs_f) override for
+        the streamed-client path; shard_id is then resident-LOCAL."""
         b = bank_rt if bank_rt is not None else bank
+        sz, pr = (sizes, probs) if sp_rt is None else (sp_rt[1], sp_rt[2])
         gll = jax.grad(log_lik_fn)(theta, batch)
         if cfg.method == "sgld":
             scale = scheme.total / m
             f_s = 1.0
         else:
-            f_s = probs[shard_id]
-            scale = sizes[shard_id] / (f_s * m)
+            f_s = pr[shard_id]
+            scale = sz[shard_id] / (f_s * m)
         d = jax.tree.map(
             lambda p, g: p + scale * g.astype(p.dtype),
             prior_grad(theta, cfg.prior_precision), gll)
@@ -165,14 +196,15 @@ def kernel_step_operands(cfg: SamplerConfig, scheme: ShardScheme,
     surrogate pair (None for SGLD/DSGLD)."""
     sizes, probs = scheme.as_arrays()
 
-    def resolve(shard_id, m, bank_rt=None):
+    def resolve(shard_id, m, bank_rt=None, sp_rt=None):
         b = bank_rt if bank_rt is not None else bank
+        sz, pr = (sizes, probs) if sp_rt is None else (sp_rt[1], sp_rt[2])
         if cfg.method == "sgld":
             scale = jnp.float32(scheme.total / m)
             f_s = jnp.float32(1.0)
         else:
-            f_s = probs[shard_id]
-            scale = sizes[shard_id] / (f_s * m)
+            f_s = pr[shard_id]
+            scale = sz[shard_id] / (f_s * m)
         if cfg.method == "fsgld":
             q_g, q_s = b.global_, b.shard(shard_id)
         else:
@@ -198,19 +230,20 @@ def make_step_fn(
 
     if not use_kernel:
         def step(theta, key, batch, shard_id, m, step_size=None,
-                 bank_rt=None):
+                 bank_rt=None, sp_rt=None):
             h = cfg.step_size if step_size is None else step_size
-            d = drift_fn(theta, batch, shard_id, m, bank_rt)
+            d = drift_fn(theta, batch, shard_id, m, bank_rt, sp_rt)
             return langevin_update(theta, d, h, key, cfg.temperature)
         return step
 
     from repro.kernels import ops as kops
     resolve = kernel_step_operands(cfg, scheme, bank)
 
-    def step(theta, key, batch, shard_id, m, step_size=None, bank_rt=None):
+    def step(theta, key, batch, shard_id, m, step_size=None, bank_rt=None,
+             sp_rt=None):
         h = cfg.step_size if step_size is None else step_size
         gll = jax.grad(log_lik_fn)(theta, batch)
-        scale, f_s, q_g, q_s = resolve(shard_id, m, bank_rt)
+        scale, f_s, q_g, q_s = resolve(shard_id, m, bank_rt, sp_rt)
         return kops.fused_update_tree(
             theta, gll, key, h=h, scale=scale, f_s=f_s,
             prior_prec=cfg.prior_precision, alpha=cfg.alpha,

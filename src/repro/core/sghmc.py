@@ -54,11 +54,11 @@ def make_sghmc_step(log_lik_fn: LogLikFn, cfg: SamplerConfig,
         resolve = kernel_step_operands(cfg, scheme, bank)
 
         def step(state, key, batch, shard_id, m, step_size=None,
-                 bank_rt=None):
+                 bank_rt=None, sp_rt=None):
             theta, r = state
             h = cfg.step_size if step_size is None else step_size
             gll = jax.grad(log_lik_fn)(theta, batch)
-            scale, f_s, q_g, q_s = resolve(shard_id, m, bank_rt)
+            scale, f_s, q_g, q_s = resolve(shard_id, m, bank_rt, sp_rt)
             return kops.fused_update_tree(
                 theta, gll, key, h=h, scale=scale, f_s=f_s,
                 prior_prec=cfg.prior_precision, alpha=cfg.alpha,
@@ -72,10 +72,11 @@ def make_sghmc_step(log_lik_fn: LogLikFn, cfg: SamplerConfig,
     a = hmc.friction
     noise_sig = jnp.sqrt(2.0 * a * hmc.temperature)
 
-    def step(state, key, batch, shard_id, m, step_size=None, bank_rt=None):
+    def step(state, key, batch, shard_id, m, step_size=None, bank_rt=None,
+             sp_rt=None):
         theta, r = state
         h = cfg.step_size if step_size is None else step_size
-        d = drift_fn(theta, batch, shard_id, m, bank_rt)
+        d = drift_fn(theta, batch, shard_id, m, bank_rt, sp_rt)
         xi = tree_randn_like(key, theta)
         r = jax.tree.map(
             lambda rr, dd, nn: ((1.0 - a) * rr + h * dd.astype(rr.dtype)

@@ -19,13 +19,23 @@ so benchmarks, examples, and CI enumerate scenarios by string.
 """
 from repro.fed.compress import (Compression, make_compressor,
                                 make_flattener)
-from repro.fed.partition import PartitionSpec, partition
+from repro.fed.hierarchy import (hierarchical_mean, hierarchical_sum,
+                                 normalize_hierarchical)
+from repro.fed.partition import (PartitionSpec, PartitionedSource,
+                                 SyntheticClientSource, is_client_source,
+                                 partition, resolve_shard_probs,
+                                 shard_prob_preset_names)
 from repro.fed.registry import SCENARIOS, get_scenario, scenario_names
-from repro.fed.schedule import CommSchedule
-from repro.fed.spec import Federation
+from repro.fed.schedule import (CommSchedule, StreamWindow, plan_stream,
+                                replay_sids)
+from repro.fed.spec import Federation, Stream
 
 __all__ = [
-    "Federation", "PartitionSpec", "CommSchedule", "Compression",
+    "Federation", "Stream", "PartitionSpec", "CommSchedule", "Compression",
     "partition", "make_compressor", "make_flattener",
     "SCENARIOS", "get_scenario", "scenario_names",
+    "resolve_shard_probs", "shard_prob_preset_names",
+    "SyntheticClientSource", "PartitionedSource", "is_client_source",
+    "StreamWindow", "replay_sids", "plan_stream",
+    "hierarchical_sum", "hierarchical_mean", "normalize_hierarchical",
 ]

@@ -23,10 +23,13 @@ compression operators in this package are the in-scan pieces.
 from __future__ import annotations
 
 import dataclasses
+import difflib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.fed.hierarchy import normalize_hierarchical
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,3 +164,152 @@ def partition(key: jax.Array, data, spec: PartitionSpec):
               for idx in idx_per_client]
     stacked, sizes = pad_shards(shards)
     return stacked, sizes
+
+
+# ---------------------------------------------------------------------------
+# partition-aware shard_probs presets (paper Eq. 4's f_s selection probs)
+# ---------------------------------------------------------------------------
+
+SHARD_PROB_PRESETS = {
+    # f_s = 1/S — the paper's default; identical values to probs=None.
+    "uniform": lambda sizes: np.full(
+        (len(sizes),), 1.0 / len(sizes), np.float32),
+    # f_s = N_s / N — visits proportional to data held, so the DSGLD
+    # unbiasing factor N_s/(f_s m) = N/m is the SAME for every client
+    # (the variance-minimizing choice under quantity skew).
+    "size-proportional": lambda sizes: normalize_hierarchical(
+        np.asarray(sizes, np.float64)),
+    # f_s ∝ sqrt(N_s) — the compromise between uniform exploration and
+    # size-proportional visit rates for heavy-tailed client sizes.
+    "sqrt-size": lambda sizes: normalize_hierarchical(
+        np.sqrt(np.asarray(sizes, np.float64))),
+}
+
+
+def shard_prob_preset_names():
+    return sorted(SHARD_PROB_PRESETS)
+
+
+def resolve_shard_probs(name_or_probs, sizes) -> np.ndarray:
+    """Resolve a ``shard_probs`` preset name (or pass explicit probs
+    through) to an (S,) float32 array normalized against the TRUE client
+    sizes. Unknown names get the registry error contract: a KeyError with
+    a did-you-mean hint and the available names."""
+    if not isinstance(name_or_probs, str):
+        return np.asarray(name_or_probs, np.float32)
+    try:
+        fn = SHARD_PROB_PRESETS[name_or_probs]
+    except KeyError:
+        near = difflib.get_close_matches(str(name_or_probs),
+                                         shard_prob_preset_names(), n=1)
+        hint = f" (did you mean {near[0]!r}?)" if near else ""
+        raise KeyError(
+            f"unknown shard_probs preset {name_or_probs!r}{hint}; "
+            f"available: {', '.join(shard_prob_preset_names())}") from None
+    return fn(np.asarray(sizes))
+
+
+# ---------------------------------------------------------------------------
+# lazy client sources: the streamed-axis data contract
+# ---------------------------------------------------------------------------
+#
+# A *client source* replaces the materialize-all (S, max_n, ...) stacked
+# pytree when S is too large to hold: it answers ``rows(ids)`` for the
+# resident subset only. Duck-typed (the engine never imports this module
+# at class level): anything exposing
+#
+#     num_clients : int
+#     sizes       : (S,) numpy int array — true per-client row counts
+#     max_size    : int — the padded per-client row count
+#     rows(ids)   : (K,) int array -> pytree of (K, max_size, ...) leaves
+#
+# is a client source. ``rows`` must be a pure function of ``ids`` — the
+# streamed runtime calls it once per resident window, possibly again for
+# the same window after a replan, and the resident-path oracle calls it
+# with arange(S); determinism is what makes streamed == resident bitwise.
+
+
+def is_client_source(obj) -> bool:
+    return (hasattr(obj, "rows") and hasattr(obj, "num_clients")
+            and hasattr(obj, "sizes") and hasattr(obj, "max_size"))
+
+
+class SyntheticClientSource:
+    """~10^6-client synthetic non-IID token data, generated per client on
+    demand.
+
+    Each client's unigram distribution is its OWN Dirichlet(alpha) draw
+    derived by ``fold_in(key, client_id)`` — client c's rows are a pure
+    function of (key, c), so any resident subset can be generated without
+    touching the other clients (contrast ``data.synthetic.token_shards``,
+    which draws the (S, vocab) logit matrix jointly and is therefore
+    materialize-all by construction).
+    """
+
+    def __init__(self, key, *, num_clients: int, shard_size: int,
+                 seq_len: int, vocab_size: int, alpha: float = 0.1):
+        if num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        self.key = key
+        self.num_clients = int(num_clients)
+        self.shard_size = int(shard_size)
+        self.seq_len = int(seq_len)
+        self.vocab_size = int(vocab_size)
+        self.alpha = float(alpha)
+        self.sizes = np.full((self.num_clients,), self.shard_size,
+                             np.int64)
+        self.max_size = self.shard_size
+
+        def one(cid):
+            k = jax.random.fold_in(self.key, cid)
+            k_dir, k_tok = jax.random.split(k)
+            g = jax.random.gamma(k_dir, self.alpha, (self.vocab_size,))
+            lp = jnp.log(g / g.sum() + 1e-20)
+            t = jax.random.categorical(
+                k_tok, lp, shape=(self.shard_size, self.seq_len + 1))
+            return {"tokens": t[..., :-1].astype(jnp.int32),
+                    "labels": t[..., 1:].astype(jnp.int32)}
+
+        # one compile per distinct K (the streamed runtime uses a fixed
+        # resident width, so in practice exactly one)
+        self._rows = jax.jit(jax.vmap(one))
+
+    def rows(self, ids):
+        return self._rows(jnp.asarray(np.asarray(ids, np.int32)))
+
+
+class PartitionedSource:
+    """Lazy per-client shard construction over pooled data: the
+    ``partition()`` split without the materialize-all stacking.
+
+    The client->row index lists are computed once (cheap: O(N) host
+    work); ``rows(ids)`` gathers and pads only the requested clients with
+    ``pad_shards``'s exact fill semantics (NaN floats / int-min ints), so
+    materializing arange(S) reproduces ``partition()``'s stacked output.
+    """
+
+    def __init__(self, data, spec: PartitionSpec, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(spec.seed)
+        self.data = jax.tree.map(np.asarray, data)
+        self.spec = spec
+        assign = _KINDS[spec.kind](key, data, spec)
+        self._assign = [np.sort(np.asarray(a, np.int64)) for a in assign]
+        self.num_clients = spec.num_shards
+        self.sizes = np.asarray([len(a) for a in self._assign], np.int64)
+        self.max_size = int(self.sizes.max())
+
+    def rows(self, ids):
+        def pad_one(leaf):
+            out_shape = (len(ids), self.max_size) + leaf.shape[1:]
+            if np.issubdtype(leaf.dtype, np.inexact):
+                out = np.full(out_shape, np.nan, leaf.dtype)
+            else:
+                out = np.full(out_shape, np.iinfo(leaf.dtype).min,
+                              leaf.dtype)
+            for j, cid in enumerate(np.asarray(ids)):
+                idx = self._assign[int(cid)]
+                out[j, :len(idx)] = leaf[idx]
+            return out
+
+        return jax.tree.map(pad_one, self.data)

@@ -28,9 +28,11 @@ to the oracle round body.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,3 +74,128 @@ def straggler_mask(sched: CommSchedule, key: jax.Array,
                    n_chains: int) -> jax.Array:
     """(n_chains,) bool — True where the chain's round update is dropped."""
     return jax.random.bernoulli(key, sched.straggler_prob, (n_chains,))
+
+
+# ---------------------------------------------------------------------------
+# Resident-set planning for the streamed client axis.
+#
+# The streamed runtime (core/engine.py) keeps only a K-client resident
+# window on device and prefetches the next window while the current scan
+# segment runs. Which clients a segment needs is fully determined by the
+# engine's RNG chain: ``replay_sids`` re-runs EXACTLY the per-round key
+# splits and (for federated runs) the comm/participation masks of the
+# scanned round bodies — using the very ``comm_mask``/``participation_mask``
+# functions the engine lowers — so the plan can never drift from the
+# in-scan assignment. ``plan_stream`` then slices the assignment into
+# fixed-length windows and emits one sorted, tail-padded resident id set
+# per window.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamWindow:
+    """One prefetch unit of a streamed run.
+
+    ``resident_ids`` is (resident,) int32, sorted ascending, tail-padded by
+    repeating the largest id so every window has identical shape (one
+    compiled executor per window *length*, not per window). Padding with a
+    repeated real id keeps the in-scan global->local remap
+    (sum of ``resident_ids < sid``) exact for every real id.
+    """
+    r0: int
+    length: int
+    resident_ids: np.ndarray
+
+    def __post_init__(self):
+        assert self.length >= 1, self.length
+        ids = np.asarray(self.resident_ids)
+        assert ids.ndim == 1 and ids.dtype == np.int32, (ids.shape, ids.dtype)
+
+
+def replay_sids(key: jax.Array, *, num_rounds: int, n_chains: int,
+                num_shards: int, federated: bool = False,
+                sched: Optional[CommSchedule] = None,
+                reassign: str = "permutation") -> np.ndarray:
+    """(num_rounds, n_chains) int32 — the client id each REAL chain holds at
+    every round, replayed from the engine's executor RNG chain.
+
+    ``key`` must be the exact key the engine passes to its compiled
+    executor for round 0 (the streamed ``run`` threads the returned key
+    between segments, so one replay from round 0 covers every segment).
+    Only ``reassign='permutation'`` is replayable/supported — the streamed
+    runtime refuses other modes before ever calling this.
+    """
+    if reassign != "permutation":
+        raise ValueError(
+            f"replay_sids supports reassign='permutation' only, got "
+            f"{reassign!r} (the streamed runtime refuses other modes)")
+    sched = CommSchedule() if sched is None else sched
+    use_part = sched.participation < 1.0
+    reps = -(-n_chains // num_shards)  # ceil — block-cyclic tiling
+
+    def tiled(k_assign):
+        perm = jax.random.permutation(k_assign, num_shards)
+        if reps > 1:
+            perm = jnp.tile(perm, reps)
+        return perm[:n_chains].astype(jnp.int32)
+
+    rounds = jnp.arange(num_rounds, dtype=jnp.int32)
+
+    if not federated:
+        # round_body: key, k_assign, k_run = split(key, 3); fresh sids.
+        def body(k, _r):
+            k, k_assign, _ = jax.random.split(k, 3)
+            return k, tiled(k_assign)
+
+        _, sids = jax.lax.scan(body, key, rounds)
+    else:
+        # fed_round_body: key, k_assign, k_run, k_fed = split(key, 4);
+        # sids carried, exchanged only where comm & participation.
+        def body(carry, r):
+            k, sids = carry
+            k, k_assign, _, k_fed = jax.random.split(k, 4)
+            new = tiled(k_assign)
+            comm = comm_mask(sched, r)
+            if use_part:
+                part = participation_mask(
+                    sched, jax.random.fold_in(k_fed, 0), r, n_chains)
+                exch = comm & part
+            else:
+                exch = jnp.broadcast_to(comm, (n_chains,))
+            sids = jnp.where(exch, new, sids)
+            return (k, sids), sids
+
+        sids0 = jnp.zeros((n_chains,), jnp.int32)
+        _, sids = jax.lax.scan(body, (key, sids0), rounds)
+
+    return np.asarray(jax.device_get(sids), np.int32)
+
+
+def plan_stream(sids: np.ndarray, *, resident: int,
+                window: int = 1) -> list:
+    """Slice a replayed (R, n_chains) assignment into ``StreamWindow``s.
+
+    Raises an actionable error naming the minimum viable ``resident`` when
+    any window needs more distinct clients than fit on device.
+    """
+    sids = np.asarray(sids)
+    assert sids.ndim == 2 and sids.shape[0] >= 1, sids.shape
+    if window < 1:
+        raise ValueError(f"stream window must be >= 1, got {window}")
+    num_rounds = sids.shape[0]
+    blocks = [(r0, sids[r0:r0 + window]) for r0 in range(0, num_rounds,
+                                                         window)]
+    need = max(np.unique(blk).size for _, blk in blocks)
+    if need > resident:
+        raise ValueError(
+            f"stream plan needs up to {need} distinct resident clients per "
+            f"{window}-round window but Stream(resident={resident}); raise "
+            f"resident to at least {need}, or shrink the window / chain "
+            f"count")
+    out = []
+    for r0, blk in blocks:
+        ids = np.unique(blk).astype(np.int32)  # sorted ascending
+        pad = np.full((resident - ids.size,), ids[-1], np.int32)
+        out.append(StreamWindow(r0=r0, length=int(blk.shape[0]),
+                                resident_ids=np.concatenate([ids, pad])))
+    return out

@@ -19,6 +19,31 @@ from repro.fed.schedule import CommSchedule
 
 
 @dataclasses.dataclass(frozen=True)
+class Stream:
+    """The streamed client axis: HOW MANY clients are resident on device.
+
+    Only ``resident`` clients live on device at a time; the engine plans
+    which clients each fixed-length ``window`` of rounds needs (from the
+    same RNG chain the scan lowers — ``repro.fed.schedule.replay_sids``)
+    and, with ``prefetch=True``, stages the next window's shards onto the
+    device while the current scan segment runs. Fault-free streamed runs
+    are bitwise-identical to the resident path on configs both support.
+
+    ``resident`` must cover the distinct clients any single window can
+    touch (at most ``n_chains * window``; the planner names the minimum
+    viable value when it refuses). Fixed ``window`` keeps the number of
+    compiled executor variants at <= 2 (full windows + one tail).
+    """
+    resident: int
+    window: int = 1
+    prefetch: bool = True
+
+    def __post_init__(self):
+        assert self.resident >= 1, self.resident
+        assert self.window >= 1, self.window
+
+
+@dataclasses.dataclass(frozen=True)
 class Federation:
     """A complete federation scenario (hashable: engine executors cache
     per spec)."""

@@ -64,7 +64,7 @@ def _sample_into_bank(fsgld, key, params, cfg, args, federation):
         finals = fsgld.engine.run(
             jax.random.fold_in(key, i), state, r, n_chains=args.chains,
             reassign="permutation", collect=False, stacked=stacked,
-            federation=federation)
+            federation=federation, stream=fsgld.execution.stream)
         # sghmc returns (theta, momentum) chain-state pairs; the bank
         # stores parameters only (a draw is a draw, not a chain state)
         theta = finals[0] if args.kernel == "sghmc" else finals
@@ -125,6 +125,21 @@ def main(argv=None):
                          "scenarios only")
     ap.add_argument("--local-updates", type=int, default=4)
     ap.add_argument("--num-shards", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=None,
+                    help="streamed client axis: synthesize this many LAZY "
+                         "clients (repro.fed.SyntheticClientSource — each "
+                         "client's rows are a pure function of (seed, id), "
+                         "generated on demand) instead of materializing "
+                         "--num-shards token shards up front. Scales to "
+                         "~10^6 clients; pair with --resident to bound "
+                         "device memory")
+    ap.add_argument("--resident", type=int, default=None,
+                    help="streamed client axis: keep only this many "
+                         "clients resident on device; the host prefetches "
+                         "the next window's shards while the scan segment "
+                         "runs. Fault-free streamed runs are bitwise "
+                         "identical to the resident path. Must not exceed "
+                         "the client count (--clients / --num-shards)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--shard-size", type=int, default=64)
@@ -165,6 +180,26 @@ def main(argv=None):
             "--snapshot-every/--resume run the schedule as one resumable "
             "engine dispatch; --draw-bank runs its own segment loop — "
             "pick one")
+    n_clients = args.clients if args.clients is not None else args.num_shards
+    if args.resident is not None and args.resident > n_clients:
+        flag = "--clients" if args.clients is not None else "--num-shards"
+        raise SystemExit(
+            f"--resident {args.resident} exceeds the client count "
+            f"({n_clients}): the resident set is the on-device SUBSET of "
+            f"clients — lower --resident to at most {n_clients}, or raise "
+            f"{flag} (did you mean {flag} {args.resident}?)")
+    if args.resident is not None and (args.snapshot_every or args.resume):
+        raise SystemExit(
+            "--resident (streamed clients) does not compose with "
+            "--snapshot-every/--resume: snapshots capture the full scan "
+            "carry and the resident window is host-managed — drop "
+            "--resident to snapshot")
+    if args.clients is not None and args.method == "fsgld":
+        raise SystemExit(
+            "--clients streams lazy synthetic clients; surrogate fitting "
+            "(--method fsgld) needs materialized shard data — pick "
+            "--method dsgld or fald, or pass a prefit bank through the "
+            "api facade")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh() if args.smoke \
@@ -172,15 +207,25 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     k_param, k_data, k_fit, k_run = jax.random.split(key, 4)
 
-    print(f"arch={cfg.name} method={args.method} shards={args.num_shards} "
-          f"mesh={dict(mesh.shape)}")
+    print(f"arch={cfg.name} method={args.method} shards={n_clients} "
+          f"mesh={dict(mesh.shape)}"
+          + (f" resident={args.resident}" if args.resident else ""))
     params = init_params(cfg, k_param)
     n_params = sum(p.size for p in jax.tree.leaves(params))
     print(f"params: {n_params/1e6:.2f}M")
 
-    shards = token_shards(
-        k_data, num_shards=args.num_shards, shard_size=args.shard_size,
-        seq_len=args.seq, vocab_size=cfg.vocab_size)
+    if args.clients is not None:
+        # lazy per-client source: only the resident window is ever
+        # materialized (the streamed-scale data contract)
+        from repro.fed import SyntheticClientSource
+        shards = SyntheticClientSource(
+            k_data, num_clients=args.clients,
+            shard_size=args.shard_size, seq_len=args.seq,
+            vocab_size=cfg.vocab_size)
+    else:
+        shards = token_shards(
+            k_data, num_shards=args.num_shards, shard_size=args.shard_size,
+            seq_len=args.seq, vocab_size=cfg.vocab_size)
 
     # ---- the one front door: declarative facade over the chain engine ----
     minibatch = min(args.batch, args.shard_size)
@@ -216,7 +261,9 @@ def main(argv=None):
             mesh=mesh, executor=executor, collect=False,
             dtype=jnp.dtype(cfg.surrogate_dtype),
             snapshot_every=args.snapshot_every,
-            snapshot_path=args.snapshot_dir, resume=args.resume),
+            snapshot_path=args.snapshot_dir, resume=args.resume,
+            stream=(api.Stream(resident=args.resident)
+                    if args.resident is not None else None)),
         federation=federation)
 
     # ---- phase 1: surrogates (once, before sampling) ----
@@ -239,7 +286,9 @@ def main(argv=None):
             # pairs; the ll probe (and the checkpoint) wants parameters
             finals = finals[0]
     dt = time.time() - t0
-    probe = jax.tree.map(lambda d: d[0][:args.batch], shards)
+    probe_rows = (shards.rows(np.arange(1)) if args.clients is not None
+                  else shards)
+    probe = jax.tree.map(lambda d: d[0][:args.batch], probe_rows)
     lls = jax.vmap(lambda p: log_lik_fn(p, cfg, probe))(finals)
     lls = np.asarray(lls) / probe["tokens"].size
     for c, ll in enumerate(lls):

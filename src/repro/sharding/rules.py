@@ -209,6 +209,18 @@ def packed_chain_spec() -> P:
     return P(CHAIN_AXIS, None)
 
 
+def stream_window_spec() -> P:
+    """Spec for streamed-client WINDOW operands (core/engine.py's
+    ``stream=`` path): the resident client-id vector and the (K,)
+    sizes/probs metadata rows, plus the (K, max_n, ...) resident shard
+    data, are all REPLICATED — every data group must see the same resident
+    window because any chain can be reassigned to any resident client
+    within it (the same reason the full (S, ...) shard stack replicates on
+    the resident path). The chain axis stays on 'data'; streaming changes
+    WHICH client rows are on device, never how chains are placed."""
+    return P()
+
+
 def fed_carry_spec() -> P:
     """Spec for the engine's federated-round carry: the resident sids
     (C,) and every compression-state row — server-view reference,

@@ -32,7 +32,8 @@ def _params(obj):
 # The snapshot. Field ORDER is part of the contract (positional calls);
 # (name, has_default) pairs catch silently-added required arguments.
 EXPECTED_ALL = ("Posterior", "SurrogateSpec", "Schedule", "Execution",
-                "Federation", "Recovery", "RunHealth", "Serving", "FSGLD",
+                "Federation", "Stream", "SyntheticClientSource",
+                "Recovery", "RunHealth", "Serving", "FSGLD",
                 "fit_bank_local_sgld", "get_scenario")
 
 EXPECTED_SIGNATURES = {
@@ -46,9 +47,13 @@ EXPECTED_SIGNATURES = {
     "Execution": (("mesh", True), ("executor", True), ("dtype", True),
                   ("collect", True), ("recovery", True),
                   ("snapshot_every", True), ("snapshot_path", True),
-                  ("resume", True)),
+                  ("resume", True), ("stream", True)),
     "Federation": (("partition", True), ("schedule", True),
                    ("compression", True)),
+    "Stream": (("resident", False), ("window", True), ("prefetch", True)),
+    "SyntheticClientSource": (("key", False), ("num_clients", False),
+                              ("shard_size", False), ("seq_len", False),
+                              ("vocab_size", False), ("alpha", True)),
     "Recovery": (("policy", True), ("divergence_threshold", True),
                  ("check_momentum", True), ("window", True),
                  ("quantile", True)),
@@ -62,7 +67,8 @@ EXPECTED_SIGNATURES = {
                 ("batch", True), ("prompt_len", True), ("gen", True),
                 ("mesh", True), ("collect", True)),
     "FSGLD.sample": (("key", False), ("theta0", False), ("rounds", True),
-                     ("n_chains", True), ("federation", True)),
+                     ("n_chains", True), ("federation", True),
+                     ("stream", True)),
     "FSGLD.fit": (("key", False), ("theta0", False)),
     "FSGLD.serve": (("spec", False), ("bank", True), ("draws", True),
                     ("seed", True)),
@@ -143,3 +149,12 @@ def test_readme_rival_samplers_runs():
     src = _readme_block("Rival samplers")
     assert "method=" in src and "fald" in src
     exec(compile(src, "README.md:<rival-samplers-quickstart>", "exec"), {})
+
+
+def test_readme_client_scale_quickstart_runs():
+    """Exec the README '## Client scale-out' quickstart verbatim: lazy
+    synthetic clients + Stream(resident=K) sample bitwise-identically to
+    the resident path. Its asserts are the test."""
+    src = _readme_block("Client scale-out")
+    assert "Stream(" in src and "SyntheticClientSource(" in src
+    exec(compile(src, "README.md:<client-scale-quickstart>", "exec"), {})

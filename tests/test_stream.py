@@ -1,0 +1,365 @@
+"""CI ``client-scale`` lane: the streamed client axis.
+
+Contracts (the streamed-axis acceptance criteria):
+
+  * PEAK-RESIDENT PROPERTY — for ANY communication schedule
+    (participation x delay x stragglers) the window planner
+    (``repro.fed.schedule.plan_stream``) never asks the device to hold
+    more than ``resident`` distinct clients, its windows tile the
+    schedule exactly, and every sid the scan will visit is inside its
+    window's resident set;
+  * BITWISE PARITY — fault-free streamed runs equal the resident path
+    bit-for-bit on every executor (vmap / per_leaf / packed), across
+    dynamics (sghmc), aggregation (fald), compression (bidir top-k),
+    and lazy ClientSource data;
+  * IN-SCAN LOWERING — with streaming lowered in, the executor jaxpr is
+    still ONE rounds-scan, one pallas_call on the packed path, and no
+    pad primitive in any scan body (the resident remap is a
+    compare-and-sum rank, not a searchsorted scan);
+  * ERROR CONTRACTS — unknown ``shard_probs`` presets fail with
+    did-you-mean hints; unstreamable configs (categorical reassign,
+    refresh, snapshots, recovery, pooled sgld, resident > clients) are
+    refused with actionable messages; an undersized resident budget
+    names the minimum viable value;
+  * the cross-silo host reductions (``repro.fed.hierarchy``) match the
+    flat numpy reductions for any silo size.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import SamplerConfig
+from repro.core import (MeshChainEngine, make_bank,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.core.surrogate import SurrogateBank
+from repro.fed import (CommSchedule, Compression, Federation, Stream,
+                       SyntheticClientSource, hierarchical_mean,
+                       hierarchical_sum, normalize_hierarchical,
+                       plan_stream, replay_sids, resolve_shard_probs,
+                       shard_prob_preset_names)
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem(key, S=12, n=24, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# property: peak resident <= K for ANY schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [1, 2, 3])
+@pytest.mark.parametrize("participation,delay,straggler",
+                         [(1.0, 1, 0.0), (0.6, 1, 0.0), (1.0, 3, 0.0),
+                          (0.5, 2, 0.25), (0.8, 3, 0.1)])
+def test_peak_resident_bounded_for_any_schedule(window, participation,
+                                                delay, straggler):
+    """The planner's windows tile the schedule, hold at most ``resident``
+    distinct clients each (padded to exactly K, sorted), and cover every
+    sid the scan will visit — the device working set is provably bounded
+    by the resident budget for any participation/delay/straggler mix."""
+    R, C, S = 10, 4, 16
+    sched = CommSchedule(delay=delay, participation=participation,
+                         straggler_prob=straggler)
+    sids = replay_sids(jax.random.PRNGKey(3), num_rounds=R, n_chains=C,
+                       num_shards=S, federated=True, sched=sched)
+    K = min(C * window, S)
+    wins = plan_stream(sids, resident=K, window=window)
+    assert sum(w.length for w in wins) == R
+    assert [w.r0 for w in wins] == list(range(0, R, window))
+    for w in wins:
+        ids = np.asarray(w.resident_ids)
+        assert ids.shape == (K,) and ids.dtype == np.int32
+        assert np.all(np.diff(ids) >= 0), "resident ids not sorted"
+        assert np.unique(ids).size <= K
+        blk = np.asarray(sids[w.r0:w.r0 + w.length])
+        assert np.isin(blk, ids).all(), \
+            "scheduled sid outside its window's resident set"
+
+
+def test_plan_stream_names_minimum_viable_resident():
+    sids = replay_sids(jax.random.PRNGKey(0), num_rounds=4, n_chains=6,
+                      num_shards=8)
+    with pytest.raises(ValueError, match=r"raise resident to at least"):
+        plan_stream(sids, resident=1, window=2)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: streamed == resident on every executor / variant
+# ---------------------------------------------------------------------------
+
+_FED = Federation(schedule=CommSchedule(delay=2, participation=0.6,
+                                        straggler_prob=0.2))
+
+
+def _facade(data, bank, executor, *, stream=None, method="fsgld",
+            kernel="sgld", federation=_FED, collect=True):
+    return api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4, method=method, kernel=kernel,
+        surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                   if method == "fsgld"
+                   else api.SurrogateSpec(kind="none")),
+        schedule=api.Schedule(rounds=6, local_steps=3, n_chains=4,
+                              reassign="permutation", thin=3),
+        execution=api.Execution(executor=executor, collect=collect,
+                                stream=stream),
+        federation=federation)
+
+
+@pytest.mark.parametrize("executor", ["vmap", "per_leaf", "packed"])
+def test_streamed_bitwise_parity_every_executor(executor):
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(7), jnp.zeros(3)
+    ref = _facade(data, bank, executor).sample(key, t0)
+    got = _facade(data, bank, executor,
+                  stream=Stream(resident=6, window=2)).sample(key, t0)
+    _assert_bitwise(ref, got)
+
+
+@pytest.mark.parametrize("variant", ["fald", "sghmc", "compressed",
+                                     "no_prefetch"])
+def test_streamed_bitwise_parity_variants(variant):
+    data, bank = _problem(jax.random.PRNGKey(1))
+    key, t0 = jax.random.PRNGKey(9), jnp.zeros(3)
+    kw = {}
+    if variant == "fald":
+        kw = dict(method="fald")
+    elif variant == "sghmc":
+        kw = dict(kernel="sghmc")
+    elif variant == "compressed":
+        kw = dict(federation=Federation(
+            schedule=CommSchedule(delay=2),
+            compression=Compression(kind="topk", frac=0.5,
+                                    direction="bidir")))
+    stream = (Stream(resident=6, window=2, prefetch=False)
+              if variant == "no_prefetch" else Stream(resident=6, window=2))
+    ref = _facade(data, bank, "vmap", **kw).sample(key, t0)
+    got = _facade(data, bank, "vmap", stream=stream, **kw).sample(key, t0)
+    _assert_bitwise(ref, got)
+
+
+def test_streamed_client_source_odd_chain_count():
+    """Lazy ClientSource data + a chain count that does not divide the
+    client count (block-cyclic tiling): streamed final states equal the
+    materialize-all resident path bitwise."""
+    src = SyntheticClientSource(jax.random.PRNGKey(5), num_clients=24,
+                                shard_size=8, seq_len=8, vocab_size=32)
+
+    def tok_ll(theta, batch):
+        return jnp.sum(jax.nn.log_softmax(theta)[batch["labels"]])
+
+    def build(stream):
+        return api.FSGLD(
+            api.Posterior(tok_ll), src, minibatch=4, step_size=1e-3,
+            method="dsgld", surrogate=api.SurrogateSpec(kind="none"),
+            schedule=api.Schedule(rounds=5, local_steps=2, n_chains=5,
+                                  reassign="permutation"),
+            execution=api.Execution(executor="vmap", collect=False,
+                                    stream=stream))
+
+    key, t0 = jax.random.PRNGKey(2), jnp.zeros(32)
+    ref = build(None).sample(key, t0)
+    got = build(Stream(resident=10, window=2)).sample(key, t0)
+    _assert_bitwise(ref, got)
+
+
+def test_uniform_preset_bitwise_matches_probs_none():
+    """The 'uniform' preset and probs=None spell the SAME f32 values —
+    which spelling built the scheme never perturbs the math."""
+    sizes = np.full((12,), 24, np.int64)
+    preset = resolve_shard_probs("uniform", sizes)
+    from repro.core.sampler import ShardScheme
+    none_path = ShardScheme(sizes=tuple(sizes), probs=None).probs_array()
+    np.testing.assert_array_equal(np.asarray(preset, np.float32),
+                                  none_path)
+    data, bank = _problem(jax.random.PRNGKey(3))
+    key, t0 = jax.random.PRNGKey(4), jnp.zeros(3)
+    a = _facade(data, bank, "vmap").sample(key, t0)
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4, surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=6, local_steps=3, n_chains=4,
+                              reassign="permutation", thin=3),
+        execution=api.Execution(executor="vmap"),
+        shard_probs="uniform", federation=_FED)
+    _assert_bitwise(a, f.sample(key, t0))
+
+
+# ---------------------------------------------------------------------------
+# in-scan lowering with streaming: one scan, one pallas_call, no pad
+# ---------------------------------------------------------------------------
+
+def _all_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(v):
+    if hasattr(v, "jaxpr"):           # ClosedJaxpr
+        return [v.jaxpr]
+    if hasattr(v, "eqns"):            # raw Jaxpr
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def test_streamed_rounds_lower_into_one_scan():
+    """Streaming + delayed/partial schedule + top-k compression, packed
+    executor: the window program is still ONE rounds-scan, exactly one
+    pallas_call, and no pad primitive in any scan body — the global->
+    resident sid remap lowers as a compare-and-sum rank, never as an
+    inner searchsorted scan."""
+    # num_rounds != local_updates, so the length filter below uniquely
+    # identifies the rounds scan (the local-steps scan has length 4)
+    S, K, num_rounds = 8, 4, 6
+    data, bank = _problem(jax.random.PRNGKey(2), S=S, n=16)
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=4, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=6, bank=bank,
+                          use_kernel=True)
+    fed = Federation(schedule=CommSchedule(delay=2, participation=0.5),
+                     compression=Compression(kind="topk", frac=0.1))
+    layout = eng._layout_for(jnp.zeros(3))
+    execute = eng._executor(num_rounds=num_rounds, n_chains=4,
+                            reassign="permutation", collect=True,
+                            collect_every=2, layout=layout,
+                            federation=fed, stream=K)
+    chains = jnp.zeros((4, 3))
+    sids0 = jnp.zeros((4,), jnp.int32)
+    ref0 = jnp.zeros((4, 3), jnp.float32)
+    ids = jnp.arange(K, dtype=jnp.int32)
+    data_k = jax.tree.map(lambda l: l[:K], data)
+    bank_k = SurrogateBank(jax.tree.map(lambda m: m[:K], bank.means),
+                           jax.tree.map(lambda p: p[:K], bank.precs),
+                           bank.global_, bank.kind)
+    sp = (jnp.full((K,), 16, jnp.int32), jnp.full((K,), 16.0, jnp.float32),
+          jnp.full((K,), 1.0 / S, jnp.float32))
+    jaxpr = jax.make_jaxpr(execute)(
+        jax.random.PRNGKey(0), chains, data_k, bank_k,
+        jnp.asarray(0, jnp.int32), (sids0, (ref0, ref0)), None, ids, sp)
+
+    eqns = list(_all_eqns(jaxpr.jaxpr))
+    pallas = [e for e in eqns if "pallas" in e.primitive.name]
+    assert len(pallas) == 1, [e.primitive.name for e in pallas]
+    round_scans = [e for e in eqns if e.primitive.name == "scan"
+                   and e.params["length"] == num_rounds]
+    assert len(round_scans) == 1, "rounds loop not a single scan"
+    for s in (e for e in eqns if e.primitive.name == "scan"):
+        body = [e.primitive.name
+                for e in _all_eqns(s.params["jaxpr"].jaxpr)]
+        assert "pad" not in body, "pad op inside a scan body"
+        assert body.count("pallas_call") <= 1
+
+
+# ---------------------------------------------------------------------------
+# error contracts
+# ---------------------------------------------------------------------------
+
+def test_unknown_preset_has_did_you_mean_hint():
+    sizes = np.full((4,), 10)
+    with pytest.raises(KeyError,
+                       match=r"did you mean 'size-proportional'\?"):
+        resolve_shard_probs("size-proportionl", sizes)
+    with pytest.raises(KeyError, match="available"):
+        resolve_shard_probs("not-a-preset", sizes)
+    assert set(shard_prob_preset_names()) >= {"uniform",
+                                              "size-proportional",
+                                              "sqrt-size"}
+
+
+def _engine(S=8):
+    data, bank = _problem(jax.random.PRNGKey(1), S=S, n=16)
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=S,
+                        local_updates=3, prior_precision=1.0)
+    return MeshChainEngine(log_lik, cfg, data, minibatch=6, bank=bank)
+
+
+def test_streamed_refusals_are_actionable(tmp_path):
+    eng = _engine()
+    key, t0 = jax.random.PRNGKey(0), jnp.zeros(3)
+
+    def run(**kw):
+        base = dict(n_chains=2, stream=Stream(resident=4),
+                    reassign="permutation")
+        return eng.run(key, t0, 2, **{**base, **kw})
+
+    with pytest.raises(NotImplementedError, match="permutation"):
+        run(reassign="categorical")
+    with pytest.raises(ValueError, match="lower resident"):
+        run(stream=Stream(resident=64))
+    with pytest.raises(NotImplementedError, match="refresh_every"):
+        run(refresh_every=1)
+    with pytest.raises(NotImplementedError, match="snapshot"):
+        run(snapshot_every=1, snapshot_path=str(tmp_path))
+    from repro.core.health import Recovery
+    with pytest.raises(NotImplementedError, match="recovery"):
+        run(recovery=Recovery())
+
+
+def test_facade_refuses_client_source_misuse():
+    src = SyntheticClientSource(jax.random.PRNGKey(5), num_clients=6,
+                                shard_size=8, seq_len=8, vocab_size=32)
+    post = api.Posterior(lambda t, b: jnp.sum(t))
+    with pytest.raises(ValueError, match="PartitionedSource"):
+        api.FSGLD(post, src, minibatch=4, method="dsgld",
+                  surrogate=api.SurrogateSpec(kind="none"),
+                  federation=Federation(
+                      partition=__import__("repro.fed", fromlist=["x"])
+                      .PartitionSpec(num_shards=3)))
+    with pytest.raises(ValueError, match="carries its own sizes"):
+        api.FSGLD(post, src, minibatch=4, method="dsgld",
+                  surrogate=api.SurrogateSpec(kind="none"),
+                  sizes=(8,) * 6)
+    with pytest.raises(ValueError, match="prefit bank"):
+        api.FSGLD(post, src, minibatch=4,
+                  surrogate=api.SurrogateSpec(kind="diag")).fit(
+            jax.random.PRNGKey(0), jnp.zeros(32))
+
+
+# ---------------------------------------------------------------------------
+# cross-silo host reductions == flat reductions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("silo", [1, 7, 64, 10_000])
+def test_hierarchy_matches_flat_reductions(silo):
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0.1, 2.0, size=1000)
+    w = rng.uniform(0.1, 1.0, size=1000)
+    assert np.isclose(hierarchical_sum(x, silo), float(np.sum(x)),
+                      rtol=1e-12)
+    assert np.isclose(hierarchical_mean(x, w, silo),
+                      float(np.average(x, weights=w)), rtol=1e-10)
+    p = normalize_hierarchical(x, silo)
+    assert p.dtype == np.float32
+    np.testing.assert_allclose(
+        p, (x / np.sum(x)).astype(np.float32), rtol=1e-6)
+    assert abs(hierarchical_sum(p, silo) - 1.0) < 1e-6
+
+
+def test_hierarchy_rejects_degenerate_inputs():
+    with pytest.raises(ValueError, match="zero"):
+        hierarchical_mean([1.0, 2.0], [0.0, 0.0])
+    with pytest.raises(ValueError, match="total"):
+        normalize_hierarchical(np.zeros(4))
+    with pytest.raises(ValueError, match="silo"):
+        list(__import__("repro.fed.hierarchy",
+                        fromlist=["silo_slices"]).silo_slices(10, 0))
