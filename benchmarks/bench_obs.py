@@ -1,0 +1,175 @@
+"""Observability overhead benchmark: the PR 10 acceptance gates.
+
+Two families of rows:
+
+  * ``obs/telemetry/*`` — the in-scan telemetry cost: the SAME Gaussian
+    facade run with ``Execution.telemetry`` off and on (full probe
+    metrics), best-of-N timed. The ``overhead`` row is the on/off
+    steps/s ratio gated ABSOLUTELY via ``speedup-floor=0.95``
+    (telemetry must cost < 5% throughput at production round lengths —
+    T=100 local steps per round, the quickstart's configuration: the
+    one probe evaluation amortizes over a round's gradient work, so
+    overhead scales as ~1/T); both sides share one process/backend and
+    the off/on repeats interleave, so the floor is machine-portable
+    like the packed-kernel floors. FIXED problem
+    size (SCALE ignored, like the calib/frontier lanes): the claim is
+    about rounds whose gradient work dwarfs the per-round metric ops —
+    at toy sizes the fixed per-round cost dominates and the ratio
+    measures dispatch, not telemetry.
+  * ``obs/spans/*`` — 0/1 indicator rows (``obs-floor=1``,
+    check_regression.py) proving the host-side spans actually EXPORT:
+    a streamed prefetch run writes a ``stream.prefetch_overlap`` event
+    (the PR 9 overlap measurement) and a serving request writes
+    ``serve.prefill``/``serve.decode`` spans plus the ``serve.request``
+    event into the trace JSONL.
+
+Every row uses fixed problem sizes; REPRO_BENCH_SCALE is ignored.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, bench_main
+from repro import api
+from repro.core import make_bank
+from repro.core.surrogate import analytic_gaussian_likelihood_surrogate
+from repro.obs import trace as obs_trace
+
+T_LOCAL = 100  # the quickstart's round length: probe amortizes over T grads
+
+
+def _gauss_problem(key, S, n, d):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def gauss_log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _telemetry_rows(key, rows, repeats=20):
+    d, n = 2048, 128           # fixed: big enough that T=40 grads/round
+    S, C, rounds = 4, 4, 4     # dwarf the per-round metric ops
+    data, bank = _gauss_problem(jax.random.fold_in(key, 5), S, n, d)
+    theta0 = jnp.zeros(d)
+    f = api.FSGLD(
+        api.Posterior(gauss_log_lik, prior_precision=1.0), data,
+        minibatch=min(32, n), step_size=1e-5,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=rounds, local_steps=T_LOCAL,
+                              thin=T_LOCAL))
+
+    lanes = [("off", None), ("on", api.Telemetry())]
+    runners = {}
+    for tag, tel in lanes:
+        def runner(_tel=tel):
+            return f.sample(jax.random.PRNGKey(1), theta0, rounds=rounds,
+                            n_chains=C, telemetry=_tel)
+        runners[tag] = runner
+        jax.block_until_ready(runner())  # same-shape warmup: no compile
+
+    # INTERLEAVED pairwise ratios: each repeat times off then on
+    # back-to-back, so container-level drift (cpufreq, noisy
+    # neighbours) hits both sides of that repeat's ratio alike — on
+    # this shared CPU box separate per-lane blocks swing the ratio
+    # +-30%. The committed overhead is the MEDIAN pairwise ratio (a
+    # robust location estimate; best-of-N picks each lane's luckiest
+    # moment, which need not be the same moment for both lanes).
+    best = {tag: float("inf") for tag, _ in lanes}
+    ratios = []
+    for _ in range(repeats):
+        dt = {}
+        for tag, _ in lanes:
+            t0 = time.perf_counter()
+            jax.block_until_ready(runners[tag]())
+            dt[tag] = time.perf_counter() - t0
+            best[tag] = min(best[tag], dt[tag])
+        ratios.append(dt["off"] / dt["on"])
+    ratios.sort()
+    mid = len(ratios) // 2
+    median = (ratios[mid] if len(ratios) % 2
+              else 0.5 * (ratios[mid - 1] + ratios[mid]))
+
+    steps = rounds * T_LOCAL * C
+    for tag, _ in lanes:
+        rows.append(Row(f"obs/telemetry/{tag}/S{S}/C{C}",
+                        1e6 * best[tag] / steps, steps / best[tag],
+                        note="derived = chain-steps/s"))
+    rows.append(Row(
+        f"obs/telemetry/overhead/S{S}/C{C}", 0.0, median,
+        note="derived = median interleaved telemetry-on / telemetry-off "
+             "steps/s ratio; speedup-floor=0.95"))
+
+
+def _span_rows(key, rows):
+    """0/1 indicators: the spans the engine and server emit actually
+    land in an exported trace JSONL (names checked, not just counts)."""
+    # -- streamed prefetch overlap (the PR 9 double buffer) --
+    data, bank = _gauss_problem(jax.random.fold_in(key, 9), 12, 24, 3)
+    f = api.FSGLD(
+        api.Posterior(gauss_log_lik, prior_precision=1.0), data,
+        minibatch=8, step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=6, local_steps=3, n_chains=4,
+                              reassign="permutation", thin=3),
+        execution=api.Execution(stream=api.Stream(resident=8, window=2)))
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "trace.jsonl")
+        obs_trace.configure(path)
+        try:
+            jax.block_until_ready(
+                f.sample(jax.random.PRNGKey(3), jnp.zeros(3)))
+        finally:
+            obs_trace.configure()
+        recs = obs_trace.read_jsonl(path)
+    names = {r["name"] for r in recs}
+    overlap = [r for r in recs if r["name"] == "stream.prefetch_overlap"]
+    ok = bool(overlap and "stream.dispatch" in names
+              and "stream.stage" in names
+              and all("overlap_frac" in r for r in overlap))
+    rows.append(Row(
+        "obs/spans/stream_overlap", 0.0, float(ok),
+        note="derived = 1 when a streamed run exports stream.stage/"
+             "dispatch spans + the prefetch_overlap event; obs-floor=1"))
+
+    # -- serving request latency spans --
+    spec = api.Serving(draws=1, arch="qwen3-1.7b", smoke=True, batch=2,
+                       prompt_len=4, gen=3)
+    server = api.FSGLD.serve(spec)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "trace.jsonl")
+        obs_trace.configure(path)
+        try:
+            res = server.generate(gen=3, batch=2, prompt_len=4)
+        finally:
+            obs_trace.configure()
+        recs = obs_trace.read_jsonl(path)
+    names = {r["name"] for r in recs}
+    req = [r for r in recs if r["name"] == "serve.request"]
+    ok = bool(req and {"serve.prefill", "serve.decode"} <= names
+              and res.prefill_s > 0
+              and all("tokens_per_s" in r for r in req))
+    rows.append(Row(
+        "obs/spans/serve_latency", 0.0, float(ok),
+        note="derived = 1 when a served request exports serve.prefill/"
+             "decode spans + the serve.request event; obs-floor=1"))
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    _telemetry_rows(key, rows)
+    _span_rows(key, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    raise SystemExit(bench_main(run))

@@ -26,6 +26,10 @@ Gate semantics:
     device/host memory ceilings at 10^6 synthetic clients plus the
     streamed-vs-resident bitwise parity indicator — see
     ``check_client_bounds``;
+  * ``obs-floor=X`` / ``obs-ceiling=Y`` marks gate the observability
+    lane (benchmarks/bench_obs.py): 0/1 span-export indicators with
+    floor 1 (the telemetry overhead ratio rides the existing
+    ``speedup-floor=`` mark) — see ``check_obs_bounds``;
   * no baseline file            -> SKIP (exit 0) — the lane still runs
     and uploads its artifact, the gate just has nothing to compare to;
   * scale mismatch              -> SKIP (exit 0) — a SCALE=0.01 smoke run
@@ -72,6 +76,8 @@ FRONTIER_FLOOR_MARK = "frontier-floor="
 FRONTIER_CEIL_MARK = "frontier-ceiling="
 CLIENT_FLOOR_MARK = "client-floor="
 CLIENT_CEIL_MARK = "client-ceiling="
+OBS_FLOOR_MARK = "obs-floor="
+OBS_CEIL_MARK = "obs-ceiling="
 
 
 def _skip(reason: str) -> int:
@@ -170,6 +176,15 @@ def check_client_bounds(env: dict) -> list:
     return _check_absolute_bounds(env, CLIENT_FLOOR_MARK, CLIENT_CEIL_MARK)
 
 
+def check_obs_bounds(env: dict) -> list:
+    """Observability rows (benchmarks/bench_obs.py): 0/1 indicators
+    that the engine/server spans actually export (streamed prefetch
+    overlap events, serving prefill/decode latency) — floor 1. The
+    telemetry-overhead ratio row is gated by ``check_speedup_floors``
+    like every other same-run executor ratio."""
+    return _check_absolute_bounds(env, OBS_FLOOR_MARK, OBS_CEIL_MARK)
+
+
 def check_fed_bytes(env: dict) -> list:
     """The compressed-rounds lanes must REPORT their wire cost: every
     ``chains/fed/`` throughput row carries a finite positive
@@ -215,6 +230,7 @@ def main(argv=None) -> int:
     floor_failed += check_calibration_bounds(cur)
     floor_failed += check_frontier_bounds(cur)
     floor_failed += check_client_bounds(cur)
+    floor_failed += check_obs_bounds(cur)
     if floor_failed:
         print(f"absolute gate(s) violated: {floor_failed}",
               file=sys.stderr)

@@ -47,20 +47,30 @@ class Row:
         return fine
 
 
-def rows_as_json(rows: list, *, failures: int = 0) -> dict:
+def rows_as_json(rows: list, *, failures: int = 0,
+                 lane_seconds: Optional[dict] = None) -> dict:
     """The standard BENCH json envelope every benchmark emits (and CI
-    uploads as an artifact): schema tag + scale + rows + failure count."""
-    return {
+    uploads as an artifact): schema tag + scale + rows + failure count.
+    ``lane_seconds`` maps lane name -> wall-clock seconds that lane took
+    (additive column: absent in old baselines, ignored by consumers that
+    don't know it)."""
+    env = {
         "schema": "repro-bench-v1",
         "scale": SCALE,
         "failures": failures,
         "rows": [dataclasses.asdict(r) for r in rows],
     }
+    if lane_seconds is not None:
+        env["lane_seconds"] = {
+            k: round(float(v), 3) for k, v in lane_seconds.items()}
+    return env
 
 
-def write_json(rows: list, path: str, *, failures: int = 0) -> None:
+def write_json(rows: list, path: str, *, failures: int = 0,
+               lane_seconds: Optional[dict] = None) -> None:
     with open(path, "w") as f:
-        json.dump(rows_as_json(rows, failures=failures), f, indent=1)
+        json.dump(rows_as_json(rows, failures=failures,
+                               lane_seconds=lane_seconds), f, indent=1)
 
 
 def bench_main(run_fn) -> int:

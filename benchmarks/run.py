@@ -22,6 +22,10 @@
           clients, resident-K windows): steps/s + peak device/host
           memory with absolute client-floor=/client-ceiling= gates
           (check_regression.py; fixed sizes, SCALE ignored)
+  obs   — observability overhead: telemetry-on vs -off steps/s (gated
+          < 5% via speedup-floor=0.95) + 0/1 span-export indicators
+          (streamed prefetch overlap, serving latency) with absolute
+          obs-floor= gates (check_regression.py)
 
 REPRO_BENCH_SCALE=10 approaches paper-scale chain lengths;
 REPRO_BENCH_SCALE=0.01 is the CI bench-smoke setting.
@@ -42,9 +46,10 @@ import traceback
 def main(argv=None) -> int:
     from benchmarks import (bench_calibration, bench_chains,
                             bench_clients, bench_frontier, bench_kernel,
-                            f1_linreg, fig1_variance, fig2_3_gaussian,
-                            fig4_epsilon, fig5_metric_learning,
-                            remark1_alpha, table1_bnn)
+                            bench_obs, f1_linreg, fig1_variance,
+                            fig2_3_gaussian, fig4_epsilon,
+                            fig5_metric_learning, remark1_alpha,
+                            table1_bnn)
     from benchmarks.common import write_json
 
     modules = [
@@ -54,6 +59,7 @@ def main(argv=None) -> int:
         ("remark1", remark1_alpha), ("kernel", bench_kernel),
         ("chains", bench_chains), ("calib", bench_calibration),
         ("frontier", bench_frontier), ("clients", bench_clients),
+        ("obs", bench_obs),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
@@ -72,12 +78,14 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     all_rows = []
     failures = 0
+    lane_seconds = {}
     for name, mod in modules:
         t0 = time.time()
         try:
             rows = list(mod.run())
         except Exception:  # noqa: BLE001 - count and keep going
             failures += 1
+            lane_seconds[name] = time.time() - t0
             print(f"# {name} FAILED:", flush=True)
             traceback.print_exc()
             continue
@@ -89,9 +97,11 @@ def main(argv=None) -> int:
             print(f"# {name} FAILED: non-finite rows "
                   f"{[r.name for r in bad]}", flush=True)
         all_rows.extend(rows)
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        lane_seconds[name] = time.time() - t0
+        print(f"# {name} done in {lane_seconds[name]:.1f}s", flush=True)
     if args.json:
-        write_json(all_rows, args.json, failures=failures)
+        write_json(all_rows, args.json, failures=failures,
+                   lane_seconds=lane_seconds)
     if failures:
         print(f"# {failures} benchmark(s) FAILED", file=sys.stderr)
         return 1

@@ -53,6 +53,7 @@ from repro.core.federated import fit_bank_fisher, refresh_bank
 from repro.core.health import Recovery, RunHealth
 from repro.core.surrogate import SurrogateBank, fit_scalar_tree, make_bank
 from repro.fed import Federation, Stream, SyntheticClientSource, get_scenario
+from repro.obs import MetricsFrame, Telemetry
 from repro.fed.partition import (is_client_source,
                                  partition as partition_clients,
                                  resolve_shard_probs)
@@ -64,6 +65,7 @@ LogLikFn = Callable[[PyTree, PyTree], jax.Array]
 __all__ = [
     "Posterior", "SurrogateSpec", "Schedule", "Execution", "Federation",
     "Stream", "SyntheticClientSource", "Recovery", "RunHealth", "Serving",
+    "Telemetry", "MetricsFrame",
     "FSGLD", "fit_bank_local_sgld", "get_scenario",
 ]
 
@@ -181,6 +183,14 @@ class Execution:
       runs are bitwise identical to the resident path; requires
       ``Schedule(reassign='permutation')`` and does not compose with
       refresh_every / snapshots / recovery (the engine refuses loudly).
+    telemetry: a :class:`repro.obs.Telemetry` spec — per-round per-chain
+      metric rows (grad/drift/conducive norms, noise scale,
+      participation, wire bytes, health words) lowered into the scanned
+      round body; ``sample`` then additionally returns a
+      :class:`repro.obs.MetricsFrame`. Telemetry-off runs stay bitwise
+      identical, and telemetry probes draw from a salted key stream so
+      telemetry-on traces are bitwise identical too. Does not compose
+      with ``stream``.
     """
     mesh: Any = None
     executor: str = "auto"
@@ -191,6 +201,7 @@ class Execution:
     snapshot_path: Optional[str] = None
     resume: bool = False
     stream: Optional[Stream] = None
+    telemetry: Optional[Telemetry] = None
 
     def __post_init__(self):
         assert self.executor in _EXECUTORS, self.executor
@@ -446,7 +457,8 @@ class FSGLD:
                rounds: Optional[int] = None,
                n_chains: Optional[int] = None,
                federation: Any = None,
-               stream: Optional[Stream] = None):
+               stream: Optional[Stream] = None,
+               telemetry: Optional[Telemetry] = None):
         """Run the full schedule and return stacked samples with leading
         axes (n_chains, rounds * local_steps / thin, ...) — or the final
         chain states when ``Execution.collect`` is False.
@@ -469,6 +481,11 @@ class FSGLD:
         ``Execution.stream`` for this run (the streamed client axis:
         only ``resident`` clients on device, host prefetch overlapping
         the scan, bitwise identical to the resident path).
+
+        ``telemetry`` — a ``repro.obs.Telemetry`` — overrides
+        ``Execution.telemetry`` for this run; the return value then
+        gains a trailing ``repro.obs.MetricsFrame`` of per-round
+        per-chain metric rows.
         """
         if (self.cfg.method == "fsgld" and self.bank is None):
             self.fit(jax.random.fold_in(key, 0x5357), theta0)
@@ -493,7 +510,9 @@ class FSGLD:
             collect=exe.collect, federation=fed,
             recovery=exe.recovery, snapshot_every=exe.snapshot_every,
             snapshot_path=exe.snapshot_path, resume=exe.resume,
-            stream=stream if stream is not None else exe.stream)
+            stream=stream if stream is not None else exe.stream,
+            telemetry=(telemetry if telemetry is not None
+                       else exe.telemetry))
 
     # -- phase 3: serving the posterior ------------------------------------
 

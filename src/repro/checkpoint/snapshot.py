@@ -30,6 +30,7 @@ from typing import Any, Dict, Optional, Tuple
 
 from repro.checkpoint.np_checkpoint import (CorruptCheckpointError, restore,
                                             save)
+from repro.obs import trace as obs_trace
 
 PyTree = Any
 
@@ -58,13 +59,14 @@ def save_snapshot(snap_dir: str, payload: Dict[str, Any], *,
     """Atomically publish the scan carry after ``rounds_done`` rounds,
     then prune to the newest ``keep`` snapshots. Returns the snapshot
     path."""
-    os.makedirs(snap_dir, exist_ok=True)
-    final = os.path.join(snap_dir, _snap_dirname(rounds_done))
-    if os.path.exists(final):          # re-running the same segment
-        shutil.rmtree(final)
-    save(final, payload, step=rounds_done)
-    for r, path in list_snapshots(snap_dir)[:-keep]:
-        shutil.rmtree(path, ignore_errors=True)
+    with obs_trace.span("snapshot.save", round=int(rounds_done)):
+        os.makedirs(snap_dir, exist_ok=True)
+        final = os.path.join(snap_dir, _snap_dirname(rounds_done))
+        if os.path.exists(final):      # re-running the same segment
+            shutil.rmtree(final)
+        save(final, payload, step=rounds_done)
+        for r, path in list_snapshots(snap_dir)[:-keep]:
+            shutil.rmtree(path, ignore_errors=True)
     return final
 
 
@@ -74,11 +76,13 @@ def latest_snapshot(snap_dir: str, like: Dict[str, Any]
     (payload, rounds_done) — or (None, 0) when the directory holds none.
     Corrupt snapshots (torn writes) are skipped with a warning; a
     structural mismatch (wrong run config) raises."""
-    for rounds_done, path in reversed(list_snapshots(snap_dir)):
-        try:
-            payload, step, _ = restore(path, like)
-        except CorruptCheckpointError as e:
-            warnings.warn(f"skipping corrupt snapshot {path!r}: {e}")
-            continue
-        return payload, int(step)
+    with obs_trace.span("snapshot.restore", dir=snap_dir):
+        for rounds_done, path in reversed(list_snapshots(snap_dir)):
+            try:
+                payload, step, _ = restore(path, like)
+            except CorruptCheckpointError as e:
+                warnings.warn(f"skipping corrupt snapshot {path!r}: {e}")
+                obs_trace.event("snapshot.corrupt", path=path, error=str(e))
+                continue
+            return payload, int(step)
     return None, 0

@@ -92,6 +92,7 @@ pure-JAX FA-LD oracle lives in ``repro.rivals.fald``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -106,6 +107,8 @@ from repro.core.sampler import (LogLikFn, ShardScheme, chain_scales,
                                 make_step_fn)
 from repro.core.surrogate import SurrogateBank, make_bank
 from repro.kernels import ops as kops
+from repro.obs import trace as obs_trace
+from repro.obs.telemetry import TELEMETRY_PROBE_SALT, MetricsFrame
 from repro.sharding.rules import (chain_spec, fed_carry_spec,
                                   stream_window_spec)
 
@@ -658,7 +661,7 @@ class MeshChainEngine:
                   collect: bool, collect_every: int,
                   layout: Optional[kops.PackedChains], federation=None,
                   recovery=None, chaos=None,
-                  stream: Optional[int] = None):
+                  stream: Optional[int] = None, telemetry=None):
         """jit(shard_map(scan-over-rounds)) executor: ONE dispatch runs
         ``num_rounds`` communication rounds — reassignment, round key
         splitting, local updates, and thinned trace collection all live
@@ -701,15 +704,25 @@ class MeshChainEngine:
         round bodies; ``chaos`` (duck-typed ``repro.testing.ChaosSpec``)
         lowers the static fault plan. Both are per-chain ``where`` masks:
         a fault-free run with them enabled is bitwise identical to one
-        without, and a faulted chain never touches its neighbours."""
+        without, and a faulted chain never touches its neighbours.
+
+        ``telemetry`` (``repro.obs.Telemetry``, or None) lowers per-round
+        per-chain metric rows into the same round bodies as EXTRA scan
+        outputs; the executor then returns a sixth value — a dict of
+        (C, num_rounds) fp32 metric arrays. Probe metrics draw their
+        minibatch from ``fold_in(k_run, TELEMETRY_PROBE_SALT)`` (the
+        health-detector isolation pattern), so telemetry never perturbs
+        the sampling stream: a telemetry-on run's chains and trace are
+        bitwise identical to a telemetry-off run's."""
         if n_total is None:
             n_total = n_chains
         fed = (federation if federation is not None
                and not federation.engine_identity else None)
         chaos = chaos if chaos is not None and chaos.active else None
         rec = recovery
+        tel = telemetry
         cache_key = (num_rounds, n_chains, n_total, reassign, collect,
-                     collect_every, layout, fed, rec, chaos, stream)
+                     collect_every, layout, fed, rec, chaos, stream, tel)
         if cache_key in self._executors:
             return self._executors[cache_key]
 
@@ -825,6 +838,26 @@ class MeshChainEngine:
                                                self.minibatch)
         log_lik = self.log_lik_fn
 
+        # telemetry lowering: every metric is either closed-form over
+        # values the round body already carries, or a PROBE evaluation on
+        # a fold_in-salted key — nothing consumes the sampling stream,
+        # and none of it needs the absolute round index (use_r unchanged:
+        # the identity fast path keeps its xs=None scan with telemetry on)
+        if tel is not None:
+            scheme = self.scheme
+            minibatch = self.minibatch
+            if tel.probe:
+                tel_sample = _make_batch_sampler(cfg, scheme, minibatch)
+            h = cfg_dyn.step_size
+            if self.dynamics == "sghmc":
+                # naive-Euler SGHMC noise term: sqrt(2 a tau) sqrt(h) xi
+                # (core/sghmc.py)
+                tel_noise = float(np.sqrt(
+                    2.0 * self.sghmc.friction * self.sghmc.temperature
+                    * h))
+            else:
+                tel_noise = float(np.sqrt(h * cfg_dyn.temperature))
+
         def block(key, chains, shard_data, bank_rt, r0, fedc, hw0,
                   stream_ids=None, sp_rt=None):
             # streamed client axis: shard_data/bank_rt hold only the
@@ -861,6 +894,71 @@ class MeshChainEngine:
                 rt_bank = bank_rt
                 state = chains
             blk = jax.lax.axis_index("data") * per
+
+            # ---- telemetry metric rows --------------------------------
+            if tel is not None:
+                th_tpl = chains[0] if hmc else chains
+                # flat parameter count — the wire-byte estimates' dim
+                tel_dim = sum(int(np.prod(l.shape[1:]))
+                              for l in jax.tree.leaves(th_tpl))
+                tel_sizes_rt = None if sp_rt is None else sp_rt[0]
+
+            def tel_sq(tree):
+                """Per-chain sum of squares over all leaves, (per,) f32."""
+                s = None
+                for l in jax.tree.leaves(tree):
+                    v = jnp.sum(jnp.square(
+                        l.astype(jnp.float32)).reshape((per, -1)), axis=1)
+                    s = v if s is None else s + v
+                return s
+
+            def tel_metrics(k_run, state, pre_th, sids, exch_f, nbytes,
+                            hw):
+                """One round's metric rows, each (per,) fp32 — computed
+                AFTER the round's masking (straggler/health), so frozen
+                chains show zero drift and quarantined ones their word.
+                ``sids`` are resident-local; ``exch_f``/``nbytes`` come
+                from the caller (fed bodies gate them on the exchange
+                mask, the identity body exchanges every round)."""
+                th, _ = get_view(state)
+                th_sq = tel_sq(th)
+                m = {"theta_norm": jnp.sqrt(th_sq),
+                     "drift_norm": jnp.sqrt(tel_sq(jax.tree.map(
+                         lambda a, b: a.astype(jnp.float32)
+                         - b.astype(jnp.float32), th, pre_th))),
+                     "noise_scale": jnp.full((per,), tel_noise,
+                                             jnp.float32)}
+                if bank_rt is not None and cfg.method == "fsgld":
+                    _, f_s = chain_scales(cfg, scheme, sids, minibatch,
+                                          sp_rt)
+                    from repro.core.conducive import \
+                        conducive_gradient_from_bank
+                    g_c = jax.vmap(
+                        lambda t, s, f: conducive_gradient_from_bank(
+                            t, bank_rt, s, f, cfg.alpha))(th, sids, f_s)
+                    m["conducive_norm"] = jnp.sqrt(tel_sq(g_c))
+                else:
+                    m["conducive_norm"] = jnp.zeros((per,), jnp.float32)
+                m["participation"] = exch_f
+                m["bytes_per_round"] = nbytes
+                m["health_word"] = (hw[0].astype(jnp.float32)
+                                    if rec is not None
+                                    else jnp.zeros((per,), jnp.float32))
+                if tel.probe:
+                    kp = jax.lax.dynamic_slice_in_dim(
+                        pad_tail(jax.random.split(jax.random.fold_in(
+                            k_run, TELEMETRY_PROBE_SALT), n_chains)),
+                        blk, per)
+
+                    def probe_one(t, k, s):
+                        batch = tel_sample(k, s, shard_data, tel_sizes_rt)
+                        return jax.value_and_grad(log_lik)(t, batch)
+
+                    lp, g_p = jax.vmap(probe_one)(th, kp, sids)
+                    m["grad_norm"] = jnp.sqrt(tel_sq(g_p))
+                    m["log_post"] = lp.astype(jnp.float32) \
+                        - 0.5 * cfg.prior_precision * th_sq
+                return {n: m[n] for n in tel.names}
 
             def propose_sids(k_assign):
                 """This round's chain->client draw — the same derivation
@@ -1012,7 +1110,7 @@ class MeshChainEngine:
                 key, k_assign, k_run = jax.random.split(key, 3)
                 sids = propose_sids(k_assign)
                 run_sids = to_local(sids)
-                if rec is not None:
+                if rec is not None or tel is not None:
                     pre_th, pre_mom = get_view(state)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
@@ -1025,6 +1123,13 @@ class MeshChainEngine:
                         hw)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
                      if collect else None)
+                if tel is not None:
+                    # the identity path exchanges (reassigns) every
+                    # round: participation 1, exact wire bytes both legs
+                    y = (y, tel_metrics(
+                        k_run, state, pre_th, run_sids,
+                        jnp.ones((per,), jnp.float32),
+                        jnp.full((per,), 8.0 * tel_dim, jnp.float32), hw))
                 return (key, state, hw), y
 
             def fed_round_body(carry, r):
@@ -1147,7 +1252,7 @@ class MeshChainEngine:
                     state, cst = jax.lax.cond(
                         comm, do_exchange, lambda op: op, (state, cst))
                 run_sids = to_local(sids)
-                if use_strag or rec is not None:
+                if use_strag or rec is not None or tel is not None:
                     pre_th, pre_mom = get_view(state)
                 keys_blk = jax.lax.dynamic_slice_in_dim(
                     pad_tail(jax.random.split(k_run, n_chains)), blk, per)
@@ -1183,6 +1288,15 @@ class MeshChainEngine:
                         hw)
                 y = (jax.tree.map(lambda t: t[:, ::collect_every], trace)
                      if collect else None)
+                if tel is not None:
+                    # exch already folds in the comm schedule, the
+                    # participation draw, and quarantine masking — the
+                    # chains that actually moved bytes this round
+                    exch_f = exch.astype(jnp.float32)
+                    y = (y, tel_metrics(
+                        k_run, state, pre_th, run_sids, exch_f,
+                        exch_f * float(comp.bytes_per_round(tel_dim)),
+                        hw))
                 return (key, state, sids, cst, hw), y
 
             rounds = (r0 + jnp.arange(num_rounds)) if use_r else None
@@ -1199,6 +1313,13 @@ class MeshChainEngine:
                     fed_round_body,
                     (key, state, fedc[0], fedc[1], hw0), rounds)
                 fedc = (f_sids, f_cst)
+            tmet = None
+            if tel is not None:
+                # scan stacked each (per,) metric row to (R, per);
+                # chain-major (per, R) matches the trace's output layout
+                traces, tmet = traces
+                tmet = {k: jnp.swapaxes(v, 0, 1)
+                        for k, v in tmet.items()}
             if layout is not None:
                 chains_out = ((state[2], layout.unpack(state[1])) if hmc
                               else state[1])
@@ -1212,6 +1333,8 @@ class MeshChainEngine:
                         (t.shape[1], num_rounds * t.shape[2])
                         + t.shape[3:]),
                     traces)
+            if tel is not None:
+                return chains_out, traces, key, fedc, hw0, tmet
             return chains_out, traces, key, fedc, hw0
 
         cspec = self._chain_spec()
@@ -1223,11 +1346,15 @@ class MeshChainEngine:
             # shard stack they index into
             w_spec = stream_window_spec()
             in_specs = in_specs + (w_spec, (w_spec,) * 3)
+        out_specs = (cspec, cspec if collect else None, P(), fc_spec,
+                     h_spec)
+        if tel is not None:
+            # metric rows are chain-major (C, R): sharded like the trace
+            out_specs = out_specs + (cspec,)
         mapped = shard_map(
             block, mesh=self.mesh,
             in_specs=in_specs,
-            out_specs=(cspec, cspec if collect else None, P(), fc_spec,
-                       h_spec),
+            out_specs=out_specs,
             check_rep=False)
         fn = jax.jit(mapped, donate_argnums=(1,))
         self._executors[cache_key] = fn
@@ -1259,7 +1386,7 @@ class MeshChainEngine:
             federation=None, recovery=None, chaos=None,
             snapshot_every: Optional[int] = None,
             snapshot_path: Optional[str] = None, resume: bool = False,
-            stream=None):
+            stream=None, telemetry=None):
         """Same contract (and same RNG stream) as the legacy
         ``FederatedSampler.run``: returns stacked samples with leading axes
         (n_chains, num_rounds * T_local / collect_every, ...), or the final
@@ -1301,6 +1428,18 @@ class MeshChainEngine:
         from the newest valid snapshot in ``snapshot_path`` (falling
         back to a fresh run when none exists) with traces bitwise
         identical to an uninterrupted run.
+
+        ``telemetry`` (a ``repro.obs.Telemetry``) lowers per-round
+        per-chain metric rows into the scanned round body and APPENDS a
+        ``repro.obs.MetricsFrame`` to the return value — the result
+        tuple is built in order (result[, health][, frame]).
+        ``telemetry.log_every`` segments the run (bitwise losslessly,
+        via the same carry threading snapshots use) and emits an
+        ``engine.progress`` trace event per segment. The frame covers
+        the rounds executed by THIS call (a resumed run's frame starts
+        at its resume point). Telemetry-off runs are bitwise identical
+        to telemetry-on runs — and to runs on code that predates the
+        telemetry layer.
         """
         d_size = self.mesh.shape["data"]
         n_total = n_chains + (-n_chains) % d_size
@@ -1337,6 +1476,12 @@ class MeshChainEngine:
             if recovery is not None or chaos is not None:
                 raise NotImplementedError(
                     "stream= does not compose with recovery/chaos yet")
+            if telemetry is not None:
+                raise NotImplementedError(
+                    "stream= does not compose with telemetry= yet: the "
+                    "metric rows are not part of the window plan (the "
+                    "host-side prefetch/overlap SPANS still fire — see "
+                    "repro.obs.trace)")
             if stream.resident > self.cfg.num_shards:
                 raise ValueError(
                     f"Stream(resident={stream.resident}) exceeds the "
@@ -1353,6 +1498,13 @@ class MeshChainEngine:
         if (snapshot_every or resume) and not snapshot_path:
             raise ValueError(
                 "snapshot_every/resume need a snapshot_path directory")
+        if telemetry is not None and telemetry.log_every and \
+                (snapshot_every or refresh_every):
+            raise NotImplementedError(
+                "Telemetry.log_every does not compose with "
+                "snapshot_every/refresh_every: pick ONE segmentation "
+                "driver (progress events already fire at snapshot/"
+                "refresh segment boundaries)")
         if snapshot_path and refresh_every:
             raise NotImplementedError(
                 "snapshots do not compose with adaptive refresh yet: the "
@@ -1499,8 +1651,12 @@ class MeshChainEngine:
                     out = [jax.tree.map(jnp.asarray, payload["trace"])]
 
         refresh_mode = bool(refresh_every) and self.cfg.method == "fsgld"
+        tel_seg = (telemetry.log_every if telemetry is not None
+                   else None)
         seg_len = (snapshot_every if snapshot_every
-                   else (refresh_every if refresh_mode else num_rounds))
+                   else (refresh_every if refresh_mode
+                         else (tel_seg or num_rounds)))
+        tel_rows = []
         r0 = r_start
         while r0 < num_rounds:
             if refresh_mode and r0 > 0:
@@ -1515,19 +1671,42 @@ class MeshChainEngine:
                         f"banks only (got {getattr(self.bank, 'kind', None)!r})")
                 center = jax.tree.map(
                     lambda t: t[:n_chains].mean(0), chains)
-                bank_rt = self.refresh(center)
+                with obs_trace.span("engine.refresh", round=int(r0)):
+                    bank_rt = self.refresh(center)
             seg = min(seg_len, num_rounds - r0)
             execute = self._executor(
                 num_rounds=seg, n_chains=n_chains, n_total=n_total,
                 reassign=reassign, collect=collect,
                 collect_every=collect_every, layout=layout,
-                federation=fed, recovery=recovery, chaos=chaos)
-            chains, trace, key, fedc, hw = execute(
-                key, chains, self._data(), bank_rt,
-                jnp.asarray(r0, jnp.int32), fedc, hw)
+                federation=fed, recovery=recovery, chaos=chaos,
+                telemetry=telemetry)
+            t_seg = time.monotonic()
+            with obs_trace.span("engine.segment", r0=int(r0),
+                                rounds=int(seg)):
+                outs = execute(
+                    key, chains, self._data(), bank_rt,
+                    jnp.asarray(r0, jnp.int32), fedc, hw)
+            if telemetry is not None:
+                chains, trace, key, fedc, hw, mrow = outs
+                # the device_get syncs the segment — one host sync per
+                # segment boundary, where snapshot writers sync anyway
+                row = {k: np.asarray(jax.device_get(v))[:n_chains]
+                       for k, v in mrow.items()}
+                tel_rows.append(row)
+            else:
+                chains, trace, key, fedc, hw = outs
             if collect:
                 out.append(trace)
             r0 += seg
+            if telemetry is not None and obs_trace.enabled():
+                dt = time.monotonic() - t_seg
+                steps = seg * self.cfg.local_updates * n_chains
+                obs_trace.event(
+                    "engine.progress", round=int(r0),
+                    rounds=int(num_rounds), seconds=round(dt, 6),
+                    steps_per_s=round(steps / max(dt, 1e-9), 3),
+                    **{k: round(float(v.mean()), 6)
+                       for k, v in row.items()})
             if snapshot_every:
                 from repro.checkpoint.snapshot import save_snapshot
                 trace_now = None
@@ -1543,8 +1722,17 @@ class MeshChainEngine:
             out = [jax.tree.map(take, t) for t in out]
             res = (out[0] if len(out) == 1 else
                    jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *out))
+        frame = None
+        if telemetry is not None:
+            # per-segment (C, seg) rows -> one round-major (R, C) frame
+            frame = MetricsFrame(
+                {k: np.concatenate([r[k] for r in tel_rows],
+                                   axis=1).T.astype(np.float32)
+                 for k in tel_rows[0]}) if tel_rows else MetricsFrame(
+                {n: np.zeros((0, n_chains), np.float32)
+                 for n in telemetry.names})
         if recovery is None:
-            return res
+            return res if frame is None else (res, frame)
         lp_ref = None
         if recovery.use_detector:
             # surface the reduced per-chain reference (the same
@@ -1558,7 +1746,7 @@ class MeshChainEngine:
             word=jax.device_get(hw[0])[:n_chains],
             policy=recovery.policy,
             lp_ref=lp_ref)
-        return res, health
+        return (res, health) if frame is None else (res, health, frame)
 
     # -- streamed client axis ---------------------------------------------
 
@@ -1619,7 +1807,22 @@ class MeshChainEngine:
 
         hw = None
         out = []
-        staged = stage(windows[0])
+        t_run = time.monotonic()
+
+        def timed_stage(idx):
+            """Stage window ``idx`` under a span; returns (operands,
+            host seconds spent staging) — after the FIRST window every
+            stage call runs while the device executes the previous
+            window's scan, so its span duration IS the prefetch work
+            hidden behind compute (``Stream(prefetch=False)`` serializes
+            and the same spans become the A/B reference)."""
+            t0 = time.monotonic()
+            with obs_trace.span("stream.stage", window=idx):
+                s = stage(windows[idx])
+            return s, time.monotonic() - t0
+
+        staged, first_stage_s = timed_stage(0)
+        stage_s = first_stage_s
         for i, win in enumerate(windows):
             execute = self._executor(
                 num_rounds=win.length, n_chains=n_chains,
@@ -1627,18 +1830,31 @@ class MeshChainEngine:
                 collect_every=collect_every, layout=layout,
                 federation=federation, stream=stream.resident)
             data_k, bank_k, ids_dev, sp_dev = staged
-            chains, trace, key, fedc, hw = execute(
-                key, chains, data_k, bank_k,
-                jnp.asarray(win.r0, jnp.int32), fedc, hw, ids_dev,
-                sp_dev)
+            with obs_trace.span("stream.dispatch", window=i,
+                                r0=int(win.r0), rounds=int(win.length)):
+                chains, trace, key, fedc, hw = execute(
+                    key, chains, data_k, bank_k,
+                    jnp.asarray(win.r0, jnp.int32), fedc, hw, ids_dev,
+                    sp_dev)
             if i + 1 < len(windows):
                 if not stream.prefetch:
                     jax.block_until_ready(chains)   # no overlap: A/B ref
-                staged = stage(windows[i + 1])
+                staged, ds = timed_stage(i + 1)
+                stage_s += ds
             if collect:
                 out.append(trace)
             if self.stream_hook is not None:
                 self.stream_hook(i, win)
+        if obs_trace.enabled():
+            wall = time.monotonic() - t_run
+            hidden = stage_s - first_stage_s  # post-dispatch stages only
+            obs_trace.event(
+                "stream.prefetch_overlap", windows=len(windows),
+                prefetch=bool(stream.prefetch),
+                stage_s=round(stage_s, 6), wall_s=round(wall, 6),
+                overlap_frac=round(
+                    (hidden / max(wall, 1e-9))
+                    if stream.prefetch else 0.0, 6))
         if not collect:
             return jax.tree.map(take, chains)
         out = [jax.tree.map(take, t) for t in out]

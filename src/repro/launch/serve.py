@@ -14,6 +14,12 @@ flags into a spec and prints the served stream.
 times, hot-swapping fresh draws in between requests (the streaming
 chain->server path). The legacy ``--ckpt`` flag still works (warns once)
 and serves the single checkpoint as a one-draw bank.
+
+Progress goes through the structured event log (``repro.obs.trace``):
+hot-swaps, refresh retries/backoffs (with timestamps + attempt counts),
+and per-request prefill/decode spans are echoed as one-line events and —
+with ``--log-jsonl PATH`` — appended to a trace JSONL for later
+inspection.
 """
 from __future__ import annotations
 
@@ -21,12 +27,12 @@ import argparse
 import warnings
 
 from repro.api import FSGLD, Serving
+from repro.obs import trace as obs_trace
 
 _ckpt_warned = False
 
 
 def main(argv=None):
-    global _ckpt_warned
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--smoke", action="store_true")
@@ -44,8 +50,19 @@ def main(argv=None):
                     help="DEPRECATED: single checkpoint; use --bank "
                          "(served as a one-draw legacy bank)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-jsonl", default=None,
+                    help="also append structured trace events/spans "
+                         "(refreshes, prefill/decode) to this JSONL file")
     args = ap.parse_args(argv)
+    obs_trace.configure(args.log_jsonl, echo=True)
+    try:
+        return _serve(args)
+    finally:
+        obs_trace.configure()  # don't leak the echo tracer to callers
 
+
+def _serve(args):
+    global _ckpt_warned
     bank = args.bank
     if args.ckpt:
         if bank is not None:
@@ -77,11 +94,11 @@ def main(argv=None):
             # and anything it still raises is logged, not fatal
             try:
                 if server.refresh():
-                    print(f"hot-swapped bank: now {server.n_draws} "
-                          "draw(s)")
+                    obs_trace.event("serve.hot_swap", request=req,
+                                    n_draws=server.n_draws)
             except Exception as e:  # noqa: BLE001
-                print(f"bank refresh failed ({e}); serving previous "
-                      f"{server.n_draws}-draw ensemble", flush=True)
+                obs_trace.event("serve.refresh_error", request=req,
+                                error=str(e), n_draws=server.n_draws)
         res = server.generate(gen=args.gen, batch=args.batch,
                               prompt_len=args.prompt_len)
         for t in range(res.tokens.shape[1]):

@@ -30,6 +30,7 @@ data-axis shard_map.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -41,6 +42,8 @@ from repro.configs import get_config, get_smoke_config
 from repro.data import token_shards
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_params, log_lik_fn
+from repro.obs import trace as obs_trace
+from repro.obs import write_metrics_jsonl, write_prometheus
 
 
 def _sample_into_bank(fsgld, key, params, cfg, args, federation):
@@ -170,9 +173,36 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true",
                     help="continue from the newest valid snapshot in "
                          "--snapshot-dir (fresh run when none exists)")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="observability: run with in-scan telemetry "
+                         "(repro.obs.Telemetry — bitwise identical to a "
+                         "telemetry-off run) and write metrics.jsonl, "
+                         "metrics.prom (Prometheus textfile), and "
+                         "trace.jsonl (host spans/events) into this "
+                         "directory")
+    ap.add_argument("--log-every", type=int, default=None,
+                    help="periodic progress: echo one engine.progress "
+                         "line (round counter, steps/s, per-metric "
+                         "means) every N rounds during the run — "
+                         "segmentation is bitwise-lossless")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    obs = args.metrics_dir is not None or args.log_every is not None
+    if obs and args.draw_bank:
+        raise SystemExit(
+            "--metrics-dir/--log-every instrument the facade's one "
+            "engine dispatch; --draw-bank runs its own segment loop — "
+            "pick one")
+    if obs and args.resident is not None:
+        raise SystemExit(
+            "--metrics-dir/--log-every (in-scan telemetry) do not "
+            "compose with --resident (streamed clients) yet — drop one")
+    if args.log_every is not None and args.snapshot_every:
+        raise SystemExit(
+            "--log-every and --snapshot-every both segment the run — "
+            "pick ONE segmentation driver (snapshots already log a "
+            "span per segment)")
     if (args.snapshot_every or args.resume) and not args.snapshot_dir:
         raise SystemExit("--snapshot-every/--resume need --snapshot-dir")
     if (args.snapshot_every or args.resume) and args.draw_bank:
@@ -201,6 +231,23 @@ def main(argv=None):
             "--method dsgld or fald, or pass a prefit bank through the "
             "api facade")
 
+    telemetry = api.Telemetry(log_every=args.log_every) if obs else None
+    if args.metrics_dir is not None:
+        os.makedirs(args.metrics_dir, exist_ok=True)
+        obs_trace.configure(
+            os.path.join(args.metrics_dir, "trace.jsonl"),
+            echo=args.log_every is not None)
+    elif args.log_every is not None:
+        obs_trace.configure(echo=True)
+    try:
+        return _train(args, telemetry)
+    finally:
+        obs_trace.configure()  # don't leak the tracer to callers
+
+
+def _train(args, telemetry):
+    obs = telemetry is not None
+    n_clients = args.clients if args.clients is not None else args.num_shards
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh() if args.smoke \
         else make_production_mesh(multi_pod=args.multi_pod)
@@ -263,7 +310,8 @@ def main(argv=None):
             snapshot_every=args.snapshot_every,
             snapshot_path=args.snapshot_dir, resume=args.resume,
             stream=(api.Stream(resident=args.resident)
-                    if args.resident is not None else None)),
+                    if args.resident is not None else None),
+            telemetry=telemetry),
         federation=federation)
 
     # ---- phase 1: surrogates (once, before sampling) ----
@@ -281,10 +329,21 @@ def main(argv=None):
                                    federation)
     else:
         finals = fsgld.sample(k_run, params)
+        frame = None
+        if obs:
+            finals, frame = finals
         if args.kernel == "sghmc":
             # collect=False sghmc returns (theta, momentum) chain-state
             # pairs; the ll probe (and the checkpoint) wants parameters
             finals = finals[0]
+        if args.metrics_dir is not None:
+            mj = os.path.join(args.metrics_dir, "metrics.jsonl")
+            mp = os.path.join(args.metrics_dir, "metrics.prom")
+            write_metrics_jsonl(frame, mj)
+            write_prometheus(frame, mp)
+            print(f"metrics -> {mj} + {mp} "
+                  f"({frame.rounds} rounds x {frame.n_chains} chains x "
+                  f"{len(frame.names)} metrics)")
     dt = time.time() - t0
     probe_rows = (shards.rows(np.arange(1)) if args.clients is not None
                   else shards)

@@ -1,0 +1,29 @@
+"""Observability layer: in-scan sampler telemetry + host-side tracing.
+
+Two complementary views of a run:
+
+  * ``Telemetry`` / ``MetricsFrame`` (``repro.obs.telemetry``) — DEVICE
+    facts: per-round per-chain metric rows lowered into the engine's
+    scanned round body as extra scan outputs (grad/drift/conducive
+    norms, noise scale, participation, wire bytes, health words).
+    Telemetry-off runs are bitwise identical to today; telemetry-on
+    probes draw from a ``fold_in``-salted key stream, so they are too.
+  * ``trace`` (``repro.obs.trace``) — HOST facts: monotonic-clock spans
+    and structured events (JSONL sink, optional ``jax.profiler``
+    annotations) around engine segments, streamed-window prefetch,
+    snapshot I/O, draw-bank refresh, and serving prefill/decode.
+
+``exporters`` surfaces frames as JSONL and Prometheus textfiles for the
+``train --metrics-dir`` / ``serve`` CLIs and the CI smoke gates.
+"""
+from repro.obs import trace
+from repro.obs.exporters import (parse_prometheus, read_metrics_jsonl,
+                                 write_metrics_jsonl, write_prometheus)
+from repro.obs.telemetry import (TELEMETRY_PROBE_SALT, MetricsFrame,
+                                 Telemetry)
+
+__all__ = [
+    "Telemetry", "MetricsFrame", "TELEMETRY_PROBE_SALT", "trace",
+    "write_metrics_jsonl", "read_metrics_jsonl", "write_prometheus",
+    "parse_prometheus",
+]

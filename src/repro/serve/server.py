@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro import checkpoint
 from repro.models import (encoder_forward, ensemble_decode_step,
                           init_params)
+from repro.obs import trace as obs_trace
 from repro.models.model import ACT_DTYPE
 from repro.serve.ensemble import ensemble_prefill, predictive_stats
 from repro.sharding import rules
@@ -132,24 +133,35 @@ class EnsembleServer:
             k = avail  # sampler still filling the bank: serve what exists
         stacked = metas = None
         last_exc: Optional[Exception] = None
-        for attempt in range(retries + 1):
-            try:
-                stacked, metas = checkpoint.load_bank(
-                    self.bank, self._like, k=k, expect_arch=self.cfg.name)
-                last_exc = None
-                break
-            except (checkpoint.CorruptCheckpointError, OSError) as e:
-                last_exc = e
-                if attempt < retries:
-                    time.sleep(backoff_s * (2 ** attempt))
-            except ValueError as e:  # refusal — retrying cannot help
-                last_exc = e
-                break
+        with obs_trace.span("server.refresh", bank=self.bank, avail=avail):
+            for attempt in range(retries + 1):
+                try:
+                    stacked, metas = checkpoint.load_bank(
+                        self.bank, self._like, k=k,
+                        expect_arch=self.cfg.name)
+                    last_exc = None
+                    break
+                except (checkpoint.CorruptCheckpointError, OSError) as e:
+                    last_exc = e
+                    obs_trace.event(
+                        "server.refresh_retry", attempt=attempt,
+                        retries=retries, error=str(e),
+                        backoff_s=(backoff_s * (2 ** attempt)
+                                   if attempt < retries else 0.0))
+                    if attempt < retries:
+                        time.sleep(backoff_s * (2 ** attempt))
+                except ValueError as e:  # refusal — retrying cannot help
+                    last_exc = e
+                    obs_trace.event("server.refresh_refused", error=str(e))
+                    break
         if last_exc is not None:
             if self.draws is not None:
                 warnings.warn(
                     f"draw-bank refresh failed ({last_exc}); keeping the "
                     f"previous {self.n_draws}-draw ensemble live")
+                obs_trace.event(
+                    "server.refresh_failed", error=str(last_exc),
+                    kept_draws=self.n_draws)
                 return False
             raise last_exc
         self.draws = self._place(stacked)
@@ -190,13 +202,15 @@ class EnsembleServer:
         total = S + gen
         enc_embeds, enc_out = self._encoder_inputs(key, B)
 
-        t0 = time.time()
-        logits0, caches = ensemble_prefill(
-            self.draws, cfg, prompt, total, enc_embeds=enc_embeds)
-        # token 0: the anchor's logits as a one-draw ensemble (the shared
-        # prefill means there is no fan-out to aggregate yet)
-        stats = [predictive_stats(logits0[None])]
-        prefill_s = time.time() - t0
+        with obs_trace.span("serve.prefill", batch=B, prompt_len=S,
+                            n_draws=self.n_draws):
+            t0 = time.time()
+            logits0, caches = ensemble_prefill(
+                self.draws, cfg, prompt, total, enc_embeds=enc_embeds)
+            # token 0: the anchor's logits as a one-draw ensemble (the
+            # shared prefill means there is no fan-out to aggregate yet)
+            stats = [predictive_stats(logits0[None])]
+            prefill_s = time.time() - t0
 
         if enc_out is not None:
             step = jax.jit(lambda d, c, t, p: ensemble_decode_step(
@@ -204,14 +218,23 @@ class EnsembleServer:
         else:
             step = jax.jit(lambda d, c, t, p: ensemble_decode_step(
                 d, cfg, c, t, p))
-        t0 = time.time()
-        tok = stats[0].token[:, None]
-        for t in range(S, total - 1):
-            pos = jnp.full((B,), t, jnp.int32)
-            logits_k, caches = step(self.draws, caches, tok, pos)
-            stats.append(predictive_stats(logits_k))
-            tok = stats[-1].token[:, None]
-        decode_s = time.time() - t0
+        with obs_trace.span("serve.decode", batch=B, gen=gen,
+                            n_draws=self.n_draws):
+            t0 = time.time()
+            tok = stats[0].token[:, None]
+            for t in range(S, total - 1):
+                pos = jnp.full((B,), t, jnp.int32)
+                logits_k, caches = step(self.draws, caches, tok, pos)
+                stats.append(predictive_stats(logits_k))
+                tok = stats[-1].token[:, None]
+            decode_s = time.time() - t0
+        if obs_trace.enabled():
+            obs_trace.event(
+                "serve.request", batch=B, prompt_len=S, gen=gen,
+                n_draws=self.n_draws,
+                prefill_s=round(prefill_s, 6), decode_s=round(decode_s, 6),
+                tokens_per_s=round(
+                    B * max(gen - 1, 1) / max(decode_s, 1e-9), 3))
 
         col = lambda f: jnp.stack(  # noqa: E731
             [f(s) for s in stats], axis=1)

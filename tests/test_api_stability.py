@@ -33,8 +33,9 @@ def _params(obj):
 # (name, has_default) pairs catch silently-added required arguments.
 EXPECTED_ALL = ("Posterior", "SurrogateSpec", "Schedule", "Execution",
                 "Federation", "Stream", "SyntheticClientSource",
-                "Recovery", "RunHealth", "Serving", "FSGLD",
-                "fit_bank_local_sgld", "get_scenario")
+                "Recovery", "RunHealth", "Serving", "Telemetry",
+                "MetricsFrame", "FSGLD", "fit_bank_local_sgld",
+                "get_scenario")
 
 EXPECTED_SIGNATURES = {
     "Posterior": (("log_lik", False), ("prior_precision", True),
@@ -47,7 +48,10 @@ EXPECTED_SIGNATURES = {
     "Execution": (("mesh", True), ("executor", True), ("dtype", True),
                   ("collect", True), ("recovery", True),
                   ("snapshot_every", True), ("snapshot_path", True),
-                  ("resume", True), ("stream", True)),
+                  ("resume", True), ("stream", True),
+                  ("telemetry", True)),
+    "Telemetry": (("probe", True), ("log_every", True)),
+    "MetricsFrame": (("metrics", False),),
     "Federation": (("partition", True), ("schedule", True),
                    ("compression", True)),
     "Stream": (("resident", False), ("window", True), ("prefetch", True)),
@@ -68,7 +72,7 @@ EXPECTED_SIGNATURES = {
                 ("mesh", True), ("collect", True)),
     "FSGLD.sample": (("key", False), ("theta0", False), ("rounds", True),
                      ("n_chains", True), ("federation", True),
-                     ("stream", True)),
+                     ("stream", True), ("telemetry", True)),
     "FSGLD.fit": (("key", False), ("theta0", False)),
     "FSGLD.serve": (("spec", False), ("bank", True), ("draws", True),
                     ("seed", True)),
@@ -158,3 +162,13 @@ def test_readme_client_scale_quickstart_runs():
     src = _readme_block("Client scale-out")
     assert "Stream(" in src and "SyntheticClientSource(" in src
     exec(compile(src, "README.md:<client-scale-quickstart>", "exec"), {})
+
+
+def test_readme_observability_quickstart_runs(tmp_path):
+    """Exec the README '## Observability' quickstart verbatim: in-scan
+    telemetry -> MetricsFrame + exporters, telemetry-off bitwise
+    identity. Its asserts are the test."""
+    src = _readme_block("Observability")
+    assert "Telemetry(" in src and "write_metrics_jsonl(" in src
+    src = src.replace("/tmp/obs-demo", str(tmp_path / "obs-demo"))
+    exec(compile(src, "README.md:<observability-quickstart>", "exec"), {})

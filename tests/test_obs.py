@@ -1,0 +1,180 @@
+"""Host-side observability primitives: ``repro.obs.trace`` spans/events
+and the ``MetricsFrame`` exporters.
+
+Contracts:
+
+  * span nesting is recorded (depth + parent from a thread-local stack)
+    and the JSONL sink round-trips every record;
+  * a disabled tracer is a true no-op — shared null span, no file, no
+    output — so instrumented code paths cost nothing by default;
+  * ``configure()`` swaps the process tracer and back;
+  * MetricsFrame JSONL round-trips bitwise at fp32, the Prometheus
+    textfile parses back to floats, concat/summary/last_round behave.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (MetricsFrame, Telemetry, parse_prometheus,
+                       read_metrics_jsonl, trace, write_metrics_jsonl,
+                       write_prometheus)
+
+
+# ---------------------------------------------------------------------------
+# tracing spans + events
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    tr = trace.Tracer(path)
+    with tr.span("outer", run="x"):
+        time.sleep(0.01)
+        with tr.span("inner", step=1):
+            pass
+        tr.event("tick", round=3)
+    tr.close()
+    recs = trace.read_jsonl(path)
+    by = {}
+    for r in recs:
+        by.setdefault(r["name"], []).append(r)
+    # spans are emitted at EXIT: inner closes before outer
+    assert [r["name"] for r in recs] == ["inner", "tick", "outer"]
+    inner, tick, outer = by["inner"][0], by["tick"][0], by["outer"][0]
+    assert outer["type"] == "span" and outer["depth"] == 0
+    assert outer["parent"] is None and outer["run"] == "x"
+    assert inner["depth"] == 1 and inner["parent"] == "outer"
+    assert inner["step"] == 1
+    assert tick["type"] == "event" and tick["parent"] == "outer"
+    assert tick["round"] == 3 and "dur_s" not in tick
+    # monotonic durations: the outer span contains the sleep
+    assert outer["dur_s"] >= 0.01 > inner["dur_s"] >= 0.0
+    assert outer["ts"] <= inner["ts"]
+
+
+def test_disabled_tracer_is_noop(tmp_path, capsys):
+    tr = trace.Tracer()
+    assert not tr.enabled
+    s1 = tr.span("a")
+    s2 = tr.span("b", k=1)
+    assert s1 is s2  # the shared null span: zero allocation per call
+    with s1:
+        tr.event("nothing", x=1)
+    assert capsys.readouterr().out == ""
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_echo_tracer_prints_compact_lines(capsys):
+    tr = trace.Tracer(echo=True)
+    assert tr.enabled
+    tr.event("engine.progress", round=4, steps_per_s=123.0)
+    out = capsys.readouterr().out
+    assert "engine.progress" in out
+    assert "round=4" in out and "steps_per_s=123.0" in out
+    assert out.startswith("[")  # [HH:MM:SS] prefix
+
+
+def test_configure_swaps_module_tracer(tmp_path):
+    path = str(tmp_path / "mod.jsonl")
+    assert not trace.enabled()
+    try:
+        trace.configure(path)
+        assert trace.enabled()
+        with trace.span("seg", i=0):
+            trace.event("e")
+    finally:
+        trace.configure()
+    assert not trace.enabled()
+    names = [r["name"] for r in trace.read_jsonl(path)]
+    assert names == ["e", "seg"]
+    # back to disabled: nothing more is written
+    trace.event("after")
+    assert [r["name"] for r in trace.read_jsonl(path)] == ["e", "seg"]
+
+
+def test_span_exception_still_emits_and_pops(tmp_path):
+    path = str(tmp_path / "exc.jsonl")
+    tr = trace.Tracer(path)
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    with tr.span("next"):
+        pass
+    tr.close()
+    recs = trace.read_jsonl(path)
+    assert [r["name"] for r in recs] == ["boom", "next"]
+    assert all(r["depth"] == 0 for r in recs)  # stack popped on error
+
+
+# ---------------------------------------------------------------------------
+# MetricsFrame + exporters
+# ---------------------------------------------------------------------------
+
+def _frame(rounds=3, chains=2, names=("a_norm", "b_rate")):
+    rng = np.random.RandomState(0)
+    return MetricsFrame({
+        n: rng.rand(rounds, chains).astype(np.float32) for n in names})
+
+
+def test_metrics_jsonl_roundtrip_bitwise(tmp_path):
+    fr = _frame()
+    path = str(tmp_path / "m.jsonl")
+    write_metrics_jsonl(fr, path)
+    back = read_metrics_jsonl(path)
+    assert back.names == fr.names
+    for n in fr.names:
+        np.testing.assert_array_equal(back.metrics[n], fr.metrics[n])
+        assert back.metrics[n].dtype == np.float32
+    head = json.loads(open(path).readline())
+    assert head["schema"] == "repro-metrics-v1"
+    assert head["rounds"] == 3 and head["chains"] == 2
+
+
+def test_prometheus_export_parses(tmp_path):
+    fr = _frame()
+    path = str(tmp_path / "m.prom")
+    write_prometheus(fr, path)
+    got = parse_prometheus(path)
+    assert got["fsgld_rounds_total"] == fr.rounds
+    for n in fr.names:
+        for c in range(fr.n_chains):
+            key = f'fsgld_{n}{{chain="{c}"}}'
+            assert got[key] == pytest.approx(
+                float(fr.metrics[n][-1, c]), rel=1e-6)
+        assert got[f"fsgld_{n}_mean"] == pytest.approx(
+            float(fr.metrics[n].mean()), rel=1e-6)
+    # textfile format: HELP/TYPE comment pairs present
+    text = open(path).read()
+    assert "# HELP fsgld_a_norm" in text and "# TYPE fsgld_a_norm gauge" \
+        in text
+
+
+def test_frame_summary_last_round_concat():
+    fr = _frame(rounds=4)
+    assert fr.rounds == 4 and fr.n_chains == 2
+    s = fr.summary()
+    assert set(s) == set(fr.names)
+    assert s["a_norm"] == pytest.approx(float(fr.metrics["a_norm"].mean()))
+    np.testing.assert_array_equal(fr.last_round()["b_rate"],
+                                  fr.metrics["b_rate"][-1])
+    cat = MetricsFrame.concat([_frame(rounds=2), _frame(rounds=3)])
+    assert cat.rounds == 5 and cat.names == fr.names
+
+
+def test_frame_shape_validation():
+    with pytest.raises(AssertionError):
+        MetricsFrame({})
+    with pytest.raises(AssertionError):
+        MetricsFrame({"a": np.zeros((2, 2), np.float32),
+                      "b": np.zeros((3, 2), np.float32)})
+
+
+def test_telemetry_spec_names_sorted_and_validated():
+    full, lean = Telemetry(), Telemetry(probe=False)
+    assert full.names == tuple(sorted(full.names))
+    assert set(full.names) - set(lean.names) == {"grad_norm", "log_post"}
+    assert "bytes_per_round" in lean.names
+    with pytest.raises(ValueError, match="log_every"):
+        Telemetry(log_every=0)
+    assert hash(Telemetry()) == hash(Telemetry())  # executor cache key

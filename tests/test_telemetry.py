@@ -1,0 +1,374 @@
+"""CI ``obs`` lane: in-scan sampler telemetry (PR 10).
+
+Contracts (the observability acceptance criteria):
+
+  * BITWISE NON-INTERFERENCE — a telemetry-ON run returns the SAME
+    samples, bit for bit, as a telemetry-OFF run on every executor
+    (vmap / per_leaf / packed): metric rows are extra scan outputs and
+    the probe draws from ``fold_in(k_run, TELEMETRY_PROBE_SALT)``,
+    never from the sampling stream;
+  * IN-SCAN LOWERING — with telemetry on, the executor jaxpr is still
+    ONE rounds-scan, one pallas_call on the packed path, and no pad
+    primitive in any scan body;
+  * METRIC GOLDENS — on a tiny Gaussian the exported rows equal
+    hand-computed values: grad_norm/log_post from a replayed probe-key
+    stream, drift/theta norms from the trace, wire bytes from
+    ``Compression.bytes_per_round``, participation from the comm
+    schedule, noise_scale from the dynamics' closed form;
+  * SEGMENTATION — ``Telemetry(log_every=k)`` splits the run into
+    segments bitwise-identically to a one-shot run, with equal frames,
+    and emits ``engine.progress`` events through the tracer;
+  * composition: collect=False, sghmc, fald, recovery all return their
+    usual results with the frame appended; stream x telemetry and
+    double segmentation are refused loudly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import (MeshChainEngine, make_bank,
+                        analytic_gaussian_likelihood_surrogate)
+from repro.core.conducive import conducive_gradient_from_bank
+from repro.core.engine import _perm_sids_slice
+from repro.fed import SCENARIOS
+from repro.fed.schedule import comm_mask
+from repro.obs import TELEMETRY_PROBE_SALT, MetricsFrame, Telemetry
+from repro.obs import trace as obs_trace
+
+EXECUTORS = ("vmap", "per_leaf", "packed")
+
+
+def log_lik(theta, batch):
+    return -0.5 * jnp.sum((batch["x"] - theta) ** 2)
+
+
+def _problem(key, S=5, n=40, d=3):
+    mus = jax.random.uniform(key, (S, d), minval=-4, maxval=4)
+    x = mus[:, None, :] + jax.random.normal(jax.random.fold_in(key, 1),
+                                            (S, n, d))
+    mu_s, prec_s = jax.vmap(analytic_gaussian_likelihood_surrogate)(x)
+    return {"x": x}, make_bank(mu_s, prec_s, "diag")
+
+
+def _facade(data, bank, *, executor="vmap", method="fsgld", kernel="sgld",
+            telemetry=None, recovery=None, collect=True, rounds=4,
+            local=5, n_chains=4, minibatch=8, step=1e-4,
+            reassign="permutation", thin=1, federation=None):
+    return api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data,
+        minibatch=minibatch, step_size=step, method=method, kernel=kernel,
+        surrogate=(api.SurrogateSpec(kind="diag", bank=bank)
+                   if method == "fsgld"
+                   else api.SurrogateSpec(kind="none")),
+        schedule=api.Schedule(rounds=rounds, local_steps=local,
+                              n_chains=n_chains, reassign=reassign,
+                              thin=thin),
+        execution=api.Execution(executor=executor, collect=collect,
+                                recovery=recovery, telemetry=telemetry),
+        federation=federation)
+
+
+def _assert_bitwise(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# bitwise non-interference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_telemetry_off_is_bitwise_identical(executor):
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(7), jnp.zeros(3)
+    ref = _facade(data, bank, executor=executor).sample(key, t0)
+    got, frame = _facade(data, bank, executor=executor,
+                         telemetry=Telemetry()).sample(key, t0)
+    _assert_bitwise(ref, got)
+    assert isinstance(frame, MetricsFrame)
+    assert frame.rounds == 4 and frame.n_chains == 4
+    assert frame.names == Telemetry().names
+    assert all(np.isfinite(a).all() for a in frame.metrics.values())
+
+
+def test_probe_off_is_bitwise_identical_too():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(7), jnp.zeros(3)
+    ref = _facade(data, bank).sample(key, t0)
+    got, frame = _facade(data, bank).sample(
+        key, t0, telemetry=Telemetry(probe=False))
+    _assert_bitwise(ref, got)
+    assert "grad_norm" not in frame.names
+
+
+def test_federated_telemetry_is_bitwise_identical():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(3), jnp.zeros(3)
+    ref = _facade(data, bank, federation="topk-1%").sample(key, t0)
+    got, _ = _facade(data, bank, federation="topk-1%",
+                     telemetry=Telemetry()).sample(key, t0)
+    _assert_bitwise(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# in-scan lowering (the jaxpr gate, telemetry enabled)
+# ---------------------------------------------------------------------------
+
+def _all_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(v):
+    if hasattr(v, "jaxpr"):           # ClosedJaxpr
+        return [v.jaxpr]
+    if hasattr(v, "eqns"):            # raw Jaxpr
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def test_telemetry_keeps_one_scan_one_pallas_no_pad():
+    """Packed executor + scheduled compressed federation + telemetry:
+    the metric rows ride the existing rounds-scan as extra outputs — no
+    second scan, no extra pallas dispatch, no pad."""
+    from repro.configs.base import SamplerConfig
+    from repro.fed import CommSchedule, Compression, Federation
+
+    data, bank = _problem(jax.random.PRNGKey(2))
+    cfg = SamplerConfig(method="fsgld", step_size=1e-4, num_shards=5,
+                        local_updates=4, prior_precision=1.0)
+    eng = MeshChainEngine(log_lik, cfg, data, minibatch=6, bank=bank,
+                          use_kernel=True)
+    fed = Federation(
+        schedule=CommSchedule(delay=3, participation=0.5,
+                              straggler_prob=0.1),
+        compression=Compression(kind="topk", frac=0.1))
+    num_rounds = 6
+    layout = eng._layout_for(jnp.zeros(3))
+    execute = eng._executor(num_rounds=num_rounds, n_chains=4,
+                            reassign="categorical", collect=True,
+                            collect_every=2, layout=layout, federation=fed,
+                            telemetry=Telemetry())
+    chains = jnp.zeros((4, 3))
+    sids0 = jnp.zeros((4,), jnp.int32)
+    ref0 = jnp.zeros((4, 3), jnp.float32)
+    jaxpr = jax.make_jaxpr(execute)(
+        jax.random.PRNGKey(0), chains, data, bank,
+        jnp.asarray(0, jnp.int32), (sids0, (ref0, ref0)), None)
+
+    eqns = list(_all_eqns(jaxpr.jaxpr))
+    pallas = [e for e in eqns if "pallas" in e.primitive.name]
+    assert len(pallas) == 1, [e.primitive.name for e in pallas]
+    round_scans = [e for e in eqns if e.primitive.name == "scan"
+                   and e.params["length"] == num_rounds]
+    assert len(round_scans) == 1, "rounds loop not a single scan"
+    for s in (e for e in eqns if e.primitive.name == "scan"):
+        body = [e.primitive.name
+                for e in _all_eqns(s.params["jaxpr"].jaxpr)]
+        assert "pad" not in body, "pad op inside a scan body"
+        assert body.count("pallas_call") <= 1
+
+
+# ---------------------------------------------------------------------------
+# metric goldens (tiny Gaussian, hand-computed)
+# ---------------------------------------------------------------------------
+
+def test_probe_metrics_match_replayed_key_stream():
+    """grad_norm / log_post equal a host replay of the salted probe-key
+    stream at the traced round-end states: the probe consumes
+    ``fold_in(k_run, TELEMETRY_PROBE_SALT)``, draws its minibatch with
+    the engine's randint sampler, and evaluates the likelihood grad."""
+    d, n, m, C, R, T = 3, 16, 4, 2, 3, 2
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, n, d))
+    data = {"x": x}
+    key, t0 = jax.random.PRNGKey(9), jnp.zeros(d)
+    f = _facade(data, None, method="dsgld", rounds=R, local=T,
+                n_chains=C, minibatch=m)
+    trace_ref = f.sample(key, t0)
+    trace, frame = f.sample(key, t0, telemetry=Telemetry())
+    _assert_bitwise(trace_ref, trace)
+    trace = np.asarray(trace)                       # (C, R*T, d)
+
+    k = key
+    for r in range(R):
+        k, k_assign, k_run = jax.random.split(k, 3)
+        kp = jax.random.split(
+            jax.random.fold_in(k_run, TELEMETRY_PROBE_SALT), C)
+        start = trace[:, r * T - 1] if r else np.zeros((C, d))
+        end = trace[:, r * T + T - 1]
+        for c in range(C):
+            idx = jax.random.randint(kp[c], (m,), 0, n)
+            batch = np.asarray(x[0])[np.asarray(idx)]
+            th = end[c]
+            grad = (batch - th).sum(0)
+            ll = -0.5 * ((batch - th) ** 2).sum()
+            np.testing.assert_allclose(
+                frame.metrics["grad_norm"][r, c],
+                np.linalg.norm(grad), rtol=1e-5)
+            np.testing.assert_allclose(
+                frame.metrics["log_post"][r, c],
+                ll - 0.5 * (th ** 2).sum(), rtol=1e-5)
+            np.testing.assert_allclose(
+                frame.metrics["theta_norm"][r, c],
+                np.linalg.norm(th), rtol=1e-5)
+            np.testing.assert_allclose(
+                frame.metrics["drift_norm"][r, c],
+                np.linalg.norm(end[c] - start[c]), rtol=1e-4)
+    # identity path: every round exchanges the exact payload
+    np.testing.assert_array_equal(frame.metrics["participation"], 1.0)
+    np.testing.assert_array_equal(frame.metrics["bytes_per_round"],
+                                  8.0 * d)
+    np.testing.assert_array_equal(frame.metrics["health_word"], 0.0)
+    np.testing.assert_array_equal(frame.metrics["conducive_norm"], 0.0)
+
+
+def test_conducive_norm_matches_bank_evaluation():
+    """conducive_norm is ||g_s(theta)|| (paper Eq. 5) at the round-end
+    state against the live bank — replayed with the engine's own
+    permutation slice for the chain->client assignment."""
+    d, C, R, T = 3, 2, 3, 2
+    data, bank = _problem(jax.random.PRNGKey(4), S=2, n=12, d=d)
+    key, t0 = jax.random.PRNGKey(11), jnp.zeros(d)
+    f = _facade(data, bank, rounds=R, local=T, n_chains=C, minibatch=4)
+    trace, frame = f.sample(key, t0, telemetry=Telemetry())
+    trace = np.asarray(trace)
+    alpha = f.engine.cfg.alpha
+
+    k = key
+    for r in range(R):
+        k, k_assign, k_run = jax.random.split(k, 3)
+        sids = np.asarray(_perm_sids_slice(k_assign, 2, 0, C, C))
+        end = trace[:, r * T + T - 1]
+        for c in range(C):
+            g = conducive_gradient_from_bank(
+                jnp.asarray(end[c]), bank, int(sids[c]), 0.5, alpha)
+            np.testing.assert_allclose(
+                frame.metrics["conducive_norm"][r, c],
+                np.linalg.norm(np.asarray(g)), rtol=1e-4)
+
+
+def test_bytes_and_participation_follow_the_scenario():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(5), jnp.zeros(3)
+    # topk-1% on d=3: one kept coordinate up (8B), dense broadcast down
+    comp = SCENARIOS["topk-1%"].compression
+    _, frame = _facade(data, bank, federation="topk-1%").sample(
+        key, t0, telemetry=Telemetry(probe=False))
+    np.testing.assert_array_equal(frame.metrics["participation"], 1.0)
+    np.testing.assert_array_equal(frame.metrics["bytes_per_round"],
+                                  float(comp.bytes_per_round(3)))
+    assert comp.bytes_per_round(3) == 20  # 8*1 up + 4*3 down
+
+    # delayed-5x over 10 rounds: rounds 0 and 5 exchange, others idle
+    sched = SCENARIOS["delayed-5x"].schedule
+    _, fr = _facade(data, bank, federation="delayed-5x", rounds=10).sample(
+        key, t0, telemetry=Telemetry(probe=False))
+    mask = np.array([bool(comm_mask(sched, r)) for r in range(10)],
+                    np.float32)
+    np.testing.assert_array_equal(
+        fr.metrics["participation"], np.broadcast_to(mask[:, None], (10, 4)))
+    np.testing.assert_array_equal(
+        fr.metrics["bytes_per_round"],
+        np.broadcast_to((mask * 24.0)[:, None], (10, 4)))
+
+
+def test_noise_scale_closed_forms():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(2), jnp.zeros(3)
+    h = 1e-4
+    cases = [
+        # (facade kwargs, expected std of one local step's injected noise)
+        (dict(), np.sqrt(h)),                          # sgld: sqrt(h*tau)
+        (dict(method="fald", n_chains=4),
+         np.sqrt(h * 4)),                              # fald: tau x C
+        (dict(kernel="sghmc"),
+         np.sqrt(2 * 0.1 * h)),                        # sqrt(2*a*tau*h)
+    ]
+    for kw, want in cases:
+        out = _facade(data, bank, step=h, **kw).sample(
+            key, t0, telemetry=Telemetry(probe=False))
+        frame = out[-1]
+        np.testing.assert_allclose(frame.metrics["noise_scale"], want,
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# segmentation, composition, refusals
+# ---------------------------------------------------------------------------
+
+def test_log_every_segmentation_is_bitwise_lossless():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    key, t0 = jax.random.PRNGKey(7), jnp.zeros(3)
+    one, f_one = _facade(data, bank, rounds=5).sample(
+        key, t0, telemetry=Telemetry())
+    seg, f_seg = _facade(data, bank, rounds=5).sample(
+        key, t0, telemetry=Telemetry(log_every=2))
+    _assert_bitwise(one, seg)
+    assert f_one.names == f_seg.names
+    for n in f_one.names:
+        np.testing.assert_array_equal(f_one.metrics[n], f_seg.metrics[n])
+
+
+def test_engine_progress_events_are_emitted(tmp_path):
+    data, bank = _problem(jax.random.PRNGKey(0))
+    path = str(tmp_path / "trace.jsonl")
+    obs_trace.configure(path)
+    try:
+        _facade(data, bank, rounds=4).sample(
+            jax.random.PRNGKey(7), jnp.zeros(3),
+            telemetry=Telemetry(log_every=2))
+    finally:
+        obs_trace.configure()
+    recs = obs_trace.read_jsonl(path)
+    prog = [r for r in recs if r["name"] == "engine.progress"]
+    assert [p["round"] for p in prog] == [2, 4]
+    assert all(p["rounds"] == 4 and p["steps_per_s"] > 0 for p in prog)
+    assert all("grad_norm" in p and "bytes_per_round" in p for p in prog)
+    segs = [r for r in recs if r["name"] == "engine.segment"]
+    assert len(segs) == 2 and all(s["dur_s"] > 0 for s in segs)
+
+
+def test_collect_false_returns_finals_and_frame():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    finals, frame = _facade(data, bank, collect=False).sample(
+        jax.random.PRNGKey(7), jnp.zeros(3), telemetry=Telemetry())
+    assert finals.shape == (4, 3)
+    assert frame.rounds == 4
+
+
+def test_recovery_returns_result_health_frame():
+    data, bank = _problem(jax.random.PRNGKey(0))
+    trace, health, frame = _facade(
+        data, bank, kernel="sghmc", recovery=api.Recovery()).sample(
+        jax.random.PRNGKey(7), jnp.zeros(3), telemetry=Telemetry())
+    assert isinstance(health, api.RunHealth)
+    np.testing.assert_array_equal(frame.metrics["health_word"], 0.0)
+    np.testing.assert_allclose(frame.metrics["noise_scale"],
+                               np.sqrt(2 * 0.1 * 1e-4), rtol=1e-6)
+
+
+def test_stream_and_double_segmentation_are_refused():
+    data, bank = _problem(jax.random.PRNGKey(0), S=12, n=24)
+    f = api.FSGLD(
+        api.Posterior(log_lik, prior_precision=1.0), data, minibatch=8,
+        step_size=1e-4,
+        surrogate=api.SurrogateSpec(kind="diag", bank=bank),
+        schedule=api.Schedule(rounds=4, local_steps=3, n_chains=4,
+                              reassign="permutation"),
+        execution=api.Execution(stream=api.Stream(resident=8, window=2),
+                                telemetry=Telemetry()))
+    with pytest.raises(NotImplementedError, match="telemetry"):
+        f.sample(jax.random.PRNGKey(0), jnp.zeros(3))
+
+    g = _facade(data, bank)
+    g.execution = api.Execution(snapshot_every=2, snapshot_path="/tmp/x",
+                                telemetry=Telemetry(log_every=2))
+    with pytest.raises(NotImplementedError, match="segmentation"):
+        g.sample(jax.random.PRNGKey(0), jnp.zeros(3))
